@@ -1,0 +1,42 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import statistics
+from typing import Dict, List, Sequence
+
+
+def pct(xs: Sequence[float], p: float) -> float:
+    xs = sorted(xs)
+    i = min(len(xs) - 1, max(0, int(p * len(xs))))
+    return xs[i]
+
+
+def cdf_points(xs: Sequence[float], n: int = 20) -> List[tuple]:
+    xs = sorted(xs)
+    out = []
+    for k in range(n + 1):
+        q = k / n
+        out.append((q, xs[min(len(xs) - 1, int(q * len(xs)))]))
+    return out
+
+
+def summarize(xs: Sequence[float]) -> Dict[str, float]:
+    return {
+        "median": statistics.median(xs),
+        "mean": statistics.fmean(xs),
+        "p90": pct(xs, 0.90),
+        "p99": pct(xs, 0.99),
+        "p999": pct(xs, 0.999),
+    }
+
+
+def emit(rows: List[Dict], title: str) -> None:
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    print(f"\n== {title} ==")
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(
+            f"{v:.2f}" if isinstance(v, float) else str(v) for v in r.values()
+        ))

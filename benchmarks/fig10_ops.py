@@ -1,0 +1,53 @@
+"""Figure 10: median latency by Redis command type (SET / HMSET / INCR)
+with and without CURP witnesses — CURP applies to every update type whose
+commutativity is key-determined (§5.5)."""
+from __future__ import annotations
+
+import random
+
+from repro.core.client import ClientSession
+from repro.core.types import Op
+from repro.sim import run_scenario
+
+from .common import emit
+from .fig8_redis import REDIS
+
+
+def op_factory_for(kind: str, seed: int = 0):
+    rng = random.Random(seed)
+
+    def factory(session: ClientSession) -> Op:
+        key = f"u{rng.randrange(2_000_000)}"
+        if kind == "SET":
+            return session.op_set(key, "x" * 100)
+        if kind == "HMSET":
+            return session.op_hmset(key, [("f", "x" * 100)])
+        if kind == "INCR":
+            return session.op_incr(key)
+        raise ValueError(kind)
+
+    return factory
+
+
+def main(n_ops: int = 800) -> dict:
+    rows = []
+    derived = {}
+    for kind in ("SET", "HMSET", "INCR"):
+        for label, mode, f in [("nondurable", "unreplicated", 0),
+                               ("curp_1w", "curp", 1),
+                               ("curp_2w", "curp", 2)]:
+            r = run_scenario(mode=mode, f=f, n_clients=1, n_ops=n_ops,
+                             params=REDIS,
+                             op_factory=op_factory_for(kind), seed=31)
+            import statistics
+
+            m = statistics.median(r.update_latencies)
+            rows.append({"cmd": kind, "series": label, "median_us": m})
+            derived[f"{kind}_{label}"] = m
+    emit(rows, "fig10: latency by command type (us)")
+    print("derived:", derived)
+    return derived
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Figure 5: CCDF of write latency — CURP f in {1,2,3} vs original
+(synchronous) RAMCloud vs unreplicated.  Paper: 13.8 -> 7.3 us median at
+f=3; +0.4 us vs unreplicated."""
+from __future__ import annotations
+
+from repro.sim import UniformWriteWorkload, run_scenario
+
+from .common import cdf_points, emit, summarize
+
+
+def main(n_ops: int = 4000) -> dict:
+    rows = []
+    series = {}
+    for label, mode, f in [
+        ("unreplicated", "unreplicated", 0),
+        ("curp_f1", "curp", 1),
+        ("curp_f2", "curp", 2),
+        ("curp_f3", "curp", 3),
+        ("original_sync_f3", "sync", 3),
+    ]:
+        r = run_scenario(mode=mode, f=f, n_clients=1, n_ops=n_ops,
+                         op_factory=UniformWriteWorkload(seed=1), seed=42)
+        s = summarize(r.update_latencies)
+        series[label] = r.update_latencies
+        rows.append({"series": label, **s,
+                     "fast_frac": r.fast_fraction})
+    emit(rows, "fig5: write latency (us), 1 client")
+    med_curp = rows[3]["median"]
+    med_sync = rows[4]["median"]
+    med_unrep = rows[0]["median"]
+    derived = {
+        "median_curp_f3_us": med_curp,
+        "median_sync_us": med_sync,
+        "median_unrep_us": med_unrep,
+        "speedup_vs_sync": med_sync / med_curp,
+        "overhead_vs_unrep_us": med_curp - med_unrep,
+        "paper_speedup": 13.8 / 7.3,
+        "paper_overhead_us": 0.4,
+    }
+    print("derived:", derived)
+    return derived
+
+
+if __name__ == "__main__":
+    main()

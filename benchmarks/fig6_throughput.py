@@ -1,0 +1,39 @@
+"""Figure 6: single-master write throughput vs number of clients.
+Paper: CURP ~4x original RAMCloud (728k vs ~180k writes/s); ~6% below
+unreplicated; ~10% below unsafe async."""
+from __future__ import annotations
+
+from repro.sim import UniformWriteWorkload, run_scenario
+
+from .common import emit
+
+
+def main(n_ops: int = 2500) -> dict:
+    rows = []
+    peak = {}
+    for mode, f in [("unreplicated", 0), ("async", 3), ("curp", 3),
+                    ("sync", 3)]:
+        best = 0.0
+        for n_clients in (1, 2, 4, 8, 16, 24):
+            r = run_scenario(mode=mode, f=f, n_clients=n_clients,
+                             n_ops=n_ops,
+                             op_factory=UniformWriteWorkload(seed=1), seed=7)
+            rows.append({"mode": mode, "clients": n_clients,
+                         "kops_per_s": r.throughput_ops_per_sec / 1e3})
+            best = max(best, r.throughput_ops_per_sec)
+        peak[mode] = best
+    emit(rows, "fig6: throughput vs clients (kops/s)")
+    derived = {
+        "curp_peak_kops": peak["curp"] / 1e3,
+        "curp_vs_sync": peak["curp"] / peak["sync"],
+        "curp_vs_async": peak["curp"] / peak["async"],
+        "curp_vs_unrep": peak["curp"] / peak["unreplicated"],
+        "paper_curp_vs_sync": 4.0,
+        "paper_curp_kops": 728.0,
+    }
+    print("derived:", derived)
+    return derived
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Roofline table: renders artifacts/dryrun/*.json into the EXPERIMENTS.md
+§Roofline markdown + a benchmarks CSV."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+ARCH_ORDER = [
+    "smollm-360m", "llama3.2-1b", "deepseek-coder-33b", "nemotron-4-340b",
+    "qwen3-moe-30b-a3b", "qwen2-moe-a2.7b", "hubert-xlarge", "qwen2-vl-2b",
+    "mamba2-130m", "hymba-1.5b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str = "16x16", tag: Optional[str] = None) -> List[Dict]:
+    suffix = mesh if tag is None else f"{mesh}+{tag}"
+    out = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            p = ART / f"{arch}__{shape}__{suffix}.json"
+            if p.exists():
+                out.append(json.loads(p.read_text()))
+    return out
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:.1f}"
+
+
+def markdown_table(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | MODEL_FLOPs | useful/HLO | roofline | fits 16GiB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | SKIP: "
+                f"{r['skip_reason']} | — | — | — | — |"
+            )
+            continue
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | ERROR | | | | | | | |"
+            )
+            continue
+        t = r["terms"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(t['compute_s'])} | "
+            f"{fmt_ms(t['memory_s'])} | {fmt_ms(t['collective_s'])} | "
+            f"{t['dominant']} | {r['model_flops_total']:.2e} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.2f} | "
+            f"{'yes' if r['memory']['fits_16GiB'] else 'NO'} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> dict:
+    recs = load("16x16")
+    print(markdown_table(recs))
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    derived = {
+        "cells_ok": len(ok),
+        "cells_skipped": len(skipped),
+        "cells_error": len(recs) - len(ok) - len(skipped),
+        "mean_roofline": (
+            sum(r["roofline_fraction"] for r in ok) / max(len(ok), 1)
+        ),
+        "fits_all": all(r["memory"]["fits_16GiB"] for r in ok),
+    }
+    print("derived:", derived)
+    return derived
+
+
+if __name__ == "__main__":
+    main()

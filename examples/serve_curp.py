@@ -1,0 +1,66 @@
+"""END-TO-END DRIVER: serve a small LM with batched requests through the
+CURP-replicated runtime, crash the serving master mid-flight, recover, and
+verify the token streams continue exactly where they left off.
+
+This is the paper's kind of system (a low-latency replicated store) hosting
+the framework's kind of workload (batched LM decoding): session commits ride
+CURP's 1-RTT fast path because sessions are disjoint keys.
+
+    PYTHONPATH=src python examples/serve_curp.py
+"""
+import time
+
+from repro.configs import ARCHS
+from repro.models.config import reduced
+from repro.serving import CurpServeDriver, ServeConfig
+
+
+def main() -> None:
+    cfg = reduced(ARCHS["llama3.2-1b"])
+    print(f"model: {cfg.name} ({cfg.n_params()/1e6:.1f}M params, "
+          f"{cfg.n_layers}L d={cfg.d_model})")
+    sc = ServeConfig(max_batch=8, max_seq=96, f=3, sync_batch=50)
+    driver = CurpServeDriver(cfg, sc, seed=7)
+
+    print("\n== submit a batch of requests ==")
+    prompts = {
+        "alice": [11, 42, 7],
+        "bob": [3, 3, 8, 1],
+        "carol": [99],
+        "dave": [5, 6, 7, 8, 9],
+    }
+    for sid, p in prompts.items():
+        driver.submit(sid, p)
+        print(f"  session {sid}: prompt {p}")
+
+    print("\n== batched decoding (12 tokens each) ==")
+    t0 = time.time()
+    driver.generate(12)
+    dt = time.time() - t0
+    for sid, s in driver.sessions.items():
+        print(f"  {sid}: {s.tokens}")
+    print(f"  {driver.tokens_served} tokens in {dt:.2f}s "
+          f"({driver.tokens_served/dt:.0f} tok/s on CPU)")
+    print(f"  CURP commits: {driver.store.fast_commits} fast (1 RTT), "
+          f"{driver.store.slow_commits} slow")
+
+    snapshot = {sid: list(s.tokens) for sid, s in driver.sessions.items()}
+
+    print("\n== CRASH the serving master ==")
+    rep = driver.crash_and_recover()
+    print(f"  recovered {rep['recovered_sessions']} sessions "
+          f"(witness replayed {rep['replayed_ops']} unsynced commits); "
+          f"KV caches rebuilt by re-prefill")
+    for sid in snapshot:
+        assert driver.sessions[sid].tokens == snapshot[sid]
+
+    print("\n== continue decoding after recovery ==")
+    driver.generate(6)
+    for sid, s in driver.sessions.items():
+        cont = s.tokens[len(snapshot[sid]):]
+        print(f"  {sid}: +{cont}")
+    print("\nOK — serving survived a master crash with zero lost tokens")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""CURP-FT: fault-tolerant training with 1-RTT durable steps.
+
+Trains a reduced model twice: once uninterrupted, once with a kill at an
+arbitrary step followed by CURP recovery (newest backup + witness-journal
+replay).  The two runs end BIT-EXACT — the witness journal (~100 B/step)
+plus batched backup syncs give the durability of per-step checkpoints at a
+tiny fraction of the bandwidth.
+
+    PYTHONPATH=src python examples/train_ft.py
+"""
+import shutil
+import time
+
+from repro.configs import ARCHS
+from repro.data.pipeline import DataConfig
+from repro.ft import FTConfig, FaultTolerantTrainer
+from repro.models.config import reduced
+
+
+def main() -> None:
+    cfg = reduced(ARCHS["smollm-360m"])
+    data = DataConfig(batch=4, seq=64)
+    steps, crash_at = 30, 23
+    print(f"model: {cfg.name} ({cfg.n_params()/1e6:.1f}M params); "
+          f"{steps} steps, backup sync every 10, crash at {crash_at}")
+
+    shutil.rmtree("/tmp/curp_ft_ref", ignore_errors=True)
+    shutil.rmtree("/tmp/curp_ft_crash", ignore_errors=True)
+
+    print("\n== run A: uninterrupted ==")
+    a = FaultTolerantTrainer(cfg, data,
+                             FTConfig(f=3, sync_every=10,
+                                      workdir="/tmp/curp_ft_ref"))
+    t0 = time.time()
+    a.train(steps)
+    print(f"  loss: {a.metrics_log[0]['loss']:.3f} -> "
+          f"{a.metrics_log[-1]['loss']:.3f}  ({time.time()-t0:.1f}s)")
+
+    print(f"\n== run B: kill the master at step {crash_at} ==")
+    b = FaultTolerantTrainer(cfg, data,
+                             FTConfig(f=3, sync_every=10,
+                                      workdir="/tmp/curp_ft_crash"))
+    b.train(crash_at)
+    b.crash()
+    print("  master killed: params/optimizer state GONE from memory")
+    rep = b.recover()
+    print(f"  recovery: restored backup @step {rep['restored_step']}, "
+          f"replayed {rep['replayed']} journaled steps "
+          f"-> resumed at {rep['resumed_at']}")
+    b.train(steps - b.step)
+
+    da, db = a.params_digest(), b.params_digest()
+    print(f"\n  run A digest: {da[:16]}…\n  run B digest: {db[:16]}…")
+    assert da == db
+    print("\nOK — BIT-EXACT recovery: crash+replay == uninterrupted run")
+
+
+if __name__ == "__main__":
+    main()

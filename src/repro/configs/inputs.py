@@ -1,0 +1,77 @@
+"""input_specs(): ShapeDtypeStruct stand-ins (dry-run) or concrete arrays
+(smoke tests) for every (arch x shape) cell.
+
+For [audio]/[vlm] archs the modality frontend is a STUB per the assignment:
+specs provide precomputed frame/patch embeddings (+ M-RoPE position ids for
+qwen2-vl).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_decode_cache
+
+from .shapes import ShapeSpec
+
+
+def _act_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def batch_specs(
+    cfg: ModelConfig, shape: ShapeSpec, *, with_labels: bool,
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract specs for the model-input batch."""
+    B = shape.global_batch
+    S = 1 if shape.kind == "decode" else shape.seq_len
+    specs: Dict[str, Any] = {}
+    if cfg.frontend == "token":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:
+        fd = cfg.frontend_dim or cfg.d_model
+        specs["embeds"] = jax.ShapeDtypeStruct((B, S, fd), _act_dtype(cfg))
+    if cfg.pos == "mrope":
+        specs["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    if with_labels:
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Abstract decode-cache pytree for serve_step cells (no allocation)."""
+    B = shape.global_batch
+    return jax.eval_shape(
+        lambda: init_decode_cache(cfg, B, shape.seq_len)
+    )
+
+
+def concrete_batch(
+    cfg: ModelConfig, shape_kind: str, batch: int, seq: int, seed: int = 0,
+    *, with_labels: bool = True,
+) -> Dict[str, jnp.ndarray]:
+    """Concrete random batch for smoke tests / examples (small shapes)."""
+    rng = np.random.default_rng(seed)
+    S = 1 if shape_kind == "decode" else seq
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "token":
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (batch, S)), jnp.int32
+        )
+    else:
+        fd = cfg.frontend_dim or cfg.d_model
+        out["embeds"] = jnp.asarray(
+            rng.normal(0, 1, (batch, S, fd)), _act_dtype(cfg)
+        )
+    if cfg.pos == "mrope":
+        pos = np.broadcast_to(np.arange(S, dtype=np.int32), (3, batch, S))
+        out["positions"] = jnp.asarray(pos)
+    if with_labels and shape_kind != "decode":
+        out["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (batch, S)), jnp.int32
+        )
+    return out

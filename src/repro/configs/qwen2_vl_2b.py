@@ -1,0 +1,8 @@
+"""--arch qwen2_vl_2b: exact assigned config (see archs.py for source tags)."""
+from repro.models.config import reduced
+
+from .archs import QWEN2_VL_2B as CONFIG
+
+SMOKE = reduced(CONFIG)
+
+__all__ = ["CONFIG", "SMOKE"]

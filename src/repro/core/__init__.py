@@ -1,0 +1,38 @@
+"""repro.core — CURP: Consistent Unordered Replication Protocol.
+
+Faithful implementation of Park & Ousterhout, "Exploiting Commutativity For
+Practical Fast Replication": witnesses (durability without ordering),
+speculative masters with commutativity-bounded unsynced windows, batched
+backup syncs, RIFL exactly-once semantics, crash recovery, reconfiguration,
+and the §A.1 (backup reads) / §A.2 (consensus) extensions.
+"""
+from .backup import Backup, LogEntry
+from .client import ClientSession, Decision, decide
+from .config import ConfigManager
+from .consensus import ConsensusCluster, replay_threshold, superquorum
+from .local import LocalCluster, OpOutcome
+from .master import DUP, ERROR, FAST, SYNCED, Master
+from .recovery import RecoveryReport, recover_master
+from .rifl import RiflTable
+from .store import KVStore
+from .types import (
+    ClusterConfig,
+    ExecResult,
+    Op,
+    OpType,
+    RecordStatus,
+    RpcId,
+    WitnessMode,
+    keyhash,
+    splitmix64,
+)
+from .witness import Witness
+
+__all__ = [
+    "Backup", "LogEntry", "ClientSession", "Decision", "decide",
+    "ConfigManager", "ConsensusCluster", "replay_threshold", "superquorum",
+    "LocalCluster", "OpOutcome", "Master", "FAST", "SYNCED", "DUP", "ERROR",
+    "RecoveryReport", "recover_master", "RiflTable", "KVStore",
+    "ClusterConfig", "ExecResult", "Op", "OpType", "RecordStatus", "RpcId",
+    "WitnessMode", "keyhash", "splitmix64", "Witness",
+]

@@ -1,0 +1,81 @@
+"""CURP client-side completion logic (§3.2.1).
+
+The decision rule is small and pure, so both harnesses (the in-process
+LocalCluster and the discrete-event simulator) share it:
+
+  * master replied with ``synced=True``           -> COMPLETE (conflict path,
+      2 RTTs total; no witness accepts needed)
+  * master replied fast AND all f witnesses ACCEPTED -> COMPLETE (1 RTT)
+  * master replied fast but >=1 witness rejected  -> NEED_SYNC: issue a sync
+      RPC to the master; once acked                -> COMPLETE (2-3 RTTs)
+  * master error (stale witness list / not owner) -> REFETCH config and retry
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+from .types import ExecResult, Op, OpType, RecordStatus, RpcId
+
+
+class Decision(enum.Enum):
+    COMPLETE = "COMPLETE"
+    NEED_SYNC = "NEED_SYNC"
+    REFETCH_CONFIG = "REFETCH_CONFIG"
+
+
+def decide(
+    result: ExecResult, witness_statuses: Sequence[RecordStatus]
+) -> Decision:
+    if not result.ok:
+        return Decision.REFETCH_CONFIG
+    if result.synced:
+        return Decision.COMPLETE
+    if all(s is RecordStatus.ACCEPTED for s in witness_statuses):
+        return Decision.COMPLETE
+    return Decision.NEED_SYNC
+
+
+@dataclass
+class ClientSession:
+    """Per-client RIFL identity: rpc_id allocation + ack tracking."""
+    client_id: int
+    _seq: itertools.count = field(default_factory=lambda: itertools.count(1))
+    first_incomplete: int = 1
+    _completed: set = field(default_factory=set)
+
+    def next_rpc_id(self) -> RpcId:
+        return (self.client_id, next(self._seq))
+
+    def mark_completed(self, rpc_id: RpcId) -> None:
+        self._completed.add(rpc_id[1])
+        while self.first_incomplete in self._completed:
+            self._completed.discard(self.first_incomplete)
+            self.first_incomplete += 1
+
+    def acks(self) -> Tuple[Tuple[int, int], ...]:
+        """Piggybacked RIFL ack: 'I have seen results for all seq < N'."""
+        return ((self.client_id, self.first_incomplete),)
+
+    # convenience constructors -------------------------------------------------
+    def op_set(self, key, value) -> Op:
+        return Op(OpType.SET, (key,), (value,), self.next_rpc_id())
+
+    def op_get(self, key) -> Op:
+        return Op(OpType.GET, (key,), (), self.next_rpc_id())
+
+    def op_incr(self, key, delta: int = 1) -> Op:
+        return Op(OpType.INCR, (key,), (delta,), self.next_rpc_id())
+
+    def op_hmset(self, key, fields) -> Op:
+        return Op(OpType.HMSET, (key,), (tuple(fields),), self.next_rpc_id())
+
+    def op_mset(self, kvs) -> Op:
+        keys = tuple(k for k, _ in kvs)
+        vals = tuple(v for _, v in kvs)
+        return Op(OpType.MSET, keys, vals, self.next_rpc_id())
+
+    def op_del(self, key) -> Op:
+        return Op(OpType.DEL, (key,), (), self.next_rpc_id())

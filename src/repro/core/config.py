@@ -1,0 +1,58 @@
+"""Cluster configuration manager (§3.6).
+
+Owns the authoritative mapping master -> (epoch, backups, witnesses,
+WitnessListVersion).  Clients cache configs; masters reject updates carrying a
+stale WitnessListVersion, which forces clients to refetch — this is the §3.6
+mechanism that makes witness reconfiguration safe.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Optional, Tuple
+
+from .types import ClusterConfig
+
+
+class ConfigManager:
+    def __init__(self) -> None:
+        self._configs: Dict[int, ClusterConfig] = {}  # shard_id -> config
+
+    def publish(self, shard_id: int, config: ClusterConfig) -> None:
+        self._configs[shard_id] = config
+
+    def fetch(self, shard_id: int = 0) -> ClusterConfig:
+        return self._configs[shard_id]
+
+    def replace_witness(
+        self, shard_id: int, dead_witness: int, new_witness: int
+    ) -> ClusterConfig:
+        """Decommission a crashed witness, install a new one, bump the
+        WitnessListVersion (§3.6 case 2).  The master must sync to backups and
+        acknowledge before the new config is considered live; callers drive
+        that handshake."""
+        cfg = self._configs[shard_id]
+        wl = tuple(new_witness if w == dead_witness else w for w in cfg.witness_ids)
+        cfg = replace(
+            cfg, witness_ids=wl, witness_list_version=cfg.witness_list_version + 1
+        )
+        self._configs[shard_id] = cfg
+        return cfg
+
+    def fail_over(
+        self,
+        shard_id: int,
+        new_master_id: int,
+        new_witness_ids: Tuple[int, ...],
+    ) -> ClusterConfig:
+        """Master crash: bump epoch (fences zombies at backups), assign fresh
+        witnesses, bump WitnessListVersion."""
+        cfg = self._configs[shard_id]
+        cfg = replace(
+            cfg,
+            master_id=new_master_id,
+            epoch=cfg.epoch + 1,
+            witness_ids=new_witness_ids,
+            witness_list_version=cfg.witness_list_version + 1,
+        )
+        self._configs[shard_id] = cfg
+        return cfg

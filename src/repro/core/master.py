@@ -1,0 +1,263 @@
+"""CURP master (§3.2.3, §4.3, §4.4).
+
+The master executes all updates, but — unlike classic primary-backup — replies
+*before* replicating to backups ("speculative execution"), as long as the new
+operation commutes with every *unsynced* operation.  Backup syncs are batched
+(§4.4, batch of up to ``sync_batch`` ops) and run asynchronously.
+
+The master is transport-agnostic: it decides WHAT must happen
+(fast-respond / sync-before-respond / duplicate / error) and exposes
+``begin_sync``/``complete_sync`` for the harness (simulator or local runner)
+that owns actual RPC delivery.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .backup import LogEntry
+from .rifl import RiflTable
+from .store import KVStore
+from .types import BackupSyncReq, ExecResult, Op, RpcId
+
+# Verdicts for an incoming update.
+FAST = "fast"            # executed, reply immediately (1 RTT path)
+SYNCED = "synced"        # executed + must sync before replying (conflict path)
+DUP = "dup"              # RIFL duplicate, reply with saved result
+ERROR = "error"
+
+
+@dataclass
+class PendingSync:
+    """An in-flight batched backup sync."""
+    through_index: int
+    req: BackupSyncReq
+    acks: int = 0
+
+
+class Master:
+    def __init__(
+        self,
+        master_id: int,
+        epoch: int = 0,
+        sync_batch: int = 50,
+        hot_key_sync: bool = True,
+        hot_key_window: float = 0.0,
+    ) -> None:
+        self.master_id = master_id
+        self.epoch = epoch
+        self.sync_batch = sync_batch
+        self.hot_key_sync = hot_key_sync
+        # "updated recently" horizon for the §4.4 preemptive-sync heuristic:
+        # an update to a key whose previous update is still unsynced hints the
+        # key is hot; sync right after responding.
+        self.hot_key_window = hot_key_window
+
+        self.store = KVStore()
+        self.rifl = RiflTable()
+        self.log: List[LogEntry] = []
+        self.synced_index = 0                 # log[:synced_index] is on backups
+        self.witness_list_version = 0
+        self._unsynced_keyhash: Dict[int, int] = {}  # keyhash -> refcount
+        self.sync_in_progress: Optional[PendingSync] = None
+        self.want_sync: bool = False          # sync requested (batch full / conflict)
+        self.owned_partition = None           # optional key filter (migration §3.6)
+        self.stats = {
+            "fast": 0, "conflict_syncs": 0, "dups": 0, "batch_syncs": 0,
+            "reads_fast": 0, "reads_blocked": 0, "hot_key_syncs": 0,
+        }
+
+    # ------------------------------------------------------------------ utils
+    @property
+    def unsynced_count(self) -> int:
+        return len(self.log) - self.synced_index
+
+    def _commutes(self, op: Op) -> bool:
+        return not any(kh in self._unsynced_keyhash for kh in op.key_hashes())
+
+    def owns(self, op: Op) -> bool:
+        if self.owned_partition is None:
+            return True
+        return all(self.owned_partition(k) for k in op.keys)
+
+    # --------------------------------------------------------------- updates
+    def handle_update(
+        self,
+        op: Op,
+        witness_list_version: int,
+        client_acks: Sequence[Tuple[int, int]] = (),
+        now: float = 0.0,
+    ) -> Tuple[str, ExecResult]:
+        """Execute an update; classify the reply path.
+
+        Returns (verdict, result).  ``SYNCED`` means the harness must complete
+        a backup sync through this op before the reply is released; the result
+        carries synced=True so the client completes without witness accepts
+        (§3.2.3 "tags its result as synced").
+        """
+        if witness_list_version != self.witness_list_version:
+            # §3.6: stale witness list — client must refetch and retry, else
+            # its witness records would land on decommissioned witnesses.
+            return ERROR, ExecResult(None, synced=False, ok=False,
+                                     error="WRONG_WITNESS_VERSION")
+        if not self.owns(op):
+            return ERROR, ExecResult(None, synced=False, ok=False,
+                                     error="NOT_OWNER")
+
+        self.rifl.apply_client_acks(client_acks)
+        dup = self.rifl.check_duplicate(op.rpc_id)
+        if dup is not None:
+            self.stats["dups"] += 1
+            return DUP, ExecResult(dup.result, synced=dup.synced)
+
+        commutes = self._commutes(op)
+        # §4.4 hot-key heuristic: was any touched key updated "recently"
+        # (within hot_key_window) before this op?  If so it will likely be
+        # updated again soon — sync preemptively after responding.
+        hot = False
+        if self.hot_key_sync and self.hot_key_window > 0:
+            for k in op.keys:
+                prev = self.store.last_update_time(k)
+                if prev is not None and (now - prev) <= self.hot_key_window:
+                    hot = True
+                    break
+
+        result = self.store.execute(op, now)
+        self.rifl.record_completion(op.rpc_id, result, synced=False)
+        self.log.append(LogEntry(op, result))
+        for kh in op.key_hashes():
+            self._unsynced_keyhash[kh] = self._unsynced_keyhash.get(kh, 0) + 1
+
+        if not commutes:
+            # §3.2.3: must sync (through this op) before externalizing result.
+            self.stats["conflict_syncs"] += 1
+            self.want_sync = True
+            return SYNCED, ExecResult(result, synced=True)
+
+        self.stats["fast"] += 1
+        if self.unsynced_count >= self.sync_batch:
+            self.want_sync = True
+        if hot:
+            # §4.4 heuristic: recently-updated key updated again — sync
+            # preemptively (after responding) so future ops don't block.
+            self.stats["hot_key_syncs"] += 1
+            self.want_sync = True
+        return FAST, ExecResult(result, synced=False)
+
+    # ----------------------------------------------------------------- reads
+    def handle_read(self, op: Op, now: float = 0.0) -> Tuple[str, ExecResult]:
+        """Reads of unsynced values must sync first (§3.2.3 / §A.1)."""
+        if not self.owns(op):
+            return ERROR, ExecResult(None, synced=False, ok=False,
+                                     error="NOT_OWNER")
+        value = self.store.execute(op, now)
+        if self._commutes(op):
+            self.stats["reads_fast"] += 1
+            return FAST, ExecResult(value, synced=False)
+        self.stats["reads_blocked"] += 1
+        self.want_sync = True
+        return SYNCED, ExecResult(value, synced=True)
+
+    # ------------------------------------------------------------ sync plumbing
+    def begin_sync(self) -> Optional[BackupSyncReq]:
+        """Start one batched backup sync if needed (one outstanding at a time,
+        like RAMCloud).  Returns the request the harness should fan out to all
+        backups, or None."""
+        if self.sync_in_progress is not None:
+            return None
+        if not self.want_sync and self.unsynced_count == 0:
+            return None
+        through = len(self.log)
+        if through == self.synced_index:
+            self.want_sync = False
+            return None
+        req = BackupSyncReq(
+            master_id=self.master_id,
+            epoch=self.epoch,
+            from_index=self.synced_index,
+            entries=tuple(
+                (e.op, e.result) for e in self.log[self.synced_index:through]
+            ),
+        )
+        self.sync_in_progress = PendingSync(through_index=through, req=req)
+        self.want_sync = False
+        return req
+
+    def complete_sync(self) -> Tuple[Tuple[int, RpcId], ...]:
+        """All backups acked the in-flight sync.  Advances the synced frontier
+        and returns the (keyhash, rpc_id) gc entries for the witnesses (§3.5)."""
+        assert self.sync_in_progress is not None
+        through = self.sync_in_progress.through_index
+        gc_entries: List[Tuple[int, RpcId]] = []
+        for entry in self.log[self.synced_index:through]:
+            for kh in entry.op.key_hashes():
+                gc_entries.append((kh, entry.op.rpc_id))
+                cnt = self._unsynced_keyhash.get(kh, 0) - 1
+                if cnt <= 0:
+                    self._unsynced_keyhash.pop(kh, None)
+                else:
+                    self._unsynced_keyhash[kh] = cnt
+        self.rifl.mark_synced_through(
+            entry.op.rpc_id for entry in self.log[self.synced_index:through]
+        )
+        self.synced_index = through
+        self.sync_in_progress = None
+        self.stats["batch_syncs"] += 1
+        return tuple(gc_entries)
+
+    def force_synced_through(self, through: int) -> None:
+        """Advance the synced frontier without the single-outstanding-sync
+        bookkeeping.  Used by the 'original primary-backup' simulation mode,
+        which issues one replication RPC set per op (no batching, multiple
+        outstanding) — the pre-CURP RAMCloud behaviour."""
+        if through <= self.synced_index:
+            return
+        assert self.sync_in_progress is None
+        for entry in self.log[self.synced_index:through]:
+            for kh in entry.op.key_hashes():
+                cnt = self._unsynced_keyhash.get(kh, 0) - 1
+                if cnt <= 0:
+                    self._unsynced_keyhash.pop(kh, None)
+                else:
+                    self._unsynced_keyhash[kh] = cnt
+        self.rifl.mark_synced_through(
+            e.op.rpc_id for e in self.log[self.synced_index:through]
+        )
+        self.synced_index = through
+        self.want_sync = False
+
+    def abort_sync(self) -> None:
+        """A backup rejected (e.g. zombie epoch fence): drop the attempt."""
+        self.sync_in_progress = None
+        self.want_sync = True
+
+    # -------------------------------------------------------------- recovery
+    def restore_from_log(self, entries: Sequence[LogEntry]) -> None:
+        """New master: rebuild state machine + RIFL from a backup's log."""
+        for e in entries:
+            self.store.execute(e.op, 0.0)
+            self.rifl.record_completion(e.op.rpc_id, e.result, synced=True)
+        self.log = list(entries)
+        self.synced_index = len(self.log)
+        self._unsynced_keyhash.clear()
+
+    def replay_from_witness(self, requests: Sequence[Op]) -> int:
+        """Replay witness data (any order — all commutative); RIFL filters ops
+        that already made it to backups (§3.3).  Client acks are ignored while
+        replaying (§4.8).  Returns number of ops actually re-executed."""
+        self.rifl.replay_mode = True
+        executed = 0
+        for op in requests:
+            if not self.owns(op):
+                continue  # §3.6: migrated partition remnants are ignored
+            if self.rifl.check_duplicate(op.rpc_id) is not None:
+                continue
+            result = self.store.execute(op, 0.0)
+            self.rifl.record_completion(op.rpc_id, result, synced=False)
+            self.log.append(LogEntry(op, result))
+            for kh in op.key_hashes():
+                self._unsynced_keyhash[kh] = self._unsynced_keyhash.get(kh, 0) + 1
+            executed += 1
+        self.rifl.replay_mode = False
+        self.want_sync = executed > 0 or self.unsynced_count > 0
+        return executed

@@ -1,0 +1,102 @@
+"""The NoSQL state machine that CURP replicates (§4).
+
+A single substrate stands in for both evaluation targets of the paper
+(RAMCloud and Redis): a key->value map where values are strings, counters, or
+hashmaps.  ``execute`` is deterministic, so backup replay and witness replay
+reproduce master state exactly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+from .types import Op, OpType
+
+
+@dataclass
+class VersionedValue:
+    value: Any
+    version: int = 0
+    # Timestamp of last update; masters compare against last-sync timestamp to
+    # decide "is this object unsynced?" when not log-structured (§4.3).
+    last_update: float = 0.0
+
+
+class KVStore:
+    """Deterministic key-value state machine."""
+
+    def __init__(self) -> None:
+        self._data: Dict[Any, VersionedValue] = {}
+
+    # -- mutation -----------------------------------------------------------
+    def execute(self, op: Op, now: float = 0.0) -> Any:
+        t = op.op_type
+        if t == OpType.SET:
+            (key,) = op.keys
+            (value,) = op.args
+            self._set(key, value, now)
+            return "OK"
+        if t == OpType.DEL:
+            (key,) = op.keys
+            existed = key in self._data
+            self._data.pop(key, None)
+            return int(existed)
+        if t == OpType.INCR:
+            (key,) = op.keys
+            delta = op.args[0] if op.args else 1
+            cur = self._data.get(key)
+            base = cur.value if cur is not None and isinstance(cur.value, int) else 0
+            new = base + delta
+            self._set(key, new, now)
+            return new
+        if t == OpType.HMSET:
+            (key,) = op.keys
+            fields: Tuple[Tuple[Any, Any], ...] = op.args[0]
+            cur = self._data.get(key)
+            h = dict(cur.value) if cur is not None and isinstance(cur.value, dict) else {}
+            for f, v in fields:
+                h[f] = v
+            self._set(key, h, now)
+            return "OK"
+        if t == OpType.MSET:
+            for key, value in zip(op.keys, op.args):
+                self._set(key, value, now)
+            return "OK"
+        if t == OpType.GET:
+            (key,) = op.keys
+            cur = self._data.get(key)
+            return None if cur is None else cur.value
+        if t == OpType.NOOP:
+            return None
+        raise ValueError(f"unknown op type {t}")
+
+    def _set(self, key: Any, value: Any, now: float) -> None:
+        cur = self._data.get(key)
+        if cur is None:
+            self._data[key] = VersionedValue(value, 1, now)
+        else:
+            cur.value = value
+            cur.version += 1
+            cur.last_update = now
+
+    # -- introspection ------------------------------------------------------
+    def get(self, key: Any) -> Any:
+        cur = self._data.get(key)
+        return None if cur is None else cur.value
+
+    def last_update_time(self, key: Any) -> Optional[float]:
+        cur = self._data.get(key)
+        return None if cur is None else cur.last_update
+
+    def snapshot(self) -> Dict[Any, VersionedValue]:
+        import copy
+
+        return copy.deepcopy(self._data)
+
+    def load_snapshot(self, snap: Dict[Any, VersionedValue]) -> None:
+        import copy
+
+        self._data = copy.deepcopy(snap)
+
+    def __len__(self) -> int:
+        return len(self._data)

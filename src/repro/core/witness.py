@@ -1,0 +1,176 @@
+"""CURP witness (§3.2.2, §4.1, §4.2, §4.5).
+
+A witness guarantees durability-without-ordering: it accepts a record only if
+it commutes with everything it currently holds (disjoint 64-bit key hashes).
+The data structure is a W-way set-associative cache over key hashes (§4.2,
+Appendix B.1: direct-mapped conflicts after ~80 inserts at 4096 slots; 4-way
+associativity fixes that).
+
+This Python object is the protocol-level reference; the TPU-side batched
+version is repro/kernels/witness_record.py (validated against this semantics
+via repro/kernels/ref.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .types import (
+    GcResp,
+    Op,
+    RecordStatus,
+    RpcId,
+    WitnessMode,
+)
+
+
+@dataclass
+class _Slot:
+    key_hash: int = 0
+    rpc_id: Optional[RpcId] = None
+    request: Optional[Op] = None
+    occupied: bool = False
+    gc_age: int = 0  # number of master gc rounds survived (§4.5 suspicion)
+
+
+class Witness:
+    """One witness instance serving one master (started via ``start``)."""
+
+    # §4.5: a surviving record is suspected as uncollected garbage after this
+    # many gc rounds ("three is a good number if a master performs only one gc
+    # RPC at a time").
+    SUSPECT_AGE = 3
+
+    def __init__(self, n_sets: int = 1024, n_ways: int = 4) -> None:
+        self.n_sets = n_sets
+        self.n_ways = n_ways
+        self.mode = WitnessMode.ENDED
+        self.master_id: Optional[int] = None
+        self._slots: List[List[_Slot]] = []
+        self.stats = {"accepts": 0, "rejects_conflict": 0, "rejects_full": 0,
+                      "rejects_mode": 0, "gc_drops": 0}
+
+    # -- lifecycle (Fig. 4: coordinator -> witness) ---------------------------
+    def start(self, master_id: int) -> bool:
+        self.master_id = master_id
+        self.mode = WitnessMode.NORMAL
+        self._slots = [
+            [_Slot() for _ in range(self.n_ways)] for _ in range(self.n_sets)
+        ]
+        return True
+
+    def end(self) -> None:
+        self.mode = WitnessMode.ENDED
+        self.master_id = None
+        self._slots = []
+
+    # -- client -> witness ----------------------------------------------------
+    def record(
+        self,
+        master_id: int,
+        key_hashes: Tuple[int, ...],
+        rpc_id: RpcId,
+        request: Op,
+    ) -> RecordStatus:
+        """Accept iff commutative with all held requests AND space available.
+
+        Multi-object updates (§4.2): the commutativity and space check runs for
+        every affected object; on accept the request is written n times, once
+        per object.
+        """
+        if self.mode is not WitnessMode.NORMAL or master_id != self.master_id:
+            self.stats["rejects_mode"] += 1
+            return RecordStatus.REJECTED
+
+        placements: List[Tuple[int, int]] = []  # (set_idx, way_idx) per key
+        for kh in key_hashes:
+            set_idx = kh % self.n_sets
+            ways = self._slots[set_idx]
+            free_way = None
+            for w, slot in enumerate(ways):
+                if slot.occupied:
+                    if slot.key_hash == kh and slot.rpc_id != rpc_id:
+                        # Non-commutative with a held request: must reject —
+                        # the witness cannot order them (§3.2.2).
+                        self.stats["rejects_conflict"] += 1
+                        self._note_suspect(slot)
+                        return RecordStatus.REJECTED
+                    if slot.rpc_id == rpc_id and slot.key_hash == kh:
+                        # Duplicate record RPC (client retry): idempotent accept.
+                        free_way = w
+                        break
+                elif free_way is None:
+                    free_way = w
+            if free_way is None:
+                self.stats["rejects_full"] += 1
+                return RecordStatus.REJECTED
+            placements.append((set_idx, free_way))
+
+        for kh, (set_idx, way) in zip(key_hashes, placements):
+            slot = self._slots[set_idx][way]
+            slot.key_hash = kh
+            slot.rpc_id = rpc_id
+            slot.request = request
+            slot.occupied = True
+            slot.gc_age = 0
+        self.stats["accepts"] += 1
+        return RecordStatus.ACCEPTED
+
+    # -- master -> witness ----------------------------------------------------
+    def gc(self, entries: Tuple[Tuple[int, RpcId], ...]) -> GcResp:
+        """Drop synced records; report suspected uncollected garbage (§4.5)."""
+        if self.mode is not WitnessMode.NORMAL:
+            return GcResp(stale_requests=())
+        for kh, rpc_id in entries:
+            set_idx = kh % self.n_sets
+            for slot in self._slots[set_idx]:
+                if slot.occupied and slot.key_hash == kh and slot.rpc_id == rpc_id:
+                    slot.occupied = False
+                    slot.request = None
+                    slot.rpc_id = None
+                    self.stats["gc_drops"] += 1
+        # Age all survivors; collect suspects.
+        stale: List[Op] = []
+        seen: set = set()
+        for ways in self._slots:
+            for slot in ways:
+                if slot.occupied:
+                    slot.gc_age += 1
+                    if slot.gc_age >= self.SUSPECT_AGE and slot.rpc_id not in seen:
+                        seen.add(slot.rpc_id)
+                        stale.append(slot.request)
+        return GcResp(stale_requests=tuple(stale))
+
+    def get_recovery_data(self, master_id: int) -> Tuple[Op, ...]:
+        """Irreversibly freeze (recovery mode) and return all held requests."""
+        if self.master_id != master_id or self.mode is WitnessMode.ENDED:
+            return ()
+        self.mode = WitnessMode.RECOVERY
+        out: Dict[RpcId, Op] = {}
+        for ways in self._slots:
+            for slot in ways:
+                if slot.occupied and slot.request is not None:
+                    out[slot.rpc_id] = slot.request  # dedupe multi-key entries
+        return tuple(out.values())
+
+    # -- §A.1 consistent reads from backups ------------------------------------
+    def commutes_with_all(self, key_hashes: Tuple[int, ...]) -> bool:
+        """True iff no held request touches any of these keys (read check)."""
+        if self.mode is not WitnessMode.NORMAL:
+            return False
+        for kh in key_hashes:
+            set_idx = kh % self.n_sets
+            for slot in self._slots[set_idx]:
+                if slot.occupied and slot.key_hash == kh:
+                    return False
+        return True
+
+    # -- internals -------------------------------------------------------------
+    def _note_suspect(self, slot: _Slot) -> None:
+        # Rejection against an old record hints at uncollected garbage; the
+        # aging in gc() will surface it to the master.
+        pass
+
+    @property
+    def occupancy(self) -> int:
+        return sum(1 for ways in self._slots for s in ways if s.occupied)

@@ -1,0 +1,10 @@
+from .checkpoint import BackupReplica, restore_into
+from .elastic import MeshPlan, StragglerPolicy, plan_elastic_remesh
+from .journal import FileWitness, StepOp
+from .runner import FTConfig, FaultTolerantTrainer
+
+__all__ = [
+    "BackupReplica", "restore_into", "MeshPlan", "StragglerPolicy",
+    "plan_elastic_remesh", "FileWitness", "StepOp", "FTConfig",
+    "FaultTolerantTrainer",
+]

@@ -1,0 +1,27 @@
+"""Pallas TPU kernels for the CURP protocol hot spots (DESIGN.md §4).
+
+witness_record — batched set-associative witness record (paper §4.2)
+conflict_scan  — master commutativity check vs the unsynced window (§4.3)
+keyhash        — 2x32-lane key hashing (TPU adaptation of the 64-bit hash)
+
+Validated in interpret mode against the pure-jnp oracles in ref.py; the
+model-zoo code deliberately contains no Pallas so the dry-run roofline
+reflects real XLA numbers (DESIGN.md §4).
+"""
+from .ops import (
+    WitnessTable,
+    conflict_scan,
+    keyhash2x32,
+    ref_conflict_scan,
+    ref_keyhash2x32,
+    ref_witness_gc,
+    ref_witness_record,
+    witness_gc,
+    witness_record,
+)
+
+__all__ = [
+    "WitnessTable", "conflict_scan", "keyhash2x32", "witness_gc",
+    "witness_record", "ref_conflict_scan", "ref_keyhash2x32",
+    "ref_witness_gc", "ref_witness_record",
+]

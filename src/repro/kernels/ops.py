@@ -1,0 +1,102 @@
+"""jit'd public wrappers around the CURP Pallas kernels.
+
+Each op pads/validates shapes, picks interpret mode automatically (interpret
+on CPU — the kernels target TPU), and exposes a pytree-friendly API used by
+the device-side witness in repro.serving.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .conflict_scan import conflict_scan_pallas
+from .keyhash import keyhash2x32_pallas
+from .ref import (
+    U32,
+    WitnessTable,
+    ref_conflict_scan,
+    ref_keyhash2x32,
+    ref_witness_gc,
+    ref_witness_record,
+)
+from .witness_record import witness_gc_pallas, witness_record_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, m: int, fill=0) -> Tuple[jnp.ndarray, int]:
+    n = x.shape[0]
+    pad = (-n) % m
+    if pad:
+        x = jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+    return x, n
+
+
+def keyhash2x32(hi, lo, *, block: int = 1024, interpret: bool | None = None):
+    """Batched 64-bit-equivalent key hash as (hi, lo) uint32 lanes."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    hi = jnp.asarray(hi, U32)
+    lo = jnp.asarray(lo, U32)
+    hp, n = _pad_to(hi, block)
+    lp, _ = _pad_to(lo, block)
+    oh, ol = keyhash2x32_pallas(hp, lp, block=block, interpret=interpret)
+    return oh[:n], ol[:n]
+
+
+def witness_record(table: WitnessTable, q_hi, q_lo,
+                   *, interpret: bool | None = None):
+    """Batched record RPCs against a device-side witness table.
+
+    Returns (accepted [B] int32, new_table).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    q_hi = jnp.asarray(q_hi, U32)
+    q_lo = jnp.asarray(q_lo, U32)
+    return witness_record_pallas(table, q_hi, q_lo, interpret=interpret)
+
+
+def witness_gc(table: WitnessTable, g_hi, g_lo,
+               *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return witness_gc_pallas(
+        table, jnp.asarray(g_hi, U32), jnp.asarray(g_lo, U32),
+        interpret=interpret,
+    )
+
+
+def conflict_scan(w_hi, w_lo, w_valid, q_hi, q_lo,
+                  *, block_b: int = 256, block_u: int = 512,
+                  interpret: bool | None = None):
+    """Commutativity check of B queries vs a U-entry unsynced window."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    w_hi = jnp.asarray(w_hi, U32)
+    w_lo = jnp.asarray(w_lo, U32)
+    w_valid = jnp.asarray(w_valid, jnp.int32)
+    q_hi = jnp.asarray(q_hi, U32)
+    q_lo = jnp.asarray(q_lo, U32)
+    whp, u = _pad_to(w_hi, block_u)
+    wlp, _ = _pad_to(w_lo, block_u)
+    wvp, _ = _pad_to(w_valid, block_u)      # padding is valid=0 => no hits
+    qhp, b = _pad_to(q_hi, block_b)
+    qlp, _ = _pad_to(q_lo, block_b)
+    out = conflict_scan_pallas(
+        whp, wlp, wvp, qhp, qlp,
+        block_b=block_b, block_u=block_u, interpret=interpret,
+    )
+    return out[:b]
+
+
+__all__ = [
+    "WitnessTable", "keyhash2x32", "witness_record", "witness_gc",
+    "conflict_scan",
+    "ref_keyhash2x32", "ref_witness_record", "ref_witness_gc",
+    "ref_conflict_scan",
+]

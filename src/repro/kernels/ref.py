@@ -1,0 +1,136 @@
+"""Pure-jnp oracles for the CURP Pallas kernels.
+
+The protocol's hot spots (DESIGN.md §4) are integer data-structure ops, not
+GEMMs, so the TPU adaptation swaps 64-bit scalar code for 32-bit vector-lane
+math (TPU VPU lanes are 32-bit):
+
+  * keyhash2x32 — a 64-bit-equivalent key hash carried as (hi, lo) uint32
+    lanes, built from two murmur3 fmix32 finalizers with cross-lane mixing.
+  * witness_record — batched set-associative record (§4.2): order-dependent
+    within a batch (earlier accepts occupy slots).
+  * conflict_scan — master-side commutativity check (§4.3): B incoming
+    keyhashes vs the U-entry unsynced window -> conflict bitmap.
+
+Semantics notes vs the Python Witness (repro.core.witness): the kernel path
+handles single-key records and treats any same-key hit as a conflict
+(duplicate retries are resolved by the Python layer); this matches how the
+device-side witness is used by CURP-Serve (one record per session key).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+# numpy scalars: they inline as literals (Pallas kernels may not close over
+# traced jnp constants).
+_C1 = np.uint32(0x85EBCA6B)
+_C2 = np.uint32(0xC2B2AE35)
+_GOLD = np.uint32(0x9E3779B9)
+_MIX5 = np.uint32(5)
+_MIXC = np.uint32(0xE6546B64)
+
+
+def fmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 32-bit finalizer (full avalanche)."""
+    x = x.astype(U32)
+    x = x ^ (x >> 16)
+    x = x * _C1
+    x = x ^ (x >> 13)
+    x = x * _C2
+    x = x ^ (x >> 16)
+    return x
+
+
+def ref_keyhash2x32(hi: jnp.ndarray, lo: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """64-bit-equivalent hash as two cross-mixed 32-bit lanes."""
+    hi = hi.astype(U32)
+    lo = lo.astype(U32)
+    h1 = fmix32(lo + _GOLD)
+    h2 = fmix32(hi ^ h1)
+    h3 = fmix32(h1 + h2 * _MIX5 + _MIXC)
+    return h2, h3
+
+
+class WitnessTable(NamedTuple):
+    """Device-side witness state: S sets x W ways of (hi, lo) keyhash slots."""
+    keys_hi: jnp.ndarray   # [S, W] uint32
+    keys_lo: jnp.ndarray   # [S, W] uint32
+    occ: jnp.ndarray       # [S, W] int32 (0/1)
+
+    @staticmethod
+    def empty(n_sets: int, n_ways: int) -> "WitnessTable":
+        assert n_sets & (n_sets - 1) == 0, "n_sets must be a power of two"
+        return WitnessTable(
+            keys_hi=jnp.zeros((n_sets, n_ways), U32),
+            keys_lo=jnp.zeros((n_sets, n_ways), U32),
+            occ=jnp.zeros((n_sets, n_ways), jnp.int32),
+        )
+
+
+def ref_witness_record(
+    table: WitnessTable, q_hi: jnp.ndarray, q_lo: jnp.ndarray
+) -> Tuple[jnp.ndarray, WitnessTable]:
+    """Sequential batched record.  Returns (accepted [B] int32, new table)."""
+    S, W = table.occ.shape
+    set_mask = jnp.uint32(S - 1)
+
+    def body(carry, q):
+        khi, klo, occ = carry
+        qhi, qlo = q
+        s = (qlo & set_mask).astype(jnp.int32)
+        row_hi, row_lo, row_occ = khi[s], klo[s], occ[s]
+        conflict = jnp.any(
+            (row_occ == 1) & (row_hi == qhi) & (row_lo == qlo)
+        )
+        free = row_occ == 0
+        has_free = jnp.any(free)
+        way = jnp.argmax(free)
+        acc = jnp.logical_and(~conflict, has_free)
+        sel = (jnp.arange(W) == way) & acc
+        khi = khi.at[s].set(jnp.where(sel, qhi, row_hi))
+        klo = klo.at[s].set(jnp.where(sel, qlo, row_lo))
+        occ = occ.at[s].set(jnp.where(sel, 1, row_occ))
+        return (khi, klo, occ), acc.astype(jnp.int32)
+
+    (khi, klo, occ), accepted = jax.lax.scan(
+        body, (table.keys_hi, table.keys_lo, table.occ),
+        (q_hi.astype(U32), q_lo.astype(U32)),
+    )
+    return accepted, WitnessTable(khi, klo, occ)
+
+
+def ref_witness_gc(
+    table: WitnessTable, g_hi: jnp.ndarray, g_lo: jnp.ndarray
+) -> WitnessTable:
+    """Clear every slot whose key matches a gc entry (vectorized: no order
+    dependence — clears are idempotent and commutative)."""
+    S, W = table.occ.shape
+    # [S, W, G] match cube; G is small (one gc batch).
+    m = (
+        (table.keys_hi[:, :, None] == g_hi[None, None, :].astype(U32))
+        & (table.keys_lo[:, :, None] == g_lo[None, None, :].astype(U32))
+        & (table.occ[:, :, None] == 1)
+    )
+    cleared = jnp.any(m, axis=-1)
+    return WitnessTable(
+        keys_hi=table.keys_hi,
+        keys_lo=table.keys_lo,
+        occ=jnp.where(cleared, 0, table.occ),
+    )
+
+
+def ref_conflict_scan(
+    w_hi: jnp.ndarray, w_lo: jnp.ndarray, w_valid: jnp.ndarray,
+    q_hi: jnp.ndarray, q_lo: jnp.ndarray,
+) -> jnp.ndarray:
+    """conflicts[b] = any_u(valid[u] & w[u] == q[b]).  [B] int32."""
+    eq = (
+        (w_hi[None, :] == q_hi[:, None].astype(U32))
+        & (w_lo[None, :] == q_lo[:, None].astype(U32))
+        & (w_valid[None, :] == 1)
+    )
+    return jnp.any(eq, axis=1).astype(jnp.int32)

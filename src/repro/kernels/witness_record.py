@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: batched set-associative witness record (§4.2).
+
+The witness table (S sets x W ways of 2x32-bit keyhash slots, DESIGN.md §4)
+lives entirely in VMEM — at the paper's 1024x4 geometry that is 48 KiB of
+state, far under the ~16 MiB VMEM budget, so a single kernel invocation
+amortizes the HBM round-trip over a whole batch of record requests.
+
+Records are ORDER-DEPENDENT within a batch (an accepted record occupies a
+slot that later conflicting records must see), so the kernel runs a
+``fori_loop`` over the batch; each iteration is vectorized across the W ways
+of the probed set (VPU lanes).  Accept/reject semantics match
+repro.core.witness for single-key records:
+
+  reject  if any occupied way holds the same (hi, lo) keyhash   (conflict)
+  reject  if no way in the set is free                          (capacity)
+  accept  otherwise, writing the first free way
+
+A companion gc kernel clears synced entries (order-independent, fully
+vectorized over the table).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import U32, WitnessTable
+
+
+def _record_kernel(qhi_ref, qlo_ref, khi_in, klo_in, occ_in,
+                   acc_ref, khi_ref, klo_ref, occ_ref):
+    S, W = khi_in.shape
+    set_mask = jnp.uint32(S - 1)
+    # Copy table state into the output refs; the loop mutates those.
+    khi_ref[...] = khi_in[...]
+    klo_ref[...] = klo_in[...]
+    occ_ref[...] = occ_in[...]
+    B = qhi_ref.shape[0]
+    way_iota = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+
+    def body(b, _):
+        qhi = pl.load(qhi_ref, (pl.ds(b, 1),))           # [1]
+        qlo = pl.load(qlo_ref, (pl.ds(b, 1),))
+        s = (qlo[0] & set_mask).astype(jnp.int32)
+        row_hi = pl.load(khi_ref, (pl.ds(s, 1), slice(None)))   # [1, W]
+        row_lo = pl.load(klo_ref, (pl.ds(s, 1), slice(None)))
+        row_occ = pl.load(occ_ref, (pl.ds(s, 1), slice(None)))
+        conflict = jnp.any(
+            (row_occ == 1) & (row_hi == qhi[0]) & (row_lo == qlo[0])
+        )
+        free = row_occ == 0
+        has_free = jnp.any(free)
+        way = jnp.argmax(free)           # first free way
+        acc = jnp.logical_and(~conflict, has_free)
+        sel = (way_iota == way) & acc
+        pl.store(khi_ref, (pl.ds(s, 1), slice(None)),
+                 jnp.where(sel, qhi[0], row_hi))
+        pl.store(klo_ref, (pl.ds(s, 1), slice(None)),
+                 jnp.where(sel, qlo[0], row_lo))
+        pl.store(occ_ref, (pl.ds(s, 1), slice(None)),
+                 jnp.where(sel, 1, row_occ))
+        pl.store(acc_ref, (pl.ds(b, 1),),
+                 acc.astype(jnp.int32).reshape((1,)))
+        return 0
+
+    jax.lax.fori_loop(0, B, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def witness_record_pallas(
+    table: WitnessTable, q_hi: jnp.ndarray, q_lo: jnp.ndarray,
+    *, interpret: bool = True,
+):
+    """Process a batch of records against the table.  Single grid cell: the
+    whole table is the working set and the batch is a sequential scan."""
+    S, W = table.occ.shape
+    (B,) = q_hi.shape
+    out = pl.pallas_call(
+        _record_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((S, W), U32),
+            jax.ShapeDtypeStruct((S, W), U32),
+            jax.ShapeDtypeStruct((S, W), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_hi.astype(U32), q_lo.astype(U32),
+      table.keys_hi, table.keys_lo, table.occ)
+    accepted, khi, klo, occ = out
+    return accepted, WitnessTable(khi, klo, occ)
+
+
+def _gc_kernel(ghi_ref, glo_ref, khi_in, klo_in, occ_in, occ_ref):
+    # occ[s,w] = 0 wherever (hi, lo) matches any gc entry.  G is one gc batch
+    # (<= a sync batch), so the [S, W, G] compare cube stays tiny.
+    khi = khi_in[...]
+    klo = klo_in[...]
+    occ = occ_in[...]
+    ghi = ghi_ref[...]
+    glo = glo_ref[...]
+    m = (
+        (khi[:, :, None] == ghi[None, None, :])
+        & (klo[:, :, None] == glo[None, None, :])
+        & (occ[:, :, None] == 1)
+    )
+    occ_ref[...] = jnp.where(jnp.any(m, axis=-1), 0, occ)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def witness_gc_pallas(
+    table: WitnessTable, g_hi: jnp.ndarray, g_lo: jnp.ndarray,
+    *, interpret: bool = True,
+):
+    S, W = table.occ.shape
+    occ = pl.pallas_call(
+        _gc_kernel,
+        out_shape=jax.ShapeDtypeStruct((S, W), jnp.int32),
+        interpret=interpret,
+    )(g_hi.astype(U32), g_lo.astype(U32),
+      table.keys_hi, table.keys_lo, table.occ)
+    return WitnessTable(table.keys_hi, table.keys_lo, occ)

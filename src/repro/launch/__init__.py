@@ -1,0 +1,18 @@
+"""repro.launch — meshes, sharding strategies, dry-run, launchers.
+
+NOTE: importing this package never touches jax device state; dryrun.py sets
+its XLA device-count flag in its own first two lines.
+"""
+from .mesh import (
+    HBM_BW,
+    HBM_BYTES,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    make_mesh_from,
+    make_production_mesh,
+)
+
+__all__ = [
+    "HBM_BW", "HBM_BYTES", "ICI_BW", "PEAK_FLOPS_BF16",
+    "make_mesh_from", "make_production_mesh",
+]

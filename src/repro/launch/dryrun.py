@@ -1,0 +1,394 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks device count on first init.
+# Only the dry-run sees 512 placeholder devices; tests/benches see 1.
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, applicable, batch_specs, get_arch
+from repro.configs.shapes import ShapeSpec
+from repro.launch import sharding as sh
+from repro.launch.hlo_analysis import (
+    analytic_hbm_bytes, collective_bytes, roofline_terms,
+)
+from repro.launch.mesh import (
+    HBM_BW, HBM_BYTES, ICI_BW, PEAK_FLOPS_BF16,
+    make_mesh_from, make_production_mesh,
+)
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models.config import ModelConfig
+from repro.models.shardctx import activation_sharding
+from repro.models.transformer import init_decode_cache, init_params
+from repro.optim import AdamWConfig, init_opt_state
+
+
+def _abstract(tree, shardings):
+    return jax.tree_util.tree_map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings,
+    )
+
+
+def _moment_dtype(cfg: ModelConfig) -> str:
+    # bf16 moments for the memory-bound giant (fits 16 GiB/chip; DESIGN §6).
+    return "bfloat16" if cfg.name.startswith("nemotron") else "float32"
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, *, multi_pod: bool,
+               strategy: str = "seq"):
+    """Build abstract inputs + jit the right step; returns lowered."""
+    with activation_sharding(
+        sh.activation_rules(cfg, shape, mesh, multi_pod=multi_pod,
+                            strategy=strategy)
+    ):
+        return _lower_cell_inner(cfg, shape, mesh, multi_pod=multi_pod)
+
+
+def _lower_cell_inner(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+                      multi_pod: bool):
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = axis_sizes.get("model", 1)
+    params_shape = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    raw_pspec = (
+        sh.param_specs_decode(cfg, tp=tp) if shape.kind == "decode"
+        else sh.param_specs(cfg, tp=tp)
+    )
+    pspec = sh.sanitize_specs(raw_pspec, params_shape, axis_sizes)
+    pshard = sh.to_shardings(mesh, pspec)
+    params_abs = _abstract(params_shape, pshard)
+
+    n_dev = int(mesh.devices.size)
+    bspec_tree = batch_specs(cfg, shape, with_labels=(shape.kind == "train"))
+    bpspec = sh.sanitize_specs(
+        sh.batch_pspecs(cfg, shape, multi_pod=multi_pod,
+                        with_labels=(shape.kind == "train"), n_dev=n_dev),
+        bspec_tree, axis_sizes,
+    )
+    bshard = sh.to_shardings(mesh, bpspec)
+    batch_abs = _abstract(bspec_tree, bshard)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype=_moment_dtype(cfg))
+        ospec = sh.opt_specs(pspec)
+        oshard = sh.to_shardings(mesh, ospec)
+        opt_shape = jax.eval_shape(
+            lambda: init_opt_state(params_shape, opt_cfg)
+        )
+        opt_abs = _abstract(opt_shape, oshard)
+        step = make_train_step(cfg, opt_cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        bdim = sh.dp_axes(multi_pod) if shape.global_batch >= 16 else None
+        dp_total = n_dev // tp
+        out_shard = NamedSharding(
+            mesh, P(bdim, "model" if cfg.vocab % tp == 0 else None),
+        )
+        jitted = jax.jit(
+            step, in_shardings=(pshard, bshard), out_shardings=out_shard,
+        )
+        lowered = jitted.lower(params_abs, batch_abs)
+    else:  # decode
+        cache_shape = jax.eval_shape(
+            lambda: init_decode_cache(cfg, shape.global_batch, shape.seq_len)
+        )
+        cpspec = sh.sanitize_specs(
+            sh.cache_pspecs(cfg, shape, multi_pod=multi_pod),
+            cache_shape, axis_sizes,
+        )
+        cshard = sh.to_shardings(mesh, cpspec)
+        cache_abs = _abstract(cache_shape, cshard)
+        step = make_serve_step(cfg)
+        tok_shard = NamedSharding(mesh, P(None))  # [B] tokens: tiny, replicated
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, bshard, cshard),
+            out_shardings=(tok_shard, cshard),
+            donate_argnums=(2,),
+        )
+        lowered = jitted.lower(params_abs, batch_abs, cache_abs)
+    return lowered
+
+
+def _measure(cfg: ModelConfig, shape: ShapeSpec, mesh, multi_pod: bool,
+             strategy: str = "seq"):
+    """(flops, bytes, coll_bytes) per device for one lowered+compiled step."""
+    lowered = lower_cell(cfg, shape, mesh, multi_pod=multi_pod,
+                         strategy=strategy)
+    compiled = lowered.compile()
+    c = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    import numpy as _np
+
+    return _np.array([
+        float(c.get("flops", 0.0)),
+        float(c.get("bytes accessed", 0.0)),
+        float(sum(v for k, v in coll.items() if not k.startswith("n_"))),
+    ])
+
+
+PROBE_S = (2048, 4096, 8192)
+
+
+def corrected_metrics(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                      multi_pod: bool, strategy: str = "seq"):
+    """XLA's HloCostAnalysis counts a while-loop (layer scan, blockwise-attn
+    KV scan, SSD chunk scan) body ONCE, so the full-depth compile undercounts
+    flops/bytes/collectives.  Correction: probe small fully-UNROLLED models —
+    L in {1,2} x S in {2048,4096,8192} — and extrapolate
+
+        total(L, S) = base(S) + L * per_layer(S)
+
+    with per_layer(S) an exact quadratic fit (attention is quadratic in S;
+    everything else linear, so the degree-2 polynomial through 3 points is
+    the true law) and base(S) linear.  Decode shapes have no S-dependent
+    inner scans, so they probe L in {1,2} directly at the target cache
+    length.  Hybrids (global-attn layers among SWA layers) get an extra
+    probe family to price the two layer kinds separately."""
+    from dataclasses import replace
+    import numpy as np
+
+    hybrid = cfg.attn == "swa" and bool(cfg.global_attn_layers)
+    n_g = len(cfg.global_attn_layers) if hybrid else 0
+    n_s = cfg.n_layers - n_g
+
+    def probe(n_layers, global_layers, seq=None):
+        cfg_p = replace(
+            cfg, n_layers=n_layers, global_attn_layers=global_layers,
+            scan_unroll=True,
+        )
+        sp = shape if seq is None else ShapeSpec(
+            shape.name, shape.kind, seq, shape.global_batch
+        )
+        return _measure(cfg_p, sp, mesh, multi_pod, strategy)
+
+    if shape.kind == "decode":
+        m1 = probe(1, (0,) if hybrid and 0 in cfg.global_attn_layers else ())
+        if hybrid:
+            s1 = probe(1, ())
+            s2 = probe(2, ())
+            per_swa = s2 - s1
+            base = s1 - per_swa
+            g1 = probe(1, (0,))
+            per_g = g1 - base
+            tot = base + n_s * per_swa + n_g * per_g
+        else:
+            m1 = probe(1, ())
+            m2 = probe(2, ())
+            per = m2 - m1
+            tot = m1 + (cfg.n_layers - 1) * per
+    else:
+        # Train/prefill: blockwise attention computes every KV block (the
+        # mask is elementwise), so global vs SWA layers cost the SAME — one
+        # probe family suffices even for hybrids.  (Decode differs: cache
+        # sizes diverge; handled above.)
+        Ss = np.array(PROBE_S, dtype=float)
+        pers, bases = [], []
+        for S in PROBE_S:
+            m1 = probe(1, (), seq=S)
+            m2 = probe(2, (), seq=S)
+            per = m2 - m1
+            pers.append(per)
+            bases.append(m1 - per)
+        St = float(shape.seq_len)
+        tot = np.zeros(3)
+        for i in range(3):   # flops, bytes, coll_bytes
+            per_poly = np.polyfit(Ss, [p[i] for p in pers], 2)
+            base_lin = np.polyfit(Ss, [b[i] for b in bases], 1)
+            per_t = float(np.polyval(per_poly, St))
+            base_t = float(np.polyval(base_lin, St))
+            tot[i] = base_t + cfg.n_layers * per_t
+    return {
+        "flops": float(max(tot[0], 0.0)),
+        "bytes": float(max(tot[1], 0.0)),
+        "coll_bytes": float(max(tot[2], 0.0)),
+    }
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    n_act = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.global_batch * shape.seq_len
+    return 2.0 * n_act * shape.global_batch   # decode: 1 token per sequence
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_tag: str, *,
+             multi_pod: bool, out_dir: Path, probes: bool = True,
+             strategy: str = "seq", remat: bool = True) -> dict:
+    cfg = get_arch(arch)
+    if not remat:
+        from dataclasses import replace as _replace
+
+        cfg = _replace(cfg, remat=False)
+    shape = SHAPES[shape_name]
+    ok, skip = applicable(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "multi_pod": multi_pod,
+        "n_devices": int(mesh.devices.size),
+    }
+    if not ok:
+        rec.update(status="skipped", skip_reason=skip)
+        return rec
+    t0 = time.time()
+    lowered = lower_cell(cfg, shape, mesh, multi_pod=multi_pod,
+                         strategy=strategy)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    if probes:
+        corr = corrected_metrics(cfg, shape, mesh, multi_pod, strategy)
+        flops_dev = corr["flops"]
+        bytes_dev = corr["bytes"]
+        coll_dev = corr["coll_bytes"]
+        rec["raw_uncorrected"] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+        }
+    else:
+        flops_dev = float(cost.get("flops", 0.0))
+        bytes_dev = float(cost.get("bytes accessed", 0.0))
+        coll_dev = float(
+            sum(v for k, v in coll.items() if not k.startswith("n_"))
+        )
+    n_dev = int(mesh.devices.size)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = axis_sizes.get("model", 1)
+    dp = n_dev // tp
+    analytic_bytes = analytic_hbm_bytes(cfg, shape, n_dev, tp, dp)
+    terms = roofline_terms(
+        flops_dev, bytes_dev, coll_dev,
+        peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW, ici_bw=ICI_BW,
+        analytic_bytes_per_device=analytic_bytes,
+    )
+    mflops = model_flops(cfg, shape)
+    hlo_total = flops_dev * n_dev
+    peak_bytes = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                  - mem.alias_size_in_bytes + mem.temp_size_in_bytes)
+    rec.update(
+        status="ok",
+        lower_s=round(t1 - t0, 2),
+        compile_s=round(t2 - t1, 2),
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        analytic_bytes_per_device=analytic_bytes,
+        collective_bytes_per_device=coll_dev,
+        collectives=coll,
+        memory={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_est": peak_bytes,
+            "fits_16GiB": bool(peak_bytes < HBM_BYTES),
+        },
+        terms=terms,
+        model_flops_total=mflops,
+        hlo_flops_total=hlo_total,
+        useful_flops_ratio=(mflops / hlo_total if hlo_total else 0.0),
+        roofline_fraction=(
+            (mflops / n_dev / PEAK_FLOPS_BF16) / terms["bound_step_s"]
+            if terms["bound_step_s"] > 0 else 0.0
+        ),
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="CURP framework multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="16x16",
+                    help="16x16 | 2x16x16 | RxC (test meshes)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default=None, help="variant tag for perf runs")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip the scan-correction probe compiles")
+    ap.add_argument("--strategy", default="seq", choices=["seq", "tp", "moe_ep", "hp"],
+                    help="activation sharding strategy (perf iterations)")
+    ap.add_argument("--no-remat", action="store_true",
+                    help="disable activation checkpointing (perf iterations)")
+    args = ap.parse_args()
+
+    dims = tuple(int(x) for x in args.mesh.split("x"))
+    multi_pod = len(dims) == 3
+    if dims == (16, 16):
+        mesh = make_production_mesh(multi_pod=False)
+    elif dims == (2, 16, 16):
+        mesh = make_production_mesh(multi_pod=True)
+    else:
+        axes = ("pod", "data", "model")[-len(dims):]
+        mesh = make_mesh_from(dims, axes)
+    mesh_tag = args.mesh if args.tag is None else f"{args.mesh}+{args.tag}"
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+
+    for arch in archs:
+        for shape_name in shapes:
+            fname = out_dir / f"{arch}__{shape_name}__{mesh_tag}.json".replace(
+                "/", "_"
+            )
+            if args.skip_existing and fname.exists():
+                print(f"[skip-existing] {fname.name}")
+                continue
+            try:
+                rec = run_cell(arch, shape_name, mesh, mesh_tag,
+                               multi_pod=multi_pod, out_dir=out_dir,
+                               probes=not args.no_probes,
+                               strategy=args.strategy,
+                               remat=not args.no_remat)
+            except Exception as e:  # a cell failure is a bug — record it
+                rec = {
+                    "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                    "status": "error", "error": repr(e),
+                    "traceback": traceback.format_exc()[-2000:],
+                }
+            fname.write_text(json.dumps(rec, indent=1))
+            s = rec.get("status")
+            if s == "ok":
+                t = rec["terms"]
+                print(
+                    f"[{arch} x {shape_name} x {mesh_tag}] OK "
+                    f"compile={rec['compile_s']}s "
+                    f"compute={t['compute_s']*1e3:.1f}ms "
+                    f"mem={t['memory_s']*1e3:.1f}ms "
+                    f"coll={t['collective_s']*1e3:.1f}ms "
+                    f"dom={t['dominant']} "
+                    f"roofline={rec['roofline_fraction']:.2f} "
+                    f"fits={rec['memory']['fits_16GiB']}",
+                    flush=True,
+                )
+            elif s == "skipped":
+                print(f"[{arch} x {shape_name}] SKIP: {rec['skip_reason']}",
+                      flush=True)
+            else:
+                print(f"[{arch} x {shape_name} x {mesh_tag}] ERROR: "
+                      f"{rec['error']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

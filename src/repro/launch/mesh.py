@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (TPU v5e pod slice);
+multi-pod: 2x16x16 = 512 chips with a leading "pod" data-parallel axis over
+the inter-pod DCI links.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_mesh_from(shape, axes):
+    """Arbitrary mesh over a device-subset (test/small dry-runs)."""
+    n = int(np.prod(shape))
+    devs = np.array(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+# TPU v5e hardware constants (roofline denominators; see EXPERIMENTS.md).
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~per chip effective)
+HBM_BYTES = 16 * 2**30          # 16 GiB per chip

@@ -1,0 +1,337 @@
+"""Sharding rules: 2-D FSDP("data") x TP("model"), pod-DP on batch.
+
+Parameters shard (data, model) jointly — ZeRO-3 over "data" (XLA inserts the
+gather at use) and tensor-parallel over "model" (heads / d_ff / experts).
+Head dims that don't divide the model axis stay replicated on that axis
+(smollm 15H, hymba 25H, deepseek 56H, qwen2-vl 12H — noted in DESIGN.md §6);
+their FSDP sharding still applies.  Optimizer moments reuse the param specs.
+
+All functions return pytrees of PartitionSpec matching the param/batch/cache
+trees produced by repro.models.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import segments
+from repro.configs.shapes import ShapeSpec
+
+
+def dp_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _div(n: int, by: int) -> bool:
+    return n % by == 0
+
+
+def param_specs(cfg: ModelConfig, *, tp: int = 16) -> Dict[str, Any]:
+    """PartitionSpec pytree congruent with init_params(cfg)."""
+    d, dh = cfg.d_model, cfg.d_head
+    heads_tp = "model" if _div(cfg.n_heads * dh, tp) else None
+    kv_tp = "model" if _div(cfg.n_kv_heads * dh, tp) else None
+
+    attn = {
+        "wq": P(None, "data", heads_tp),
+        "wk": P(None, "data", kv_tp),
+        "wv": P(None, "data", kv_tp),
+        "wo": P(None, heads_tp, "data"),
+    }
+    if cfg.qk_norm:
+        attn["q_norm"] = P(None, None)
+        attn["k_norm"] = P(None, None)
+
+    layers: Dict[str, Any] = {"norm1": P(None, None)}
+    if cfg.has_attn:
+        layers["attn"] = attn
+    if cfg.ssm:
+        di_tp = "model" if _div(cfg.ssm_d_inner, tp) else None
+        layers["ssm"] = {
+            "in_proj": P(None, "data", None),
+            "conv_w": P(None, None, None),
+            "conv_b": P(None, None),
+            "A_log": P(None, None),
+            "D": P(None, None),
+            "dt_bias": P(None, None),
+            "ssm_norm": P(None, None),
+            "out_proj": P(None, di_tp, "data"),
+        }
+    if cfg.has_moe:
+        layers["norm2"] = P(None, None)
+        if _div(cfg.n_experts, tp):
+            # expert parallelism over "model"
+            moe = {
+                "router": P(None, "data", None),
+                "w_gate": P(None, "model", "data", None),
+                "w_up": P(None, "model", "data", None),
+                "w_down": P(None, "model", None, "data"),
+            }
+        else:
+            # uneven expert count (e.g. 60): TP inside each expert's FFN
+            moe = {
+                "router": P(None, "data", None),
+                "w_gate": P(None, None, "data", "model"),
+                "w_up": P(None, None, "data", "model"),
+                "w_down": P(None, None, "model", "data"),
+            }
+        if cfg.n_shared_experts:
+            sff_tp = "model" if _div(cfg.shared_d_ff, tp) else None
+            moe["shared"] = {
+                "w_gate": P(None, "data", sff_tp),
+                "w_up": P(None, "data", sff_tp),
+                "w_down": P(None, sff_tp, "data"),
+            }
+        layers["moe"] = moe
+    elif cfg.has_dense_mlp:
+        ff_tp = "model" if _div(cfg.d_ff, tp) else None
+        layers["norm2"] = P(None, None)
+        mlp = {
+            "w_up": P(None, "data", ff_tp),
+            "w_down": P(None, ff_tp, "data"),
+        }
+        if cfg.act == "swiglu":
+            mlp["w_gate"] = P(None, "data", ff_tp)
+        layers["mlp"] = mlp
+
+    out: Dict[str, Any] = {
+        "embed": P("model", "data"),
+        "layers": layers,
+        "final_norm": P(None),
+    }
+    if cfg.frontend != "token":
+        out["frontend_proj"] = P(None, "data")
+    if not cfg.tie_embeddings:
+        out["lm_head"] = P("data", "model")
+    return out
+
+
+def param_specs_decode(cfg: ModelConfig, *, tp: int = 16) -> Dict[str, Any]:
+    """Weight-stationary 2-D TP for serve_step: every weight matrix shards
+    (in -> "data", out -> "model").  Each chip then computes its [D/dp x
+    F/tp] tile per matmul (x is gathered — tiny at S=1 — and partial sums
+    psum over "data"), so NO weight ever moves: decode stops re-gathering
+    the full parameter set every token (66 GB/step for deepseek-33b under
+    the training specs; the measured fix is in EXPERIMENTS §Perf)."""
+    base = param_specs(cfg, tp=tp)
+
+    # Models whose bf16 weights fit 16-way sharded (<8 GiB/chip) drop the
+    # "data"-axis FSDP entirely at decode: zero weight collectives per token.
+    # The giants (nemotron) keep 2-D tiles ([D/dp x F/tp] per chip).
+    small = cfg.n_params() * 2 / tp < 8e9
+    in_axis = None if small else "data"
+
+    def flip(spec_tree):
+        def fix(s: P) -> P:
+            ent = list(s)
+            if len(ent) == 3:        # stacked [L, in, out]
+                return P(None, in_axis, "model")
+            # 4-dim (MoE experts) are already expert-stationary: keep.
+            return s
+        return jax.tree_util.tree_map(
+            fix, spec_tree, is_leaf=lambda x: isinstance(x, P)
+        )
+
+    out = flip(base)
+    out["embed"] = P("model", "data")
+    if not cfg.tie_embeddings:
+        out["lm_head"] = P("data", "model")
+    return out
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeSpec, *, multi_pod: bool,
+                 with_labels: bool, n_dev: int = 256) -> Dict[str, P]:
+    dp = dp_axes(multi_pod)
+    specs: Dict[str, P] = {}
+    # long_500k has global_batch=1: can't shard batch; leave it unsharded.
+    bshard = dp if shape.global_batch >= 16 else None
+    if (cfg.ssm and shape.kind != "decode"
+            and shape.global_batch % n_dev == 0):
+        bshard = dp + ("model",)   # match activation_rules' SSM strategy
+    if cfg.frontend == "token":
+        specs["tokens"] = P(bshard, None)
+    else:
+        specs["embeds"] = P(bshard, None, None)
+    if cfg.pos == "mrope":
+        specs["positions"] = P(None, bshard, None)
+    if with_labels:
+        specs["labels"] = P(bshard, None)
+    return specs
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeSpec, *, multi_pod: bool):
+    """Decode-cache pytree specs, congruent with init_decode_cache.
+
+    KV caches [n, B, C, Hkv, dh]: batch over the DP axes when it's large
+    enough; the cache length C shards over "model" (each model shard holds a
+    sequence chunk; GSPMD turns softmax/contract over C into partial-reduce +
+    all-reduce).  This is what keeps 32k x 128-batch KV under HBM.
+    """
+    dp = dp_axes(multi_pod)
+    bshard = dp if shape.global_batch >= 16 else None
+    segs = []
+    for kind, s, e in segments(cfg):
+        entry: Dict[str, Any] = {}
+        if cfg.has_attn:
+            entry["k"] = P(None, bshard, "model", None, None)
+            entry["v"] = P(None, bshard, "model", None, None)
+        if cfg.ssm:
+            entry["ssm"] = {
+                "state": P(None, bshard, None, None, None),
+                "conv": P(None, bshard, None, None),
+            }
+        segs.append(entry)
+    return {"pos": P(), "segments": segs}
+
+
+def activation_rules(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+                     multi_pod: bool, strategy: str = "seq") -> Dict[str, Any]:
+    """NamedShardings for models.shardctx.constrain kinds.
+
+    Strategy: "2-D token parallelism" — batch shards over the DP axes,
+    SEQUENCE shards over "model".  Every per-token op (projections, MLPs,
+    norms, logits, loss) then splits over all 256 chips regardless of head
+    counts (15/25/56-head configs don't divide 16).  Attention q-blocks are
+    sequence-sharded too; K/V are gathered per layer (the all-gathers show up
+    honestly in the collective roofline term).  MoE expert buffers shard over
+    "model" (EP); decode steps (S=1) shard batch only and lean on the
+    C-sharded KV cache.
+    """
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = axis_sizes.get("model", 1)
+    n_dev = 1
+    for v in axis_sizes.values():
+        n_dev *= v
+    dp = dp_axes(multi_pod)
+    b = dp if shape.global_batch >= 16 else None
+    S = 1 if shape.kind == "decode" else shape.seq_len
+    sp = "model" if (S % tp == 0 and S // tp >= 128) else None
+    # SSM recurrences are sequential over chunks: sequence sharding would put
+    # per-step broadcasts on the critical path.  When the global batch covers
+    # the whole mesh, shard batch over BOTH axes instead (fully local
+    # recurrence; attention/MLP local too).
+    if cfg.ssm and shape.kind != "decode" and shape.global_batch % n_dev == 0:
+        b = dp + ("model",)
+        sp = None
+    # Decode: per-token activations are tiny ([B,1,D]); REPLICATE them so the
+    # 2-D weight-stationary decode specs never force a weight gather — only
+    # x-gathers and [B, F/tp] partial-sum psums move (MBs, not the 10s of GB
+    # of re-gathered weights).  The KV cache keeps its (batch x cache-len)
+    # sharding separately (cache_pspecs).
+    if shape.kind == "decode":
+        b = None
+    # §Perf "tp" strategy (archs whose heads AND d_ff divide the model axis):
+    # weights stay model-sharded at use (Megatron TP) — the ZeRO gather only
+    # spans "data" (16x less weight traffic); activations pay [B,S,D] psums.
+    if strategy == "tp" and shape.kind != "decode":
+        heads_tp = "model" if _div(cfg.n_heads, tp) else None
+        ff = cfg.d_ff if cfg.has_dense_mlp else 0
+        rules = {
+            # NOTE: a Megatron-SP variant (residual seq-sharded between TP
+            # blocks) was tried and REFUTED: the per-block x re-gather over
+            # "model" costs what the reduce-scatter saves (112.3s vs 75.8s
+            # collective on nemotron train_4k — see EXPERIMENTS §Perf B2).
+            "residual": P(b, None, None),
+            "heads": P(b, None, heads_tp, None),
+            "kv_heads": P(b, None,
+                          "model" if _div(cfg.n_kv_heads, tp) else None, None),
+            "ffn": P(b, None, "model" if ff and _div(ff, tp) else None),
+            "moe": P(b, None, None, None),
+            "moe_buf": P("model" if _div(cfg.n_experts or 1, tp) else None,
+                         None, None),
+            "moe_hidden": P("model" if _div(cfg.n_experts or 1, tp) else None,
+                            None, None),
+            "logits": P(b, None, "model" if _div(cfg.vocab, tp) else None),
+            "ssm_states": P(None, b, None, None, None),
+            "scores5": None,
+        }
+        return {k: NamedSharding(mesh, v) for k, v in rules.items()
+                if v is not None}
+    # expert buffers [E, C, D]: EP over experts when divisible, else shard
+    # the capacity dim (C is rounded to a multiple of 64 in moe.py).
+    if cfg.has_moe and _div(cfg.n_experts, tp):
+        moe_buf = P("model", None, None)
+    else:
+        moe_buf = P(None, "model", None)
+    rules = {
+        "residual": P(b, sp, None),
+        "heads": P(b, sp, None, None),
+        "kv_heads": P(b, None, None, None),   # gathered for attention
+        "ffn": P(b, sp, None),
+        "moe": P(b, sp, None, None),          # dense-dispatch hidden
+        "moe_buf": moe_buf,                   # [E, C, D]
+        "moe_hidden": moe_buf,                # [E, C, F]
+        "logits": P(b, sp, "model" if sp is None and b == dp
+                    and _div(cfg.vocab, tp) else None),
+        # decode attention scores [B, G, rep, 1, C]: keep the cache-length
+        # axis sharded (partial softmax + psum instead of cache all-gather).
+        "scores5": (P(None, None, None, None, "model")
+                    if shape.kind == "decode" else None),
+        # inter-chunk SSD states [c, B, H, P, N]: replicate over "model" so
+        # the sequential recurrence runs locally (one gather, not c
+        # broadcasts) when the sequence is model-sharded.
+        "ssm_states": P(None, b if isinstance(b, tuple) or b is None else b,
+                        None, None, None),
+    }
+    if strategy == "moe_ep" and cfg.has_moe and shape.kind != "decode":
+        # marker: moe_forward switches to the explicit-all-to-all shard_map
+        # dispatch (models/moe.py) when this rule is installed.
+        rules["moe_ep"] = P()
+    if (strategy == "hp" and shape.kind != "decode"
+            and _div(cfg.n_heads, tp) and _div(cfg.n_kv_heads, tp)):
+        # §Perf "hp": head-parallel attention for full-MHA archs (KV heads
+        # divide the mesh).  The residual stays sequence-sharded; entering
+        # attention, q/k/v reshard seq->heads (an all-to-all moving only
+        # local shards, ~8x cheaper than all-gathering full MHA K/V), the
+        # whole attention computes head-parallel with NO KV gather, and the
+        # output reshards back.
+        rules["heads"] = P(b, None, "model", None)
+        rules["kv_heads"] = P(b, None, "model", None)
+    return {
+        k: NamedSharding(mesh, v) for k, v in rules.items() if v is not None
+    }
+
+
+def opt_specs(pspecs) -> Dict[str, Any]:
+    return {
+        "m": pspecs,
+        "v": pspecs,
+        "step": P(),
+    }
+
+
+def sanitize_specs(spec_tree, shape_tree, axis_sizes: Dict[str, int]):
+    """Drop mesh axes from any spec dim that doesn't divide evenly (pjit
+    rejects uneven explicit arg shardings).  E.g. vocab 50280 can't shard
+    16-way; 60 experts can't either — those dims fall back to replicated and
+    an alternative dim carries the parallelism."""
+
+    def fix(spec: P, leaf) -> P:
+        shape = leaf.shape
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        out = []
+        for dim, ent in zip(shape, entries):
+            if ent is None:
+                out.append(None)
+                continue
+            axes = ent if isinstance(ent, tuple) else (ent,)
+            size = 1
+            for a in axes:
+                size *= axis_sizes.get(a, 1)
+            out.append(ent if dim % size == 0 else None)
+        return P(*out)
+
+    return jax.tree_util.tree_map(
+        lambda s, l: fix(s, l), spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,43 @@
+"""Step builders: train_step / prefill_step / serve_step for any arch config.
+
+These are the functions the dry-run lowers and the launchers run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, forward, loss_fn
+from repro.optim import AdamWConfig, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+        new_p, new_o, om = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **aux, **om}
+        return new_p, new_o, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, _ = forward(cfg, params, batch)
+        return logits[:, -1, :].astype(jnp.float32)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, batch, cache):
+        logits, new_cache = decode_step(cfg, params, batch, cache)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    return serve_step

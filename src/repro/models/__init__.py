@@ -1,0 +1,16 @@
+"""repro.models — the unified architecture zoo (pure JAX, no Pallas)."""
+from .config import ModelConfig, reduced
+from .transformer import (
+    decode_step,
+    forward,
+    init_decode_cache,
+    init_params,
+    loss_fn,
+    prefill,
+    segments,
+)
+
+__all__ = [
+    "ModelConfig", "reduced", "decode_step", "forward", "init_decode_cache",
+    "init_params", "loss_fn", "prefill", "segments",
+]

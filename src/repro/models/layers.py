@@ -1,0 +1,368 @@
+"""Shared model layers: norms, RoPE / M-RoPE, GQA attention (full + sliding
+window; train, prefill, and single-token decode), dense MLPs.
+
+Pure functions over parameter dicts; jax.lax only for control flow.  No
+Pallas here by design — the dry-run roofline must reflect real XLA HLO
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .shardctx import constrain, heads_are_tp
+
+
+# ----------------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------------
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+# ----------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ----------------------------------------------------------------------------
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, S, H, dh]; pos: [B, S] int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                      # [dh/2]
+    ang = pos[..., None].astype(jnp.float32) * freqs   # [B, S, dh/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray, pos3: jnp.ndarray, theta: float,
+    sections: Tuple[int, int, int],
+) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.  pos3: [3, B, S] (t/h/w position streams);
+    the dh/2 frequency slots are split into 3 sections, each rotated by its
+    own stream."""
+    dh = x.shape[-1]
+    half = dh // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(dh, theta)                      # [half]
+    # Select per-frequency position stream: [B, S, half]
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=half
+    )
+    pos_sel = jnp.take(pos3, sec_id, axis=0)           # [half, B, S]
+    pos_sel = jnp.moveaxis(pos_sel, 0, -1)             # [B, S, half]
+    ang = pos_sel.astype(jnp.float32) * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _position_embed(cfg: ModelConfig, q, k, positions):
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.pos == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k
+
+
+# ----------------------------------------------------------------------------
+# attention
+# ----------------------------------------------------------------------------
+def _qkv(cfg: ModelConfig, p: Dict, x: jnp.ndarray):
+    B, S, D = x.shape
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, mask) -> jnp.ndarray:
+    """q: [B,S,Hq,dh]; k,v: [B,T,Hkv,dh]; mask: [B,1,S,T] or broadcastable.
+
+    Grouped GQA form (no KV head repeat — the repeat blocks GSPMD from
+    keeping a length-sharded KV cache sharded and forces 1 GB cache
+    all-gathers per decode layer).  The scores constraint keeps the T axis
+    sharded; softmax and the PV contraction then lower to partial reductions
+    + small psums."""
+    B, S, Hq, dh = q.shape
+    T = k.shape[1]
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, rep, dh)
+    scale = 1.0 / math.sqrt(dh)
+    logits = jnp.einsum("bsgrd,btgd->bgrst", qg, k).astype(jnp.float32) * scale
+    logits = constrain(logits, "scores5")            # [B,G,rep,S,T]
+    logits = jnp.where(mask[:, :, None], logits, jnp.float32(-1e30))
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    probs = constrain(probs, "scores5")              # stay T-sharded into PV
+    o = jnp.einsum("bgrst,btgd->bsgrd", probs, v)
+    return o.reshape(B, S, Hq, dh)
+
+
+def make_attn_mask(
+    cfg: ModelConfig, S: int, is_global: bool,
+) -> jnp.ndarray:
+    """[1, 1, S, S] boolean mask for training/prefill."""
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    if cfg.causal:
+        m = j <= i
+    else:
+        m = jnp.ones((S, S), bool)
+    if cfg.attn == "swa" and not is_global:
+        m = m & (j > i - cfg.swa_window)
+    return m[None, None]
+
+
+def _sdpa_blockwise(
+    cfg: ModelConfig, q, k, v, *, is_global: bool, block: int = 512,
+) -> jnp.ndarray:
+    """Flash-style blockwise attention: online softmax over KV blocks.
+
+    Never materializes the S x S score matrix (the peak-VMEM/HBM killer for
+    the 4k/32k cells); GQA is computed grouped (no KV head repeat).  The KV
+    loop is a lax.scan, unrolled when cfg.scan_unroll (cost probes).
+    """
+    B, S, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    # nq = 16 q-blocks so the q-block axis maps 1:1 onto the 16-way "model"
+    # mesh axis (sequence sharding works for ANY head count — see DESIGN §6).
+    if S % 16 == 0 and S // 16 >= 128:
+        qb = S // 16
+    else:
+        qb = min(block, S)
+    kvb = min(block, S)
+    nq, nk = S // qb, S // kvb
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, nq, qb, Hkv, rep, dh)
+    kg = jnp.moveaxis(k.reshape(B, nk, kvb, Hkv, dh), 1, 0)   # [nk,B,kvb,Hkv,dh]
+    vg = jnp.moveaxis(v.reshape(B, nk, kvb, Hkv, dh), 1, 0)
+    q_pos = jnp.arange(S).reshape(nq, qb)                      # [nq, qb]
+
+    acc0 = jnp.zeros((B, nq, qb, Hkv, rep, dh), jnp.float32)
+    m0 = jnp.full((B, nq, qb, Hkv, rep), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, nq, qb, Hkv, rep), jnp.float32)
+
+    def body(carry, inp):
+        acc, m, l = carry
+        kblk, vblk, kidx = inp
+        logits = jnp.einsum(
+            "bnqhrd,bkhd->bnqhrk", qg, kblk
+        ).astype(jnp.float32) * scale                          # [B,nq,qb,H,r,kvb]
+        k_pos = kidx * kvb + jnp.arange(kvb)                   # [kvb]
+        msk = jnp.ones((nq, qb, kvb), bool)
+        if cfg.causal:
+            msk = msk & (k_pos[None, None, :] <= q_pos[:, :, None])
+        if cfg.attn == "swa" and not is_global:
+            msk = msk & (
+                k_pos[None, None, :] > q_pos[:, :, None] - cfg.swa_window
+            )
+        logits = jnp.where(msk[None, :, :, None, None, :], logits, -1e30)
+        blk_max = jnp.max(logits, axis=-1)
+        new_m = jnp.maximum(m, blk_max)
+        alpha = jnp.exp(m - new_m)
+        pexp = jnp.exp(logits - new_m[..., None])
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bnqhrk,bkhd->bnqhrd", pexp.astype(q.dtype), vblk
+        ).astype(jnp.float32)
+        l = l * alpha + jnp.sum(pexp, axis=-1)
+        return (acc, new_m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0),
+        (kg, vg, jnp.arange(nk)),
+        unroll=nk if cfg.scan_unroll else 1,
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, S, Hq, dh).astype(q.dtype)
+
+
+def _sdpa_blockwise_flat(
+    cfg: ModelConfig, q, k, v, *, is_global: bool, block: int = 512,
+) -> jnp.ndarray:
+    """Blockwise attention over FLAT heads (KV expanded to Hq) — the TP
+    layout: Hq divides the model axis even when (G, rep) factors don't.
+    The KV expansion is a local slice of a replicated array under GSPMD."""
+    B, S, Hq, dh = q.shape
+    rep = Hq // k.shape[2]
+    k = constrain(jnp.repeat(k, rep, axis=2), "heads")
+    v = constrain(jnp.repeat(v, rep, axis=2), "heads")
+    qb = min(block, S)
+    kvb = min(block, S)
+    nq, nk = S // qb, S // kvb
+    scale = 1.0 / math.sqrt(dh)
+    qf = q.reshape(B, nq, qb, Hq, dh)
+    kg = jnp.moveaxis(k.reshape(B, nk, kvb, Hq, dh), 1, 0)
+    vg = jnp.moveaxis(v.reshape(B, nk, kvb, Hq, dh), 1, 0)
+    q_pos = jnp.arange(S).reshape(nq, qb)
+
+    acc0 = jnp.zeros((B, nq, qb, Hq, dh), jnp.float32)
+    m0 = jnp.full((B, nq, qb, Hq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, nq, qb, Hq), jnp.float32)
+
+    def body(carry, inp):
+        acc, m, l = carry
+        kblk, vblk, kidx = inp
+        logits = jnp.einsum(
+            "bnqhd,bkhd->bnqhk", qf, kblk
+        ).astype(jnp.float32) * scale
+        k_pos = kidx * kvb + jnp.arange(kvb)
+        msk = jnp.ones((nq, qb, kvb), bool)
+        if cfg.causal:
+            msk = msk & (k_pos[None, None, :] <= q_pos[:, :, None])
+        if cfg.attn == "swa" and not is_global:
+            msk = msk & (
+                k_pos[None, None, :] > q_pos[:, :, None] - cfg.swa_window
+            )
+        logits = jnp.where(msk[None, :, :, None, :], logits, -1e30)
+        blk_max = jnp.max(logits, axis=-1)
+        new_m = jnp.maximum(m, blk_max)
+        alpha = jnp.exp(m - new_m)
+        pexp = jnp.exp(logits - new_m[..., None])
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bnqhk,bkhd->bnqhd", pexp.astype(q.dtype), vblk
+        ).astype(jnp.float32)
+        l = l * alpha + jnp.sum(pexp, axis=-1)
+        return (acc, new_m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0), (kg, vg, jnp.arange(nk)),
+        unroll=nk if cfg.scan_unroll else 1,
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, S, Hq, dh).astype(q.dtype)
+
+
+def attention_train(
+    cfg: ModelConfig, p: Dict, x: jnp.ndarray, positions: jnp.ndarray,
+    is_global: bool | jnp.ndarray,
+) -> jnp.ndarray:
+    B, S, D = x.shape
+    q, k, v = _qkv(cfg, p, x)
+    q, k = _position_embed(cfg, q, k, positions)
+    q = constrain(q, "heads")
+    k = constrain(k, "kv_heads")
+    v = constrain(v, "kv_heads")
+    if S > 1024 and heads_are_tp():
+        assert isinstance(is_global, bool)
+        o = _sdpa_blockwise_flat(cfg, q, k, v, is_global=is_global)
+        o = constrain(o, "heads")
+        return o.reshape(B, S, cfg.n_heads * cfg.d_head) @ p["wo"]
+    if S > 1024:
+        # Blockwise path needs a concrete window flag; mixed swa/global
+        # stacks are segmented by the caller so is_global is always a
+        # Python bool on this path.
+        assert isinstance(is_global, bool)
+        o = _sdpa_blockwise(cfg, q, k, v, is_global=is_global)
+    else:
+        if isinstance(is_global, bool):
+            mask = make_attn_mask(cfg, S, is_global)
+        else:
+            # traced per-layer flag (scan over mixed swa/global layers)
+            m_g = make_attn_mask(cfg, S, True)
+            m_l = make_attn_mask(cfg, S, False)
+            mask = jnp.where(is_global, m_g, m_l)
+        o = _sdpa(cfg, q, k, v, mask)
+    o = constrain(o, "heads")
+    return o.reshape(B, S, cfg.n_heads * cfg.d_head) @ p["wo"]
+
+
+def attention_decode(
+    cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+    kv_cache: Tuple[jnp.ndarray, jnp.ndarray],
+    cur_pos: jnp.ndarray,                     # [B] int32: tokens so far
+    positions: jnp.ndarray,                   # [B, 1] (or [3,B,1] mrope)
+    is_global: bool | jnp.ndarray,
+    active: jnp.ndarray,                      # [B] int32 (0 => don't write)
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Single-token decode with a ring-buffered, PER-SEQUENCE KV cache.
+
+    kv_cache: (k, v) each [B, C, Hkv, dh]; C = full seq_len for global
+    layers, swa_window for windowed layers.  Each sequence writes at its own
+    cur_pos[b] % C (batched scatter); inactive rows scatter out-of-bounds
+    with mode='drop' so their state is untouched.
+    """
+    B, S1, D = x.shape   # S1 == 1
+    kc, vc = kv_cache
+    C = kc.shape[1]
+    q, k, v = _qkv(cfg, p, x)
+    q, k = _position_embed(cfg, q, k, positions)
+    slot = jnp.where(active > 0, cur_pos % C, C).astype(jnp.int32)  # C = OOB
+    bidx = jnp.arange(B)
+    kc = kc.at[bidx, slot].set(k[:, 0].astype(kc.dtype), mode="drop")
+    vc = vc.at[bidx, slot].set(v[:, 0].astype(vc.dtype), mode="drop")
+    # A ring slot t is valid if written (t <= pos) or the ring has wrapped.
+    t = jnp.arange(C)
+    valid = (t[None, :] <= cur_pos[:, None]) | (cur_pos[:, None] >= C)
+    mask = valid[:, None, None, :]              # [B,1,1,C]
+    o = _sdpa(cfg, q, kc, vc, mask)
+    out = o.reshape(B, 1, cfg.n_heads * cfg.d_head) @ p["wo"]
+    return out, (kc, vc)
+
+
+# ----------------------------------------------------------------------------
+# MLP
+# ----------------------------------------------------------------------------
+def mlp(cfg: ModelConfig, p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.act == "swiglu":
+        g = jax.nn.silu(x @ p["w_gate"])
+        u = x @ p["w_up"]
+        h = constrain(g * u, "ffn")
+        return h @ p["w_down"]
+    if cfg.act == "relu2":   # squared ReLU (Nemotron-4 / Primer)
+        h = jax.nn.relu(x @ p["w_up"])
+        h = constrain(h * h, "ffn")
+        return h @ p["w_down"]
+    raise ValueError(cfg.act)
+
+
+# ----------------------------------------------------------------------------
+# parameter init
+# ----------------------------------------------------------------------------
+def init_attn_params(cfg: ModelConfig, key, dtype) -> Dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, hq * dh), dtype) * s,
+        "wk": jax.random.normal(k2, (d, hkv * dh), dtype) * s,
+        "wv": jax.random.normal(k3, (d, hkv * dh), dtype) * s,
+        "wo": jax.random.normal(k4, (hq * dh, d), dtype) * (hq * dh) ** -0.5,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def init_mlp_params(cfg: ModelConfig, key, dtype, d_ff: Optional[int] = None) -> Dict:
+    d = cfg.d_model
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": jax.random.normal(k2, (d, ff), dtype) * d ** -0.5,
+        "w_down": jax.random.normal(k3, (ff, d), dtype) * ff ** -0.5,
+    }
+    if cfg.act == "swiglu":
+        p["w_gate"] = jax.random.normal(k1, (d, ff), dtype) * d ** -0.5
+    return p

@@ -1,0 +1,250 @@
+"""Mixture-of-Experts layer: top-k softmax routing, optional shared experts
+(Qwen-MoE style), dense one-hot dispatch (einsum over the expert axis, which
+shards cleanly over the "model" mesh axis = expert parallelism; GSPMD emits
+the all-to-all-equivalent collectives).
+
+Load-balancing aux loss follows Switch Transformer (fraction-of-tokens x
+mean-router-prob per expert).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import init_mlp_params
+from .shardctx import constrain
+
+
+def init_moe_params(cfg: ModelConfig, key, dtype) -> Dict:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": jax.random.normal(k1, (d, e), dtype) * d ** -0.5,
+        "w_gate": jax.random.normal(k2, (e, d, ff), dtype) * d ** -0.5,
+        "w_up": jax.random.normal(k3, (e, d, ff), dtype) * d ** -0.5,
+        "w_down": jax.random.normal(k4, (e, ff, d), dtype) * ff ** -0.5,
+    }
+    if cfg.n_shared_experts:
+        shared_cfg_ff = cfg.shared_d_ff
+        p["shared"] = init_mlp_params(cfg, k5, dtype, d_ff=shared_cfg_ff)
+    return p
+
+
+def moe_mlp(
+    cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    logits = (x @ p["router"]).astype(jnp.float32)            # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, K)                    # [B,S,K]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)    # renormalize
+
+    # Dense dispatch: combine [B,S,E] = sum_k onehot(top_i_k) * top_p_k
+    onehot = jax.nn.one_hot(top_i, E, dtype=x.dtype)          # [B,S,K,E]
+    combine = jnp.einsum("bske,bsk->bse", onehot, top_p.astype(x.dtype))
+
+    # Expert computation on the full token set (dense einsum over E):
+    #   h_e = act(x @ Wg_e) * (x @ Wu_e);  y_e = h_e @ Wd_e
+    # then weighted-combined.  The E axis shards over "model" (EP); the
+    # dispatch einsums become the a2a-equivalent collectives in HLO.
+    g = jnp.einsum("bsd,edf->bsef", x, p["w_gate"])
+    u = jnp.einsum("bsd,edf->bsef", x, p["w_up"])
+    h = constrain(jax.nn.silu(g) * u, "moe")
+    y = jnp.einsum("bsef,efd->bsed", h, p["w_down"])
+    out = jnp.einsum("bsed,bse->bsd", y, combine)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        sg = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
+        out = out + sg @ sp["w_down"]
+
+    # Switch-style load-balance loss.
+    frac_tokens = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_i, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1),
+    )                                                         # [E]
+    frac_probs = jnp.mean(probs, axis=(0, 1))                 # [E]
+    aux = jnp.sum(frac_tokens * frac_probs) * E
+    return out, aux
+
+
+def moe_mlp_capacity(
+    cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-bounded gather/scatter dispatch (GShard-style; the production
+    path for the large MoE configs).
+
+    Tokens scatter into per-expert buffers of capacity
+    C = ceil(K * N * cf / E) (overflow drops); experts run batched GEMMs over
+    their buffers; results gather back weighted by router probs.  FLOPs stay
+    ~top_k-active (vs E/K-times for dense dispatch); the expert axis shards
+    over "model" (EP), so the scatter/gather become the all-to-all-style
+    collectives in HLO.
+
+    Slot assignment avoids the [N*K, E] cumsum cube: top-k experts per token
+    are DISTINCT, so a token's slot in expert e is just the exclusive-over-
+    tokens running count base_prev[n, e].
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    N = B * S
+    xf = x.reshape(N, D)
+    logits = (xf @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, K)                    # [N, K]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    C = int(max(1, round(K * N * cfg.moe_capacity_factor / E)))
+    C = -(-C // 64) * 64   # round up: capacity dim stays mesh-shardable
+    tok_onehot = jax.nn.one_hot(top_i, E, dtype=jnp.int32).sum(axis=1)  # [N,E]
+    base = jnp.cumsum(tok_onehot, axis=0) - tok_onehot        # exclusive [N,E]
+    slot = jnp.take_along_axis(base, top_i, axis=1)           # [N, K]
+    keep = slot < C
+
+    flat_e = jnp.where(keep, top_i, 0).reshape(-1)            # [N*K]
+    flat_s = jnp.where(keep, slot, 0).reshape(-1)
+    flat_w = jnp.where(keep, top_p, 0.0).reshape(-1)
+    src = jnp.repeat(xf, K, axis=0)                           # [N*K, D]
+    src = jnp.where(keep.reshape(-1)[:, None], src, 0)
+
+    buf = jnp.zeros((E, C, D), x.dtype)
+    buf = buf.at[flat_e, flat_s].add(src.astype(x.dtype))
+    buf = constrain(buf, "moe_buf")
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = constrain(jax.nn.silu(g) * u, "moe_hidden")
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    gathered = y[flat_e, flat_s]                              # [N*K, D]
+    outf = jnp.zeros((N, D), jnp.float32)
+    tok_idx = jnp.repeat(jnp.arange(N), K)
+    outf = outf.at[tok_idx].add(
+        gathered.astype(jnp.float32) * flat_w[:, None]
+    )
+    out = outf.reshape(B, S, D).astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        sg = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
+        out = out + sg @ sp["w_down"]
+
+    frac_tokens = jnp.mean(tok_onehot.astype(jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = jnp.sum(frac_tokens * frac_probs) * E
+    return out, aux
+
+
+def moe_mlp_shardmap(cfg: ModelConfig, p: Dict, x: jnp.ndarray):
+    """Expert-parallel MoE with an EXPLICIT all-to-all (shard_map).
+
+    GSPMD cannot prove locality of the capacity dispatch's data-dependent
+    scatters and falls back to replicating token buffers ("involuntary full
+    rematerialization"), which made qwen3 train_4k 6x collective-bound.
+    Here the routing is done per-shard with plain JAX, and the only
+    cross-device traffic is the tiled lax.all_to_all of the [E, C_l, D]
+    capacity buffers over the "model" axis (plus the ZeRO weight gather over
+    "data").  Differentiable end to end (a2a transposes to a2a).
+
+    Requires the 'moe_ep' marker rule (launch/sharding.py installs it) to
+    know the mesh and the residual activation layout.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from .shardctx import get_rule
+
+    marker = get_rule("moe_ep")
+    res_rule = get_rule("residual")
+    mesh = marker.mesh
+    x_spec = res_rule.spec
+    tp_axis = "model"
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape))[tp_axis]
+    E, K = cfg.n_experts, cfg.top_k
+    assert E % tp == 0, "shard_map EP needs divisible experts"
+    e_local = E // tp
+    data_axes = tuple(a for a in mesh.axis_names if a != tp_axis)
+
+    w_spec3 = P(tp_axis, "data", None)   # [E, D, F] as stored (EP x FSDP)
+    wd_spec = P(tp_axis, None, "data")
+
+    def local_fn(xl, router, wg, wu, wd):
+        # Gather the FSDP'd D-dim of this device's experts (ZeRO-at-use).
+        wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
+        wu = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
+        wd = jax.lax.all_gather(wd, "data", axis=2, tiled=True)
+        router = jax.lax.all_gather(router, "data", axis=0, tiled=True)
+        bl, sl, d = xl.shape
+        n = bl * sl
+        xf = xl.reshape(n, d)
+        logits = (xf @ router).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_i = jax.lax.top_k(probs, K)
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+        C = int(max(8, -(-int(K * n * cfg.moe_capacity_factor / E) // 8) * 8))
+        tok_onehot = jax.nn.one_hot(top_i, E, dtype=jnp.int32).sum(axis=1)
+        base = jnp.cumsum(tok_onehot, axis=0) - tok_onehot
+        slot = jnp.take_along_axis(base, top_i, axis=1)
+        keep = slot < C
+        flat_e = jnp.where(keep, top_i, 0).reshape(-1)
+        flat_s = jnp.where(keep, slot, 0).reshape(-1)
+        flat_w = jnp.where(keep, top_p, 0.0).reshape(-1)
+        src = jnp.repeat(xf, K, axis=0)
+        src = jnp.where(keep.reshape(-1)[:, None], src, 0)
+        buf = jnp.zeros((E, C, d), xl.dtype)
+        buf = buf.at[flat_e, flat_s].add(src.astype(xl.dtype))
+        # all-to-all: send each expert-shard its slice, receive all source
+        # shards' buffers for MY experts: [E, C, D] -> [e_local, tp*C, D].
+        recv = jax.lax.all_to_all(buf, tp_axis, split_axis=0, concat_axis=1,
+                                  tiled=True)
+        g = jnp.einsum("ecd,edf->ecf", recv, wg)
+        u = jnp.einsum("ecd,edf->ecf", recv, wu)
+        y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, wd)
+        # route results back: [e_local, tp*C, D] -> [E, C, D]
+        back = jax.lax.all_to_all(y, tp_axis, split_axis=1, concat_axis=0,
+                                  tiled=True)
+        gathered = back[flat_e, flat_s]
+        outf = jnp.zeros((n, d), jnp.float32)
+        tok_idx = jnp.repeat(jnp.arange(n), K)
+        outf = outf.at[tok_idx].add(
+            gathered.astype(jnp.float32) * flat_w[:, None]
+        )
+        out = outf.reshape(bl, sl, d).astype(xl.dtype)
+        frac_tokens = jnp.mean(tok_onehot.astype(jnp.float32), axis=0)
+        frac_probs = jnp.mean(probs, axis=0)
+        aux = jnp.sum(frac_tokens * frac_probs) * E
+        aux = jax.lax.pmean(aux, mesh.axis_names)
+        return out, aux
+
+    out, aux = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(x_spec, P("data", None), w_spec3, w_spec3, wd_spec),
+        out_specs=(x_spec, P()),
+        check_rep=False,
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        sg = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
+        out = out + sg @ sp["w_down"]
+    return out, aux
+
+
+def moe_forward(cfg: ModelConfig, p: Dict, x: jnp.ndarray):
+    from .shardctx import get_rule
+
+    if (cfg.moe_dispatch == "capacity" and get_rule("moe_ep") is not None
+            and cfg.n_experts and get_rule("residual") is not None):
+        try:
+            tp = dict(zip(get_rule("moe_ep").mesh.axis_names,
+                          get_rule("moe_ep").mesh.devices.shape))["model"]
+        except Exception:
+            tp = 0
+        if tp and cfg.n_experts % tp == 0:
+            return moe_mlp_shardmap(cfg, p, x)
+    if cfg.moe_dispatch == "capacity":
+        return moe_mlp_capacity(cfg, p, x)
+    return moe_mlp(cfg, p, x)

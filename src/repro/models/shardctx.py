@@ -1,0 +1,64 @@
+"""Activation-sharding context.
+
+Model code stays mesh-agnostic: layers call ``constrain(x, kind)`` at the
+boundaries that matter (residual stream, attention heads, FFN hidden, MoE
+expert dim, logits).  Launchers/dry-run install concrete NamedShardings for
+each kind before tracing; with no rules installed every call is a no-op
+(smoke tests on 1 device).
+
+Kinds:
+  residual    [B, S, D]
+  heads       [B, S, H, dh]
+  ffn         [B, S, F]
+  moe         [B, S, E, F]
+  logits      [B, S, V]
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Dict, Optional
+
+import jax
+
+_RULES: Dict[str, object] = {}
+
+
+@contextmanager
+def activation_sharding(rules: Dict[str, object]):
+    global _RULES
+    old = _RULES
+    _RULES = dict(rules)
+    try:
+        yield
+    finally:
+        _RULES = old
+
+
+def constrain(x, kind: str):
+    s = _RULES.get(kind)
+    if s is None:
+        return x
+    try:
+        if x.ndim != len(s.spec):
+            return x
+    except AttributeError:
+        pass
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def get_rule(kind: str):
+    """Inspect the installed rule (layers pick TP vs sequence-parallel
+    attention layouts from it)."""
+    return _RULES.get(kind)
+
+
+def heads_are_tp() -> bool:
+    """True iff the 'heads' rule shards the head dim (dim 2 of [B,S,H,dh])."""
+    r = _RULES.get("heads")
+    if r is None:
+        return False
+    try:
+        spec = r.spec
+        return len(spec) >= 3 and spec[2] is not None
+    except AttributeError:
+        return False

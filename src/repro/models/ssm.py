@@ -1,0 +1,209 @@
+"""Mamba2 / SSD (state-space duality, arXiv:2405.21060) — chunked training
+scan + single-token recurrent decode.
+
+Implements the "minimal SSD" algorithm (paper Listing 1): intra-chunk
+quadratic (duality with masked attention) + inter-chunk recurrent state pass.
+Chunk length is cfg.ssm_chunk; matmul dims stay MXU-friendly (head dim P and
+state N are multiples of 8/16 in all assigned configs).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .shardctx import constrain
+
+
+def segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """[..., q] -> [..., q, q] lower-triangular segment sums."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(
+    X: jnp.ndarray,       # [B, L, H, P]   (already multiplied by dt)
+    A: jnp.ndarray,       # [B, L, H]      (dt * A, negative)
+    Bm: jnp.ndarray,      # [B, L, G, N]
+    Cm: jnp.ndarray,      # [B, L, G, N]
+    chunk: int,
+    init_state: jnp.ndarray | None = None,   # [B, H, P, N]
+    unroll: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (Y [B, L, H, P], final_state [B, H, P, N])."""
+    b, l, h, p = X.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    c = l // chunk
+    rep = h // g
+    X = X.reshape(b, c, chunk, h, p)
+    A = A.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)      # [b,h,c,q]
+    Bm = jnp.repeat(Bm.reshape(b, c, chunk, g, n), rep, axis=3)
+    Cm = jnp.repeat(Cm.reshape(b, c, chunk, g, n), rep, axis=3)
+
+    A = A.astype(jnp.float32)
+    A_cs = jnp.cumsum(A, axis=-1)                            # [b,h,c,q]
+
+    # 1. intra-chunk (diagonal blocks): quadratic "attention" form
+    L = jnp.exp(segsum(A))                                   # [b,h,c,q,q]
+    Y_diag = jnp.einsum(
+        "bcshn,bczhn,bhcsz,bczhp->bcshp",
+        Cm, Bm, L.astype(Cm.dtype), X,
+    )
+
+    # 2. chunk-final states
+    decay_states = jnp.exp(A_cs[..., -1:] - A_cs)            # [b,h,c,q]
+    states = jnp.einsum(
+        "bczhn,bhcz,bczhp->bchpn", Bm,
+        decay_states.astype(Bm.dtype), X,
+    )                                                        # [b,c,h,p,n]
+
+    # 3. inter-chunk recurrence over chunk-final states
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), states.dtype)
+    chunk_decay = jnp.exp(A_cs[..., -1])                     # [b,h,c]
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                        # [b,h,p,n], [b,h]
+        new = carry * dec[..., None, None].astype(carry.dtype) + st
+        return new, carry                                    # emit PRE-state
+
+    states_t = jnp.moveaxis(states, 1, 0)                    # [c,b,h,p,n]
+    # The inter-chunk recurrence is sequential: keep its inputs replicated
+    # over any sequence-sharding axis (one gather beats c broadcasts).
+    states_t = constrain(states_t, "ssm_states")
+    decay_t = jnp.moveaxis(chunk_decay, 2, 0)                # [c,b,h]
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init_state, (states_t, decay_t),
+        unroll=(states_t.shape[0] if unroll else 1),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # [b,c,h,p,n]
+
+    # 4. state -> output within each chunk
+    state_decay = jnp.exp(A_cs)                              # [b,h,c,q]
+    Y_off = jnp.einsum(
+        "bcshn,bchpn,bhcs->bcshp",
+        Cm, prev_states, state_decay.astype(Cm.dtype),
+    )
+    Y = (Y_diag + Y_off).reshape(b, l, h, p)
+    return Y, final_state
+
+
+def init_ssm_params(cfg: ModelConfig, key, dtype) -> Dict:
+    d = cfg.d_model
+    di, g, N, h = cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = cfg.ssm_conv_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    in_dim = 2 * di + 2 * g * N + h    # z, x, B, C, dt
+    return {
+        "in_proj": jax.random.normal(k1, (d, in_dim), dtype) * d ** -0.5,
+        "conv_w": jax.random.normal(k2, (cfg.ssm_conv, conv_dim), dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dtype),
+        "D": jnp.ones((h,), dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "ssm_norm": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(k4, (di, d), dtype) * di ** -0.5,
+    }
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    di, g, N, h = cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z, xBC, dt = jnp.split(zxbcdt, [di, di + cfg.ssm_conv_dim], axis=-1)
+    return z, xBC, dt
+
+
+def _gated_rmsnorm(x, z, w, eps):
+    x = x * jax.nn.silu(z)
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def ssm_train(cfg: ModelConfig, p: Dict, u: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence Mamba2 mixer: u [B, L, D] -> [B, L, D]."""
+    B, L, D = u.shape
+    di, g, N, h = cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    zxbcdt = u @ p["in_proj"]
+    z, xBC, dt = _split_in_proj(cfg, zxbcdt)
+
+    # causal depthwise conv over time (kernel k)
+    k = cfg.ssm_conv
+    pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(
+        pad[:, i:i + L, :] * p["conv_w"][i][None, None, :] for i in range(k)
+    ) + p["conv_b"]
+    xBC = jax.nn.silu(conv)
+
+    x, Bm, Cm = jnp.split(xBC, [di, di + g * N], axis=-1)
+    x = x.reshape(B, L, h, P)
+    Bm = Bm.reshape(B, L, g, N)
+    Cm = Cm.reshape(B, L, g, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # [h]
+    Y, _ = ssd_chunked(
+        (x * dt[..., None].astype(x.dtype)),
+        dt * A,                                              # [B,L,h]
+        Bm, Cm, cfg.ssm_chunk,
+        unroll=cfg.scan_unroll,
+    )
+    Y = Y + x * p["D"][None, None, :, None]
+    y = _gated_rmsnorm(Y.reshape(B, L, di), z, p["ssm_norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    return {
+        "state": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype
+        ),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.ssm_conv_dim), dtype),
+    }
+
+
+def ssm_decode(
+    cfg: ModelConfig, p: Dict, u: jnp.ndarray, cache: Dict,
+    active: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Single-token recurrent step: u [B, 1, D].  Rows with active==0 keep
+    their state unchanged (mixed-length serving batches)."""
+    B = u.shape[0]
+    di, g, N, h = cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    zxbcdt = u[:, 0, :] @ p["in_proj"]
+    z, xBC, dt = _split_in_proj(cfg, zxbcdt[:, None, :])
+    z, xBC, dt = z[:, 0], xBC[:, 0], dt[:, 0]
+
+    # rolling conv buffer
+    win = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)  # [B,k,cd]
+    conv = jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"]
+    new_conv = win[:, 1:, :]
+    xBC = jax.nn.silu(conv)
+
+    x, Bm, Cm = jnp.split(xBC, [di, di + g * N], axis=-1)
+    x = x.reshape(B, h, P)
+    Bm = jnp.repeat(Bm.reshape(B, g, N), h // g, axis=1)     # [B,h,N]
+    Cm = jnp.repeat(Cm.reshape(B, g, N), h // g, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                     # [B,h]
+    st = cache["state"]
+    st = st * dA[..., None, None].astype(st.dtype) + jnp.einsum(
+        "bhp,bhn->bhpn", (x * dt[..., None].astype(x.dtype)), Bm
+    ).astype(st.dtype)
+    y = jnp.einsum("bhpn,bhn->bhp", st, Cm)
+    y = y + x * p["D"][None, :, None]
+    y = _gated_rmsnorm(y.reshape(B, di), z, p["ssm_norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    if active is not None:
+        keep = (active > 0)
+        st = jnp.where(keep[:, None, None, None], st, cache["state"])
+        new_conv = jnp.where(keep[:, None, None], new_conv, cache["conv"])
+    return out, {"state": st, "conv": new_conv}

@@ -1,0 +1,335 @@
+"""Unified model: one code path drives all 10 assigned architectures.
+
+Layer stacking uses jax.lax.scan over STACKED per-layer params (compact HLO —
+essential for 96-layer configs and 1-core CPU compiles; also what you want on
+a real pod for compile time).  Models with a few "special" layers (Hymba's 3
+global-attention layers among sliding-window layers) are segmented:
+
+    [single 0] [scan 1..14] [single 15] [scan 16..30] [single 31]
+
+so every scan segment is homogeneous and decode caches stay tight (window-
+sized KV for SWA layers, full-length KV only for the global layers).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (
+    attention_decode,
+    attention_train,
+    init_attn_params,
+    init_mlp_params,
+    mlp,
+    rmsnorm,
+)
+from .moe import init_moe_params, moe_forward
+from .shardctx import constrain
+from .ssm import init_ssm_cache, init_ssm_params, ssm_decode, ssm_train
+
+
+# ----------------------------------------------------------------------------
+# segmentation
+# ----------------------------------------------------------------------------
+def segments(cfg: ModelConfig) -> List[Tuple[str, int, int]]:
+    """[("scan"|"single", start, end)] covering 0..n_layers in order."""
+    if cfg.attn != "swa" or not cfg.global_attn_layers:
+        return [("scan", 0, cfg.n_layers)]
+    segs: List[Tuple[str, int, int]] = []
+    cur = 0
+    for g in sorted(cfg.global_attn_layers):
+        if g > cur:
+            segs.append(("scan", cur, g))
+        segs.append(("single", g, g + 1))
+        cur = g + 1
+    if cur < cfg.n_layers:
+        segs.append(("scan", cur, cfg.n_layers))
+    return segs
+
+
+def _slice_layers(layer_params, start: int, end: int):
+    return jax.tree_util.tree_map(lambda a: a[start:end], layer_params)
+
+
+def _layer(layer_params, i: int):
+    return jax.tree_util.tree_map(lambda a: a[i], layer_params)
+
+
+# ----------------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------------
+def _init_block_params(cfg: ModelConfig, key, dtype) -> Dict:
+    keys = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.has_attn:
+        p["attn"] = init_attn_params(cfg, keys[0], dtype)
+    if cfg.ssm:
+        p["ssm"] = init_ssm_params(cfg, keys[1], dtype)
+    if cfg.has_moe:
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        p["moe"] = init_moe_params(cfg, keys[2], dtype)
+    elif cfg.has_dense_mlp:
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        p["mlp"] = init_mlp_params(cfg, keys[3], dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    dtype = jnp.dtype(cfg.dtype)
+    k_emb, k_layers, k_head, k_fe = jax.random.split(key, 4)
+    params: Dict[str, Any] = {}
+    if cfg.frontend == "token":
+        params["embed"] = (
+            jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), dtype)
+            * cfg.d_model ** -0.5
+        )
+    else:
+        fd = cfg.frontend_dim or cfg.d_model
+        params["frontend_proj"] = (
+            jax.random.normal(k_fe, (fd, cfg.d_model), dtype) * fd ** -0.5
+        )
+        params["embed"] = (
+            jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), dtype)
+            * cfg.d_model ** -0.5
+        )
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params["layers"] = jax.vmap(
+        lambda k: _init_block_params(cfg, k, dtype)
+    )(layer_keys)
+    params["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, cfg.vocab), dtype)
+            * cfg.d_model ** -0.5
+        )
+    return params
+
+
+# ----------------------------------------------------------------------------
+# forward (train / encode / prefill-logits)
+# ----------------------------------------------------------------------------
+def _block_train(cfg: ModelConfig, p: Dict, x, positions, is_global):
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    parts = []
+    if cfg.has_attn:
+        parts.append(attention_train(cfg, p["attn"], h, positions, is_global))
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.ssm:
+        parts.append(ssm_train(cfg, p["ssm"], h))
+    mix = parts[0] if len(parts) == 1 else (parts[0] + parts[1]) * 0.5
+    x = x + mix
+    if cfg.has_moe:
+        h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        out, aux = moe_forward(cfg, p["moe"], h2)
+        x = x + out
+    elif cfg.has_dense_mlp:
+        h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + mlp(cfg, p["mlp"], h2)
+    return constrain(x, "residual"), aux
+
+
+def embed_inputs(cfg: ModelConfig, params: Dict, batch: Dict) -> jnp.ndarray:
+    if cfg.frontend == "token":
+        x = params["embed"][batch["tokens"]]
+    else:
+        # audio / vision stubs: precomputed frame/patch embeddings (spec).
+        x = batch["embeds"] @ params["frontend_proj"]
+    return constrain(x, "residual")
+
+
+def forward(
+    cfg: ModelConfig, params: Dict, batch: Dict,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward.  Returns (logits [B,S,V], aux_loss)."""
+    x = embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    if "positions" in batch:
+        positions = batch["positions"]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def scan_block(carry, layer_p):
+        x, aux = carry
+        fn = _block_train
+        if cfg.remat:
+            fn = jax.checkpoint(
+                _block_train, static_argnums=(0, 4), prevent_cse=False
+            )
+        x, a = fn(cfg, layer_p, x, positions, False)
+        return (x, aux + a), None
+
+    def scan_block_global(carry, layer_p):
+        x, aux = carry
+        fn = _block_train
+        if cfg.remat:
+            fn = jax.checkpoint(
+                _block_train, static_argnums=(0, 4), prevent_cse=False
+            )
+        x, a = fn(cfg, layer_p, x, positions, True)
+        return (x, aux + a), None
+
+    for kind, s, e in segments(cfg):
+        seg_params = _slice_layers(params["layers"], s, e)
+        if kind == "scan":
+            is_global = cfg.attn == "full"
+            body = scan_block_global if is_global else scan_block
+            (x, aux_total), _ = jax.lax.scan(
+                body, (x, aux_total), seg_params,
+                unroll=(e - s) if cfg.scan_unroll else 1,
+            )
+        else:
+            lp = _layer(params["layers"], s)
+            x, a = _block_train(cfg, lp, x, positions, cfg.layer_is_global(s))
+            aux_total = aux_total + a
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = constrain(x @ head, "logits")
+    return logits, aux_total
+
+
+def loss_fn(
+    cfg: ModelConfig, params: Dict, batch: Dict,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    ll = jnp.take_along_axis(logits32, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = jnp.asarray(nll.size, jnp.float32)
+    ce = jnp.sum(nll) / denom
+    total = ce + cfg.router_aux_coef * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+# ----------------------------------------------------------------------------
+# decode path (serve_step)
+# ----------------------------------------------------------------------------
+def init_decode_cache(
+    cfg: ModelConfig, batch: int, max_seq: int, dtype=None,
+) -> Dict:
+    """Cache pytree: per segment, stacked over the segment's layers."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    segs = []
+    for kind, s, e in segments(cfg):
+        n = e - s
+        entry: Dict[str, Any] = {}
+        if cfg.has_attn:
+            is_global = cfg.layer_is_global(s) if kind == "single" else (
+                cfg.attn == "full"
+            )
+            C = max_seq if is_global else min(cfg.swa_window, max_seq)
+            shape = (n, batch, C, cfg.n_kv_heads, cfg.d_head)
+            entry["k"] = jnp.zeros(shape, dtype)
+            entry["v"] = jnp.zeros(shape, dtype)
+        if cfg.ssm:
+            one = init_ssm_cache(cfg, batch, dtype)
+            entry["ssm"] = jax.tree_util.tree_map(
+                lambda a: jnp.zeros((n,) + a.shape, a.dtype), one
+            )
+        segs.append(entry)
+    return {"pos": jnp.zeros((batch,), jnp.int32), "segments": segs}
+
+
+def _block_decode(cfg: ModelConfig, p: Dict, x, entry, cur_pos, positions,
+                  is_global, active):
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    parts = []
+    new_entry = dict(entry)
+    if cfg.has_attn:
+        o, (kc, vc) = attention_decode(
+            cfg, p["attn"], h, (entry["k"], entry["v"]), cur_pos, positions,
+            is_global, active,
+        )
+        new_entry["k"], new_entry["v"] = kc, vc
+        parts.append(o)
+    if cfg.ssm:
+        o, new_ssm = ssm_decode(cfg, p["ssm"], h, entry["ssm"], active)
+        new_entry["ssm"] = new_ssm
+        parts.append(o)
+    mix = parts[0] if len(parts) == 1 else (parts[0] + parts[1]) * 0.5
+    x = x + mix
+    if cfg.has_moe:
+        h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        out, _ = moe_forward(cfg, p["moe"], h2)
+        x = x + out
+    elif cfg.has_dense_mlp:
+        h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + mlp(cfg, p["mlp"], h2)
+    return x, new_entry
+
+
+def decode_step(
+    cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict,
+) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode.  batch: {"tokens": [B,1]} (or {"embeds": [B,1,fd]});
+    optional "positions" ([B,1] or [3,B,1]) and "active" ([B] int32: rows
+    with 0 neither write caches nor advance).  Returns (logits [B,V], cache')."""
+    x = embed_inputs(cfg, params, batch)
+    B = x.shape[0]
+    cur_pos = cache["pos"]                       # [B]
+    active = batch.get("active")
+    if active is None:
+        active = jnp.ones((B,), jnp.int32)
+    if "positions" in batch:
+        positions = batch["positions"]
+    else:
+        positions = cur_pos.astype(jnp.int32)[:, None]
+    new_segs = []
+    for (kind, s, e), entry in zip(segments(cfg), cache["segments"]):
+        if kind == "single":
+            lp = _layer(params["layers"], s)
+            le = jax.tree_util.tree_map(lambda a: a[0], entry)
+            x, ne = _block_decode(
+                cfg, lp, x, le, cur_pos, positions, cfg.layer_is_global(s),
+                active,
+            )
+            new_segs.append(
+                jax.tree_util.tree_map(lambda a: a[None], ne)
+            )
+        else:
+            seg_params = _slice_layers(params["layers"], s, e)
+            is_global = cfg.attn == "full"
+
+            def body(carry, inp):
+                x = carry
+                layer_p, layer_e = inp
+                x, ne = _block_decode(
+                    cfg, layer_p, x, layer_e, cur_pos, positions, is_global,
+                    active,
+                )
+                return x, ne
+
+            x, ne = jax.lax.scan(
+                body, x, (seg_params, entry),
+                unroll=(e - s) if cfg.scan_unroll else 1,
+            )
+            new_segs.append(ne)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = (x[:, 0, :] @ head).astype(jnp.float32)
+    return logits, {"pos": cur_pos + active, "segments": new_segs}
+
+
+def prefill(
+    cfg: ModelConfig, params: Dict, batch: Dict,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Prefill forward: returns (all logits, final hidden).  (The prefill_32k
+    dry-run cells lower this; serving uses forward+cache-build via decode for
+    simplicity of the cache layout.)"""
+    logits, _ = forward(cfg, params, batch)
+    return logits[:, -1, :], logits

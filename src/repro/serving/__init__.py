@@ -1,0 +1,5 @@
+from .kvstore import CurpSessionStore, SessionState
+from .server import CurpServeDriver, ServeConfig
+
+__all__ = ["CurpSessionStore", "SessionState", "CurpServeDriver",
+           "ServeConfig"]

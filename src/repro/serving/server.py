@@ -1,0 +1,136 @@
+"""CurpServeDriver: batched autoregressive serving with CURP-durable
+sessions.
+
+The serving master is speculative state (model KV caches + live sessions);
+durability comes from (a) witness-recorded session commits (1 RTT) and (b)
+batched backup syncs — both via CurpSessionStore.  After a master crash the
+driver restores sessions from the recovered store and REBUILDS the KV caches
+by re-prefilling each live session's tokens (the compute-for-durability
+trade CURP makes: journal bytes are tiny because state is recomputable).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, init_decode_cache, init_params
+
+from .kvstore import CurpSessionStore, SessionState
+
+
+@dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_seq: int = 128
+    commit_every: int = 1      # session commits per generated token
+    f: int = 3
+    sync_batch: int = 50
+
+
+class CurpServeDriver:
+    def __init__(self, cfg: ModelConfig, serve: ServeConfig,
+                 params=None, seed: int = 0) -> None:
+        assert cfg.can_decode, "serving needs a decoder"
+        self.cfg = cfg
+        self.serve = serve
+        self.params = params if params is not None else init_params(
+            cfg, jax.random.PRNGKey(seed)
+        )
+        self.store = CurpSessionStore(f=serve.f, sync_batch=serve.sync_batch)
+        self.sessions: Dict[str, SessionState] = {}
+        self._decode = jax.jit(
+            lambda p, b, c: decode_step(cfg, p, b, c)
+        )
+        self._reset_cache()
+        self.tokens_served = 0
+
+    def _reset_cache(self) -> None:
+        self.cache = init_decode_cache(
+            self.cfg, self.serve.max_batch, self.serve.max_seq,
+        )
+        self.slots: List[Optional[str]] = [None] * self.serve.max_batch
+
+    # -- session management --------------------------------------------------------
+    def submit(self, session_id: str, prompt: List[int]) -> None:
+        s = SessionState(session_id, list(prompt))
+        self.sessions[session_id] = s
+        self.store.commit(s)
+        slot = self.slots.index(None)
+        self.slots[slot] = session_id
+        # Feed all but the last token: step() feeds tokens[-1], keeping the
+        # fed-token stream identical across normal and recovered runs.
+        self._replay_tokens(slot, s.tokens[:-1])
+
+    def _replay_tokens(self, slot: int, tokens: List[int]) -> None:
+        """Feed tokens through decode to build this slot's KV/SSM state; the
+        per-slot active mask keeps other sessions' caches and positions
+        untouched (mixed-length batching)."""
+        for t in tokens:
+            batch = self._batch_for(slot, t)
+            _, self.cache = self._decode(self.params, batch, self.cache)
+
+    def _batch_for(self, slot: int, token: int) -> Dict[str, jnp.ndarray]:
+        toks = np.zeros((self.serve.max_batch, 1), np.int32)
+        toks[slot, 0] = token
+        active = np.zeros((self.serve.max_batch,), np.int32)
+        active[slot] = 1
+        return {"tokens": jnp.asarray(toks), "active": jnp.asarray(active)}
+
+    # -- decoding -----------------------------------------------------------------
+    def step(self) -> Dict[str, int]:
+        """One batched decode step for every live slot; commit via CURP."""
+        live = [(i, sid) for i, sid in enumerate(self.slots) if sid]
+        if not live:
+            return {}
+        last = np.zeros((self.serve.max_batch, 1), np.int32)
+        active = np.zeros((self.serve.max_batch,), np.int32)
+        for i, sid in live:
+            last[i, 0] = self.sessions[sid].tokens[-1]
+            active[i] = 1
+        logits, self.cache = self._decode(
+            self.params,
+            {"tokens": jnp.asarray(last), "active": jnp.asarray(active)},
+            self.cache,
+        )
+        out: Dict[str, int] = {}
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, sid in live:
+            tok = int(nxt[i])
+            s = self.sessions[sid]
+            s.tokens.append(tok)
+            out[sid] = tok
+            self.tokens_served += 1
+            if len(s.tokens) % self.serve.commit_every == 0:
+                self.store.commit(s)
+        return out
+
+    def generate(self, n_tokens: int) -> None:
+        for _ in range(n_tokens):
+            self.step()
+
+    # -- failures -----------------------------------------------------------------
+    def crash_and_recover(self) -> Dict[str, int]:
+        """Master (driver state) dies; sessions recover from CURP store; KV
+        caches rebuild by re-prefill."""
+        report = self.store.crash_and_recover()
+        live_ids = [sid for sid in self.slots if sid]
+        self.sessions = {}
+        self._reset_cache()
+        recovered = 0
+        for sid in live_ids:
+            s = self.store.load(sid)
+            if s is None:
+                continue
+            self.sessions[sid] = s
+            slot = self.slots.index(None)
+            self.slots[slot] = sid
+            self._replay_tokens(slot, s.tokens[:-1])
+            recovered += 1
+        return {"recovered_sessions": recovered,
+                "replayed_ops": report.replayed}

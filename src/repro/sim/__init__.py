@@ -1,0 +1,16 @@
+"""repro.sim — discrete-event simulation of CURP clusters.
+
+Timing model calibrated to the paper's RAMCloud/Redis numbers (see params.py
+for the napkin math); protocol logic is repro.core, unchanged.
+"""
+from .curp_sim import ScenarioResult, SimCluster, run_scenario
+from .linearizability import check_linearizable
+from .network import Network, Node, Sim
+from .params import DEFAULT, SimParams
+from .workload import UniformWriteWorkload, YcsbWorkload, ZipfianGenerator
+
+__all__ = [
+    "ScenarioResult", "SimCluster", "run_scenario", "check_linearizable",
+    "Network", "Node", "Sim", "DEFAULT", "SimParams",
+    "UniformWriteWorkload", "YcsbWorkload", "ZipfianGenerator",
+]

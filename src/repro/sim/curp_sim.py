@@ -1,0 +1,757 @@
+"""Timed CURP cluster simulation: clients, master, witnesses, backups,
+coordinator — with crash injection and recovery, driving the *same*
+repro.core state machines as the unit harness.
+
+Modes (the four lines of the paper's Figs. 5/6):
+  * "curp"         — full protocol: witness records + batched async syncs.
+  * "sync"         — original primary-backup: respond after backup sync
+                      (+ §4.4 polling waste at the master).
+  * "async"        — respond before sync, NO witnesses (fast but unsafe;
+                      the paper's "Async" comparison).
+  * "unreplicated" — no backups, no witnesses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.backup import Backup
+from repro.core.client import ClientSession, Decision, decide
+from repro.core.master import DUP, ERROR, FAST, SYNCED, Master
+from repro.core.types import ExecResult, Op, OpType, RecordStatus
+from repro.core.witness import Witness
+
+from .network import Network, Node, Sim
+from .params import DEFAULT, SimParams
+
+
+# --------------------------------------------------------------------------
+# Sim-level message envelopes
+# --------------------------------------------------------------------------
+@dataclass
+class MUpdate:
+    src: "SimClient"
+    op: Op
+    wlv: int
+    acks: tuple
+
+
+@dataclass
+class MUpdateResp:
+    rpc_id: tuple
+    result: ExecResult
+
+
+@dataclass
+class MRead:
+    src: "SimClient"
+    op: Op
+
+
+@dataclass
+class MRecord:
+    src: "SimClient"
+    master_id: int
+    op: Op
+    attempt: int = 0
+
+
+@dataclass
+class MRecordResp:
+    rpc_id: tuple
+    status: RecordStatus
+    witness: "SimWitness"
+    attempt: int = 0
+
+
+@dataclass
+class MSyncReq:
+    src: "SimClient"
+    rpc_id: tuple
+
+
+@dataclass
+class MSyncResp:
+    rpc_id: tuple
+
+
+@dataclass
+class MBackupSync:
+    src: "SimMaster"
+    req: Any
+    through: int = -1    # per-op sync tag (sync mode only)
+
+
+@dataclass
+class MBackupAck:
+    src: "SimBackup"
+    ok: bool
+    through: int = -1
+
+
+@dataclass
+class MGc:
+    src: "SimMaster"
+    entries: tuple
+
+
+@dataclass
+class MGcResp:
+    stale: tuple
+
+
+@dataclass
+class MDoSync:      # master self-message: issue the batched backup sync
+    pass
+
+
+@dataclass
+class MDoGc:        # master self-message: issue witness gc after a sync
+    entries: tuple
+
+
+# --------------------------------------------------------------------------
+# Actors
+# --------------------------------------------------------------------------
+class SimWitness(Node):
+    def __init__(self, sim, net, params, core: Witness, name: str) -> None:
+        super().__init__(sim, name)
+        self.net = net
+        self.p = params
+        self.core = core
+
+    def service_time(self, msg) -> float:
+        if isinstance(msg, MRecord):
+            return self.p.witness_service_us
+        if isinstance(msg, MGc):
+            return self.p.witness_gc_service_us
+        return 0.2
+
+    def handle(self, msg) -> None:
+        if isinstance(msg, MRecord):
+            st = self.core.record(
+                msg.master_id, msg.op.key_hashes(), msg.op.rpc_id, msg.op
+            )
+            self.net.send(
+                msg.src, MRecordResp(msg.op.rpc_id, st, self, msg.attempt)
+            )
+        elif isinstance(msg, MGc):
+            resp = self.core.gc(msg.entries)
+            self.net.send(msg.src, MGcResp(resp.stale_requests))
+
+
+class SimBackup(Node):
+    def __init__(self, sim, net, params, core: Backup, name: str,
+                 service_us: Optional[float] = None) -> None:
+        super().__init__(sim, name)
+        self.net = net
+        self.p = params
+        self.core = core
+        self._service = service_us if service_us is not None else params.backup_service_us
+
+    def service_time(self, msg) -> float:
+        return self._service
+
+    def handle(self, msg) -> None:
+        if isinstance(msg, MBackupSync):
+            resp = self.core.handle_sync(msg.req)
+            self.net.send(msg.src, MBackupAck(self, resp.ok, msg.through))
+
+
+class SimMaster(Node):
+    def __init__(self, sim, net, params, core: Master, name: str,
+                 mode: str, backups: List[SimBackup],
+                 witnesses: List[SimWitness]) -> None:
+        super().__init__(sim, name)
+        self.net = net
+        self.p = params
+        self.core = core
+        self.mode = mode
+        self.backups = backups
+        self.witnesses = witnesses
+        # Responses withheld until the log is synced through some index:
+        self._withheld: List[Tuple[int, Node, Any]] = []
+        self._sync_acks_needed = 0
+        # sync mode: per-op replication RPCs, multiple outstanding.
+        self._sync_issued_through = 0
+        self._per_op_acks: Dict[int, int] = {}
+        self._sync_scheduled = False   # an MDoSync is queued but not yet run
+        self.stats = {"updates": 0, "reads": 0}
+
+    # -- service costs ----------------------------------------------------------
+    def service_time(self, msg) -> float:
+        p = self.p
+        if isinstance(msg, MUpdate):
+            c = p.master_update_cost_us
+            if self.mode == "sync":
+                # Original primary-backup: the per-op sync RPCs are issued
+                # inside the update handler (no batching).  The §4.4 polling
+                # waste is charged when the acks return (occupy), so it burns
+                # master CPU without artificially delaying this op's release.
+                c += len(self.backups) * p.repl_send_cost_us
+            return c
+        if isinstance(msg, MRead):
+            return p.master_read_cost_us
+        if isinstance(msg, MBackupAck):
+            return p.repl_ack_cost_us
+        if isinstance(msg, MSyncReq):
+            return p.sync_rpc_cost_us
+        if isinstance(msg, MGcResp):
+            return p.gc_resp_cost_us
+        if isinstance(msg, MDoSync):
+            return len(self.backups) * p.repl_send_cost_us
+        if isinstance(msg, MDoGc):
+            return len(self.witnesses) * p.gc_send_cost_us
+        return 0.2
+
+    # -- logic --------------------------------------------------------------------
+    def handle(self, msg) -> None:
+        if isinstance(msg, MUpdate):
+            self.stats["updates"] += 1
+            verdict, result = self.core.handle_update(
+                msg.op, msg.wlv, msg.acks, now=self.sim.now
+            )
+            resp = MUpdateResp(msg.op.rpc_id, result)
+            if verdict == ERROR:
+                self.net.send(msg.src, resp)
+                return
+            withhold = (self.mode == "sync" and not result.synced
+                        and verdict != DUP) or (verdict == SYNCED)
+            if self.mode == "unreplicated":
+                withhold = False
+            if withhold:
+                self._withheld.append((len(self.core.log), msg.src, resp))
+                self.core.want_sync = True
+            else:
+                self.net.send(msg.src, resp)
+            if self.mode == "sync":
+                # Sync RPCs depart at handler end (their cost is already in
+                # this handler's service time).
+                self._begin_sync_inline()
+            else:
+                self._maybe_sync()
+
+        elif isinstance(msg, MRead):
+            self.stats["reads"] += 1
+            verdict, result = self.core.handle_read(msg.op, now=self.sim.now)
+            resp = MUpdateResp(msg.op.rpc_id, result)
+            if verdict == SYNCED and self.mode != "unreplicated":
+                self._withheld.append((len(self.core.log), msg.src, resp))
+                self.core.want_sync = True
+                self._maybe_sync()
+            else:
+                self.net.send(msg.src, resp)
+
+        elif isinstance(msg, MSyncReq):
+            rec = self.core.rifl.check_duplicate(msg.rpc_id)
+            if rec is not None and rec.synced:
+                self.net.send(msg.src, MSyncResp(msg.rpc_id))
+            else:
+                self._withheld.append(
+                    (len(self.core.log), msg.src, MSyncResp(msg.rpc_id))
+                )
+                self.core.want_sync = True
+                self._maybe_sync()
+
+        elif isinstance(msg, MDoSync):
+            self._sync_scheduled = False
+            req = self.core.begin_sync()
+            if req is None:
+                return
+            if not self.backups:     # unreplicated: trivially synced
+                gc_entries = self.core.complete_sync()
+                self._release(self.core.synced_index)
+                return
+            self._sync_acks_needed = len(self.backups)
+            for b in self.backups:
+                self.net.send(b, MBackupSync(self, req), size_bytes=2048)
+
+        elif isinstance(msg, MBackupAck):
+            if self.mode == "sync":
+                if msg.through in self._per_op_acks and msg.ok:
+                    self._per_op_acks[msg.through] -= 1
+                    if self._per_op_acks[msg.through] == 0:
+                        del self._per_op_acks[msg.through]
+                        self.core.force_synced_through(msg.through)
+                        self._release(self.core.synced_index)
+                        # §4.4: polling wasted while this sync was in flight.
+                        self.occupy(self.p.sync_poll_waste_us)
+                return
+            if self.core.sync_in_progress is None:
+                return
+            if not msg.ok:
+                self.core.abort_sync()
+                return
+            self._sync_acks_needed -= 1
+            if self._sync_acks_needed == 0:
+                gc_entries = self.core.complete_sync()
+                self._release(self.core.synced_index)
+                if self.witnesses and gc_entries:
+                    self.deliver(MDoGc(gc_entries))
+                self._maybe_sync()   # more batched work may be pending
+
+        elif isinstance(msg, MDoGc):
+            for w in self.witnesses:
+                self.net.send(w, MGc(self, msg.entries), size_bytes=512)
+
+        elif isinstance(msg, MGcResp):
+            # §4.5: retry suspected uncollected garbage (RIFL will filter).
+            for op in msg.stale:
+                self.core.handle_update(
+                    op, self.core.witness_list_version, (), now=self.sim.now
+                )
+            self.core.want_sync = self.core.want_sync or bool(msg.stale)
+            self._maybe_sync()
+
+    def _begin_sync_inline(self) -> None:
+        """Sync mode: issue THIS op's replication RPCs immediately (original
+        RAMCloud: 3 replication RPCs per write, no cross-client batching)."""
+        from repro.core.types import BackupSyncReq
+
+        through = len(self.core.log)
+        if through == self._sync_issued_through:
+            return
+        req = BackupSyncReq(
+            master_id=self.core.master_id,
+            epoch=self.core.epoch,
+            from_index=self._sync_issued_through,
+            entries=tuple(
+                (e.op, e.result)
+                for e in self.core.log[self._sync_issued_through:through]
+            ),
+        )
+        self._sync_issued_through = through
+        self._per_op_acks[through] = len(self.backups)
+        self.core.want_sync = False
+        for b in self.backups:
+            self.net.send(b, MBackupSync(self, req, through), size_bytes=2048)
+
+    def _maybe_sync(self) -> None:
+        if self._sync_scheduled:
+            return
+        if self.mode == "unreplicated":
+            # No backups: syncs are a no-op; still release withheld (none).
+            if self.core.want_sync:
+                self._sync_scheduled = True
+                self.deliver(MDoSync())
+            return
+        if self.core.want_sync and self.core.sync_in_progress is None:
+            self._sync_scheduled = True
+            self.deliver(MDoSync())
+
+    def _release(self, synced_through: int) -> None:
+        still = []
+        for idx, dst, resp in self._withheld:
+            if idx <= synced_through:
+                if isinstance(resp, MUpdateResp):
+                    resp = MUpdateResp(
+                        resp.rpc_id,
+                        dataclasses.replace(resp.result, synced=True),
+                    )
+                self.net.send(dst, resp)
+            else:
+                still.append((idx, dst, resp))
+        self._withheld = still
+
+
+@dataclass
+class PendingOp:
+    op: Op
+    is_update: bool
+    t_invoke: float            # first attempt (for linearizability history)
+    t_attempt: float
+    master_result: Optional[ExecResult] = None
+    witness_statuses: List[RecordStatus] = field(default_factory=list)
+    want_witnesses: int = 0
+    sync_requested: bool = False
+    retries: int = 0
+    done: bool = False
+
+
+class SimClient(Node):
+    def __init__(self, sim, net, params, session: ClientSession, name: str,
+                 cluster: "SimCluster", n_ops: int,
+                 op_factory: Callable[[ClientSession], Op]) -> None:
+        super().__init__(sim, name)
+        self.net = net
+        self.p = params
+        self.session = session
+        self.cluster = cluster
+        self.n_ops = n_ops
+        self.op_factory = op_factory
+        self.completed = 0
+        self.latencies: List[Tuple[float, float, bool]] = []  # (lat, t, is_update)
+        self.history: List[dict] = []
+        self.pending: Optional[PendingOp] = None
+        self.fast_completions = 0
+        self.rtt2_completions = 0
+
+    def service_time(self, msg) -> float:
+        if isinstance(msg, MRecordResp):
+            return 0.1   # record responses are tiny (no payload to parse)
+        return self.p.client_recv_cost_us
+
+    # -- issuing ------------------------------------------------------------------
+    def start(self) -> None:
+        self.sim.after(self.sim.rng.random() * 1.0, self._issue_next)
+
+    def _issue_next(self) -> None:
+        if self.completed >= self.n_ops:
+            return
+        op = self.op_factory(self.session)
+        self.pending = PendingOp(
+            op=op, is_update=op.is_update,
+            t_invoke=self.sim.now, t_attempt=self.sim.now,
+        )
+        self._send_attempt()
+
+    def _send_attempt(self) -> None:
+        assert self.pending is not None
+        pend = self.pending
+        op = pend.op
+        mode = self.cluster.mode
+        master = self.cluster.master_node
+        t0 = self.sim.now
+        if pend.is_update and mode == "curp":
+            wits = self.cluster.witness_nodes
+            pend.want_witnesses = len(wits)
+            pend.witness_statuses = []
+            # Client serializes the extra record sends before the update RPC
+            # (the measured +0.13 µs/record of §5.1).
+            att = pend.retries
+            for k, w in enumerate(wits):
+                self.sim.at(
+                    t0 + (k + 1) * self.p.client_record_send_cost_us,
+                    lambda w=w, op=op, att=att: self.net.send(
+                        w, MRecord(self, self.cluster.master_id, op, att)
+                    ),
+                )
+            t0 += len(wits) * self.p.client_record_send_cost_us
+        else:
+            pend.want_witnesses = 0
+            pend.witness_statuses = []
+        t0 += self.p.client_send_cost_us
+        if pend.is_update:
+            msg = MUpdate(self, op, self.cluster.wlv, self.session.acks())
+        else:
+            msg = MRead(self, op)
+        self.sim.at(t0, lambda: self.net.send(master, msg, size_bytes=256))
+        # Timeout/retry.
+        rpc_id, attempt = op.rpc_id, pend.retries
+        self.sim.after(self.p.rpc_timeout_us,
+                       lambda: self._check_timeout(rpc_id, attempt))
+
+    def _check_timeout(self, rpc_id, attempt) -> None:
+        pend = self.pending
+        if pend is None or pend.done or pend.op.rpc_id != rpc_id:
+            return
+        if pend.retries != attempt:
+            return
+        pend.retries += 1
+        if pend.retries > 40:
+            self._record_history(pend, value=None, failed=True)
+            self.pending = None
+            self._issue_next()
+            return
+        # Refetch config (the master may have changed), then resend.
+        self.sim.after(self.p.config_fetch_us, self._resend)
+
+    def _resend(self) -> None:
+        if self.pending is None or self.pending.done:
+            return
+        self.pending.master_result = None
+        self.pending.sync_requested = False
+        self.pending.t_attempt = self.sim.now
+        self._send_attempt()
+
+    # -- responses -------------------------------------------------------------------
+    def handle(self, msg) -> None:
+        pend = self.pending
+        if pend is None or pend.done:
+            return
+        if isinstance(msg, MUpdateResp) and msg.rpc_id == pend.op.rpc_id:
+            if not msg.result.ok:
+                # Stale config (witness list version): refetch + retry.
+                pend.retries += 1
+                self.sim.after(self.p.config_fetch_us, self._resend)
+                return
+            pend.master_result = msg.result
+        elif isinstance(msg, MRecordResp) and msg.rpc_id == pend.op.rpc_id:
+            if msg.attempt != pend.retries:
+                return  # stale response from a pre-retry witness set
+            pend.witness_statuses.append(msg.status)
+        elif isinstance(msg, MSyncResp) and msg.rpc_id == pend.op.rpc_id:
+            if pend.master_result is None:
+                return
+            self._complete(pend, pend.master_result, rtts=3)
+            return
+        else:
+            return
+        self._evaluate(pend)
+
+    def _evaluate(self, pend: PendingOp) -> None:
+        if pend.master_result is None:
+            return
+        if not pend.is_update or self.cluster.mode != "curp":
+            self._complete(pend, pend.master_result,
+                           rtts=2 if pend.master_result.synced else 1)
+            return
+        if pend.master_result.synced:
+            # Conflict path: master synced before responding — 2 RTTs, no
+            # witness accepts needed (§3.2.3).
+            self._complete(pend, pend.master_result, rtts=2)
+            return
+        if len(pend.witness_statuses) < pend.want_witnesses:
+            return
+        d = decide(pend.master_result, pend.witness_statuses)
+        if d is Decision.COMPLETE:
+            self._complete(pend, pend.master_result, rtts=1)
+        elif not pend.sync_requested:
+            pend.sync_requested = True
+            self.sim.after(
+                self.p.client_send_cost_us,
+                lambda: self.net.send(
+                    self.cluster.master_node, MSyncReq(self, pend.op.rpc_id)
+                ),
+            )
+
+    def _complete(self, pend: PendingOp, result, rtts: int) -> None:
+        pend.done = True
+        lat = self.sim.now - pend.t_invoke
+        self.latencies.append((lat, self.sim.now, pend.is_update))
+        if rtts == 1:
+            self.fast_completions += 1
+        else:
+            self.rtt2_completions += 1
+        self.session.mark_completed(pend.op.rpc_id)
+        self._record_history(pend, value=result.value if result else None)
+        self.completed += 1
+        self.cluster.on_completion(self.sim.now)
+        self.pending = None
+        self._issue_next()
+
+    def _record_history(self, pend: PendingOp, value, failed: bool = False) -> None:
+        self.history.append({
+            "client": self.session.client_id,
+            "op": pend.op,
+            "invoke": pend.t_invoke,
+            "complete": None if failed else self.sim.now,
+            "value": value,
+            "failed": failed,
+        })
+
+
+# --------------------------------------------------------------------------
+# Cluster + scenario
+# --------------------------------------------------------------------------
+class SimCluster:
+    def __init__(self, sim: Sim, net: Network, params: SimParams, mode: str,
+                 f: int, backup_service_us: Optional[float] = None) -> None:
+        self.sim = sim
+        self.net = net
+        self.p = params
+        self.mode = mode
+        self.f = f
+        self.epoch = 0
+        self.wlv = 0
+        self._id = 0
+
+        use_backups = mode in ("curp", "sync", "async")
+        use_witnesses = mode == "curp"
+        self.backup_cores = [Backup(self._next_id()) for _ in range(f)] \
+            if use_backups else []
+        self.backup_nodes = [
+            SimBackup(sim, net, params, b, f"backup{i}",
+                      service_us=backup_service_us)
+            for i, b in enumerate(self.backup_cores)
+        ]
+        self.master_id = self._next_id()
+        core_master = Master(
+            self.master_id, epoch=0,
+            sync_batch=(1 if mode == "sync" else params.sync_batch),
+            hot_key_window=params.hot_key_window_us,
+        )
+        self.witness_cores = [
+            Witness(params.witness_sets, params.witness_ways) for _ in range(f)
+        ] if use_witnesses else []
+        self.witness_nodes = [
+            SimWitness(sim, net, params, w, f"witness{i}")
+            for i, w in enumerate(self.witness_cores)
+        ]
+        for w in self.witness_cores:
+            w.start(self.master_id)
+        self.master_node = SimMaster(
+            sim, net, params, core_master, "master", mode,
+            self.backup_nodes, self.witness_nodes,
+        )
+        self.clients: List[SimClient] = []
+        self.completions: List[float] = []
+        self.recovery_report: Optional[dict] = None
+
+    def _next_id(self) -> int:
+        self._id += 1
+        return self._id
+
+    def on_completion(self, t: float) -> None:
+        self.completions.append(t)
+
+    # -- crash + recovery (timed mirror of core.recovery) -------------------------
+    def crash_master_at(self, t: float) -> None:
+        self.sim.at(t, self._crash)
+
+    def _crash(self) -> None:
+        self.master_node.crashed = True
+        self.sim.after(self.p.crash_detect_us, self._recover)
+
+    def _recover(self) -> None:
+        p = self.p
+        old_master_id = self.master_id
+        # 1. restore from the longest backup log
+        entries = max(
+            (b.get_log() for b in self.backup_cores), key=len, default=()
+        )
+        restore_us = p.recovery_fixed_us + len(entries) * p.restore_per_entry_us
+        new_master_core = Master(
+            self._next_id(), epoch=self.epoch + 1,
+            sync_batch=(1 if self.mode == "sync" else p.sync_batch),
+            hot_key_window=p.hot_key_window_us,
+        )
+        new_master_core.restore_from_log(entries)
+
+        def after_restore():
+            # 2. getRecoveryData from one witness (freeze) — 1 RTT.
+            reqs = ()
+            if self.witness_cores:
+                reqs = self.witness_cores[0].get_recovery_data(old_master_id)
+            replayed = new_master_core.replay_from_witness(reqs)
+            replay_us = 2 * p.one_way_delay_us + replayed * p.master_update_cost_us
+
+            def after_replay():
+                # 3. bump epoch; sync to backups — 1 RTT.
+                self.epoch += 1
+                new_master_core.epoch = self.epoch
+                for b in self.backup_cores:
+                    b.set_epoch(self.epoch)
+                req = new_master_core.begin_sync()
+                if req is not None:
+                    for b in self.backup_cores:
+                        b.handle_sync(req)
+                    new_master_core.complete_sync()
+                sync_us = 2 * p.one_way_delay_us + p.backup_service_us
+
+                def finish():
+                    # 4. fresh witnesses + publish config.
+                    self.master_id = new_master_core.master_id
+                    self.wlv += 1
+                    new_master_core.witness_list_version = self.wlv
+                    self.witness_cores = [
+                        Witness(p.witness_sets, p.witness_ways)
+                        for _ in range(self.f)
+                    ] if self.mode == "curp" else []
+                    self.witness_nodes = [
+                        SimWitness(self.sim, self.net, p, w, f"witness'{i}")
+                        for i, w in enumerate(self.witness_cores)
+                    ]
+                    for w in self.witness_cores:
+                        w.start(self.master_id)
+                    self.master_node = SimMaster(
+                        self.sim, self.net, p, new_master_core, "master'",
+                        self.mode, self.backup_nodes, self.witness_nodes,
+                    )
+                    self.recovery_report = {
+                        "restored": len(entries), "replayed": replayed,
+                        "recovered_at": self.sim.now,
+                    }
+                self.sim.after(sync_us, finish)
+            self.sim.after(replay_us, after_replay)
+        self.sim.after(restore_us, after_restore)
+
+
+@dataclass
+class ScenarioResult:
+    mode: str
+    f: int
+    n_clients: int
+    update_latencies: list
+    read_latencies: list
+    throughput_ops_per_sec: float
+    fast_fraction: float
+    completed: int
+    history: list
+    recovery: Optional[dict]
+    master_stats: dict
+    sim_time_us: float
+
+
+def run_scenario(
+    mode: str = "curp",
+    f: int = 3,
+    n_clients: int = 1,
+    n_ops: int = 2000,
+    seed: int = 0,
+    params: Optional[SimParams] = None,
+    op_factory: Optional[Callable[[ClientSession], Op]] = None,
+    crash_at_us: Optional[float] = None,
+    backup_service_us: Optional[float] = None,
+    warmup_frac: float = 0.1,
+) -> ScenarioResult:
+    p = params or DEFAULT
+    sim = Sim(seed=seed)
+    net = Network(sim, p)
+    cluster = SimCluster(sim, net, p, mode, f,
+                         backup_service_us=backup_service_us)
+
+    if op_factory is None:
+        counter = [0]
+
+        def op_factory(session: ClientSession) -> Op:
+            counter[0] += 1
+            return session.op_set(f"key{session.client_id}_{counter[0]}", "v")
+
+    for i in range(n_clients):
+        session = ClientSession(client_id=10_000 + i)
+        c = SimClient(sim, net, p, session, f"client{i}", cluster,
+                      n_ops, op_factory)
+        cluster.clients.append(c)
+        c.start()
+
+    if crash_at_us is not None:
+        cluster.crash_master_at(crash_at_us)
+
+    sim.run(until=60_000_000.0)  # 60 simulated seconds hard cap
+
+    upd, rd = [], []
+    fast = slow = 0
+    history = []
+    for c in cluster.clients:
+        if c.pending is not None and not c.pending.done:
+            # Never completed: a "maybe" op for the linearizability checker.
+            c._record_history(c.pending, value=None, failed=True)
+    for c in cluster.clients:
+        for lat, t, is_update in c.latencies:
+            (upd if is_update else rd).append(lat)
+        fast += c.fast_completions
+        slow += c.rtt2_completions
+        history.extend(c.history)
+    completions = sorted(cluster.completions)
+    completed = len(completions)
+    if completed > 20:
+        lo = completions[int(completed * warmup_frac)]
+        hi = completions[-1]
+        n_mid = completed - int(completed * warmup_frac) - 1
+        thr = n_mid / (hi - lo) * 1e6 if hi > lo else 0.0
+    else:
+        thr = 0.0
+    return ScenarioResult(
+        mode=mode, f=f, n_clients=n_clients,
+        update_latencies=upd, read_latencies=rd,
+        throughput_ops_per_sec=thr,
+        fast_fraction=fast / max(1, fast + slow),
+        completed=completed,
+        history=history,
+        recovery=cluster.recovery_report,
+        master_stats=dict(cluster.master_node.core.stats),
+        sim_time_us=sim.now,
+    )

@@ -1,0 +1,130 @@
+"""Per-key linearizability checker (Wing & Gong search with memoization).
+
+CURP's guarantee (§3.4) is linearizability of single-/multi-key NoSQL ops.
+Our histories come from the simulator: each entry has invoke/complete times,
+the op, and the externalized value.  Ops whose completion was never
+externalized (client crashed / gave up / sim ended) are "maybe" ops: a valid
+linearization may either include them at any legal point or exclude them.
+
+For single-key histories (our workloads write through SET/INCR and read
+through GET) linearizability decomposes per key, which keeps the NP-hard
+search tractable; MSET ops are checked by projecting onto each touched key
+(sound for our value-unique test workloads, where every SET value is unique).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Any, Dict, FrozenSet, List, Optional, Tuple
+
+from repro.core.types import Op, OpType
+
+
+@dataclass(frozen=True)
+class HEvent:
+    idx: int
+    invoke: float
+    complete: Optional[float]   # None => "maybe" op (no externalized response)
+    op_type: OpType
+    arg: Any                    # SET value / INCR delta / None
+    value: Any                  # externalized result (GET value, INCR result)
+
+
+def _project(history: List[dict]) -> Dict[Any, List[HEvent]]:
+    per_key: Dict[Any, List[HEvent]] = {}
+    idx = 0
+    for h in history:
+        op: Op = h["op"]
+        if op.op_type not in (OpType.SET, OpType.GET, OpType.INCR, OpType.MSET,
+                              OpType.DEL):
+            continue
+        complete = h["complete"] if not h.get("failed") else None
+        for ki, key in enumerate(op.keys):
+            if op.op_type == OpType.MSET:
+                arg = op.args[ki]
+            elif op.op_type == OpType.SET:
+                arg = op.args[0]
+            elif op.op_type == OpType.INCR:
+                arg = op.args[0] if op.args else 1
+            else:
+                arg = None
+            per_key.setdefault(key, []).append(HEvent(
+                idx=idx, invoke=h["invoke"], complete=complete,
+                op_type=(OpType.SET if op.op_type == OpType.MSET else op.op_type),
+                arg=arg, value=h["value"],
+            ))
+            idx += 1
+    return per_key
+
+
+def _check_key(events: List[HEvent]) -> bool:
+    """Search for a linearization of one key's history."""
+    events = sorted(events, key=lambda e: e.invoke)
+    n = len(events)
+    if n == 0:
+        return True
+    all_ids = frozenset(range(n))
+    ev = {i: events[i] for i in range(n)}
+
+    def apply(state, e: HEvent):
+        """Returns next state, or None if e's externalized value contradicts."""
+        if e.op_type == OpType.SET:
+            return ("V", e.arg)
+        if e.op_type == OpType.DEL:
+            return ("V", None)
+        if e.op_type == OpType.INCR:
+            base = state[1] if state[0] == "V" and isinstance(state[1], int) else 0
+            new = base + (e.arg if e.arg is not None else 1)
+            if e.complete is not None and e.value is not None and e.value != new:
+                return None
+            return ("V", new)
+        if e.op_type == OpType.GET:
+            cur = state[1] if state[0] == "V" else None
+            if e.complete is not None and e.value != cur:
+                return None
+            return state
+        return state
+
+    import sys
+    sys.setrecursionlimit(10000)
+    seen = set()
+
+    def search(remaining: FrozenSet[int], state) -> bool:
+        if not remaining:
+            return True
+        key = (remaining, state)
+        if key in seen:
+            return False
+        # Candidates: ops that are minimal in the real-time order, i.e. whose
+        # invocation precedes every remaining op's completion.
+        min_complete = min(
+            (ev[i].complete for i in remaining if ev[i].complete is not None),
+            default=float("inf"),
+        )
+        progressed = False
+        for i in remaining:
+            e = ev[i]
+            if e.invoke > min_complete:
+                continue
+            nxt = apply(state, e)
+            if nxt is not None and search(remaining - {i}, nxt):
+                return True
+            progressed = True
+            # Maybe-ops can also be dropped entirely (they never took effect).
+            if e.complete is None and search(remaining - {i}, state):
+                return True
+        seen.add(key)
+        return False
+
+    # Completed ops must all be linearized; maybe-ops may be dropped.  The
+    # search above handles dropping inline.
+    return search(all_ids, ("V", None))
+
+
+def check_linearizable(history: List[dict]) -> Tuple[bool, Optional[Any]]:
+    """Returns (ok, offending_key)."""
+    per_key = _project(history)
+    for key, events in per_key.items():
+        if not _check_key(events):
+            return False, key
+    return True, None

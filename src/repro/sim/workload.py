@@ -1,0 +1,85 @@
+"""Workload generators: uniform + YCSB-style zipfian key choosers (§5.3).
+
+The zipfian chooser follows the YCSB implementation (Gray et al.'s algorithm)
+with theta = 0.99 over 1M items — the defaults of YCSB-A (50/50 read/update)
+and YCSB-B (95/5).
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from repro.core.client import ClientSession
+from repro.core.types import Op
+
+
+class ZipfianGenerator:
+    """YCSB ScrambledZipfian-style generator."""
+
+    _zeta_cache = {}
+
+    def __init__(self, n: int, theta: float = 0.99, seed: int = 0) -> None:
+        self.n = n
+        self.theta = theta
+        self.rng = random.Random(seed)
+        key = (n, theta)
+        if key not in self._zeta_cache:
+            self._zeta_cache[key] = sum(1.0 / (i ** theta) for i in range(1, n + 1))
+        self.zetan = self._zeta_cache[key]
+        self.zeta2 = 1.0 + 0.5 ** theta
+        self.alpha = 1.0 / (1.0 - theta)
+        self.eta = (1 - (2.0 / n) ** (1 - theta)) / (1 - self.zeta2 / self.zetan)
+
+    def next_rank(self) -> int:
+        u = self.rng.random()
+        uz = u * self.zetan
+        if uz < 1.0:
+            return 0
+        if uz < self.zeta2:
+            return 1
+        return int(self.n * ((self.eta * u - self.eta + 1) ** self.alpha))
+
+    def next_key(self) -> str:
+        # Scramble so hot keys are spread over the keyspace (YCSB-style).
+        from repro.core.types import splitmix64
+
+        return f"user{splitmix64(self.next_rank()) % (self.n * 8)}"
+
+
+@dataclass
+class YcsbWorkload:
+    """op_factory for run_scenario: mixed reads/updates over a zipfian keyspace."""
+    read_fraction: float
+    n_items: int = 1_000_000
+    theta: float = 0.99
+    seed: int = 0
+    value_size: int = 100
+
+    def __post_init__(self) -> None:
+        self.zipf = ZipfianGenerator(self.n_items, self.theta, self.seed)
+        self.rng = random.Random(self.seed + 1)
+        self._value = "x" * self.value_size
+
+    def __call__(self, session: ClientSession) -> Op:
+        key = self.zipf.next_key()
+        if self.rng.random() < self.read_fraction:
+            return session.op_get(key)
+        return session.op_set(key, self._value)
+
+
+@dataclass
+class UniformWriteWorkload:
+    """100B random writes over a large keyspace (Figs. 5/6 workload)."""
+    n_items: int = 2_000_000
+    seed: int = 0
+    value_size: int = 100
+
+    def __post_init__(self) -> None:
+        self.rng = random.Random(self.seed)
+        self._value = "x" * self.value_size
+
+    def __call__(self, session: ClientSession) -> Op:
+        key = f"k{self.rng.randrange(self.n_items)}"
+        return session.op_set(key, self._value)

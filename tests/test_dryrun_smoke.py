@@ -1,0 +1,42 @@
+"""Dry-run smoke: spawn dryrun.py as a subprocess (it forces 512 host
+devices, which must never leak into this test process) on a small 4x4 mesh
+for a representative arch subset, and check the artifacts."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [
+    ("smollm-360m", "train_4k"),
+    ("qwen3-moe-30b-a3b", "decode_32k"),
+    ("mamba2-130m", "long_500k"),
+])
+def test_dryrun_small_mesh(arch, shape, tmp_path):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", arch, "--shape", shape, "--mesh", "4x4",
+         "--out", str(tmp_path), "--no-probes"],
+        capture_output=True, text=True, timeout=540,
+        cwd=ROOT, env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+                       "HOME": "/root"},
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    arts = list(tmp_path.glob("*.json"))
+    assert len(arts) == 1
+    rec = json.loads(arts[0].read_text())
+    assert rec["status"] == "ok", rec
+    assert rec["flops_per_device"] > 0
+    assert rec["terms"]["dominant"] in ("compute", "memory", "collective")
+
+
+def test_this_process_has_one_device():
+    """The 512-device XLA flag must never leak outside dryrun.py."""
+    import jax
+
+    assert len(jax.devices()) == 1

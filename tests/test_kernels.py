@@ -1,0 +1,141 @@
+"""Pallas kernel tests: shape/dtype sweeps vs the pure-jnp oracles, plus
+hypothesis property tests for the hash and witness-table invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import (
+    WitnessTable,
+    conflict_scan,
+    keyhash2x32,
+    ref_conflict_scan,
+    ref_keyhash2x32,
+    ref_witness_gc,
+    ref_witness_record,
+    witness_gc,
+    witness_record,
+)
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+class TestKeyhash:
+    @pytest.mark.parametrize("n", [1, 7, 128, 1000, 4096])
+    @pytest.mark.parametrize("dtype", [np.uint32, np.int32])
+    def test_matches_oracle(self, n, dtype):
+        r = rng(n)
+        hi = r.integers(0, 2**31, n).astype(dtype)
+        lo = r.integers(0, 2**31, n).astype(dtype)
+        kh, kl = keyhash2x32(hi, lo)
+        rh, rl = ref_keyhash2x32(jnp.asarray(hi), jnp.asarray(lo))
+        np.testing.assert_array_equal(np.asarray(kh), np.asarray(rh))
+        np.testing.assert_array_equal(np.asarray(kl), np.asarray(rl))
+
+    @settings(deadline=None, max_examples=20)
+    @given(a=st.integers(0, 2**32 - 1), b=st.integers(0, 2**32 - 1),
+           bit=st.integers(0, 63))
+    def test_avalanche(self, a, b, bit):
+        """Flipping one input bit flips a healthy share of output bits."""
+        hi1, lo1 = np.uint32(a), np.uint32(b)
+        x = (int(a) << 32) | int(b)
+        y = x ^ (1 << bit)
+        hi2, lo2 = np.uint32(y >> 32), np.uint32(y & 0xFFFFFFFF)
+        o1 = ref_keyhash2x32(jnp.uint32(hi1), jnp.uint32(lo1))
+        o2 = ref_keyhash2x32(jnp.uint32(hi2), jnp.uint32(lo2))
+        diff = (int(o1[0]) ^ int(o2[0])).bit_count() + \
+               (int(o1[1]) ^ int(o2[1])).bit_count()
+        assert diff >= 10   # 64 output bits; ideal ~32
+
+
+class TestWitnessRecord:
+    @pytest.mark.parametrize("sets,ways,batch", [
+        (16, 2, 64), (64, 4, 300), (256, 4, 512), (1024, 4, 1000),
+        (1024, 8, 257),
+    ])
+    def test_matches_oracle(self, sets, ways, batch):
+        r = rng(sets * ways + batch)
+        t = WitnessTable.empty(sets, ways)
+        qh = r.integers(0, 2**32, batch, dtype=np.uint32)
+        ql = r.integers(0, sets * 6, batch, dtype=np.uint32)  # force pressure
+        acc_k, tk = witness_record(t, qh, ql)
+        acc_r, tr = ref_witness_record(t, jnp.asarray(qh), jnp.asarray(ql))
+        np.testing.assert_array_equal(np.asarray(acc_k), np.asarray(acc_r))
+        np.testing.assert_array_equal(np.asarray(tk.occ), np.asarray(tr.occ))
+        np.testing.assert_array_equal(
+            np.asarray(tk.keys_lo), np.asarray(tr.keys_lo))
+
+    def test_conflict_semantics(self):
+        """Same key twice => second rejected (the x<-1 / x<-5 rule)."""
+        t = WitnessTable.empty(16, 4)
+        qh = np.array([7, 7], dtype=np.uint32)
+        ql = np.array([3, 3], dtype=np.uint32)
+        acc, t2 = witness_record(t, qh, ql)
+        assert list(np.asarray(acc)) == [1, 0]
+
+    def test_gc_then_accept(self):
+        t = WitnessTable.empty(16, 4)
+        qh = np.array([7], np.uint32)
+        ql = np.array([3], np.uint32)
+        acc, t = witness_record(t, qh, ql)
+        t = witness_gc(t, qh, ql)
+        acc2, t = witness_record(t, qh, ql)
+        assert int(acc2[0]) == 1
+
+    @settings(deadline=None, max_examples=15)
+    @given(seed=st.integers(0, 1000), sets=st.sampled_from([16, 64]),
+           ways=st.sampled_from([2, 4]))
+    def test_property_no_duplicate_keys_live(self, seed, sets, ways):
+        """Invariant: an occupied witness never holds two slots with the same
+        (hi, lo) key — the commutativity guarantee in table form."""
+        r = rng(seed)
+        n = 200
+        t = WitnessTable.empty(sets, ways)
+        qh = r.integers(0, 8, n, dtype=np.uint32)     # tiny keyspace
+        ql = r.integers(0, 8, n, dtype=np.uint32)
+        acc, t = witness_record(t, qh, ql)
+        occ = np.asarray(t.occ)
+        hi = np.asarray(t.keys_hi)
+        lo = np.asarray(t.keys_lo)
+        live = [(int(h), int(l)) for h, l, o in
+                zip(hi.ravel(), lo.ravel(), occ.ravel()) if o]
+        assert len(live) == len(set(live))
+
+    def test_gc_matches_oracle_sweep(self):
+        r = rng(5)
+        t = WitnessTable.empty(64, 4)
+        qh = r.integers(0, 2**32, 200, dtype=np.uint32)
+        ql = r.integers(0, 512, 200, dtype=np.uint32)
+        _, t = witness_record(t, qh, ql)
+        gk = witness_gc(t, qh[:77], ql[:77])
+        gr = ref_witness_gc(t, jnp.asarray(qh[:77]), jnp.asarray(ql[:77]))
+        np.testing.assert_array_equal(np.asarray(gk.occ), np.asarray(gr.occ))
+
+
+class TestConflictScan:
+    @pytest.mark.parametrize("u,b", [(64, 16), (512, 256), (700, 123),
+                                     (2048, 1024)])
+    def test_matches_oracle(self, u, b):
+        r = rng(u + b)
+        wh = r.integers(0, 2**32, u, dtype=np.uint32)
+        wl = r.integers(0, 2**32, u, dtype=np.uint32)
+        wv = r.integers(0, 2, u, dtype=np.int32)
+        qh = np.concatenate([wh[: b // 4], r.integers(0, 2**32, b - b // 4,
+                                                      dtype=np.uint32)])
+        ql = np.concatenate([wl[: b // 4], r.integers(0, 2**32, b - b // 4,
+                                                      dtype=np.uint32)])
+        ck = conflict_scan(wh, wl, wv, qh, ql)
+        cr = ref_conflict_scan(jnp.asarray(wh), jnp.asarray(wl),
+                               jnp.asarray(wv), jnp.asarray(qh),
+                               jnp.asarray(ql))
+        np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+
+    def test_invalid_window_entries_never_hit(self):
+        wh = np.array([5, 5], np.uint32)
+        wl = np.array([9, 9], np.uint32)
+        wv = np.array([0, 0], np.int32)
+        c = conflict_scan(wh, wl, wv, np.array([5], np.uint32),
+                          np.array([9], np.uint32))
+        assert int(c[0]) == 0

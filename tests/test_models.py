@@ -1,0 +1,149 @@
+"""Per-arch smoke tests (reduced configs, one fwd/train step, no NaNs) +
+model-level correctness: blockwise attention vs direct SDPA, Mamba2 SSD
+chunked-vs-recurrent, MoE capacity-vs-dense, decode/train consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, concrete_batch
+from repro.models import (
+    decode_step,
+    forward,
+    init_decode_cache,
+    init_params,
+    loss_fn,
+)
+from repro.models.config import reduced
+from repro.models.layers import _sdpa, _sdpa_blockwise, make_attn_mask
+from repro.models.moe import init_moe_params, moe_mlp, moe_mlp_capacity
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_train(arch):
+    """Assigned-architecture smoke: reduced config, one train step on CPU,
+    output shapes + finite loss."""
+    cfg = reduced(ARCHS[arch])
+    params = init_params(cfg, KEY)
+    batch = concrete_batch(cfg, "train", batch=2, seq=32)
+    logits, aux = jax.jit(lambda p, b: forward(cfg, p, b))(params, batch)
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    loss, metrics = jax.jit(lambda p, b: loss_fn(cfg, p, b))(params, batch)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", [a for a in sorted(ARCHS)
+                                  if ARCHS[a].can_decode])
+def test_arch_smoke_decode(arch):
+    cfg = reduced(ARCHS[arch])
+    params = init_params(cfg, KEY)
+    cache = init_decode_cache(cfg, 2, 64)
+    db = concrete_batch(cfg, "decode", batch=2, seq=1, with_labels=False)
+    logits, cache = jax.jit(
+        lambda p, b, c: decode_step(cfg, p, b, c)
+    )(params, db, cache)
+    assert logits.shape == (2, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert int(cache["pos"][0]) == 1
+
+
+class TestBlockwiseAttention:
+    @pytest.mark.parametrize("attn,is_global,causal", [
+        ("full", True, True), ("swa", False, True), ("full", True, False),
+    ])
+    def test_vs_direct(self, attn, is_global, causal):
+        cfg = dataclasses.replace(
+            reduced(ARCHS["smollm-360m"]), attn=attn, causal=causal,
+            swa_window=40,
+        )
+        r = np.random.default_rng(0)
+        B, S, Hq, Hkv, dh = 2, 2048, 4, 2, 16
+        q = jnp.asarray(r.normal(0, 1, (B, S, Hq, dh)), jnp.float32)
+        k = jnp.asarray(r.normal(0, 1, (B, S, Hkv, dh)), jnp.float32)
+        v = jnp.asarray(r.normal(0, 1, (B, S, Hkv, dh)), jnp.float32)
+        o_blk = _sdpa_blockwise(cfg, q, k, v, is_global=is_global, block=256)
+        o_ref = _sdpa(cfg, q, k, v, make_attn_mask(cfg, S, is_global))
+        np.testing.assert_allclose(
+            np.asarray(o_blk), np.asarray(o_ref), atol=2e-5
+        )
+
+
+class TestDecodeTrainConsistency:
+    """Autoregressive decode must reproduce the training-forward logits —
+    the property CURP-Serve recovery (re-prefill) depends on."""
+
+    @pytest.mark.parametrize("arch", ["mamba2-130m", "llama3.2-1b",
+                                      "hymba-1.5b"])
+    def test_stepwise_matches_parallel(self, arch):
+        cfg = reduced(ARCHS[arch])
+        params = init_params(cfg, KEY)
+        T = 16
+        toks = jnp.asarray(
+            np.random.default_rng(1).integers(0, cfg.vocab, (1, T)), jnp.int32
+        )
+        logits_par, _ = forward(cfg, params, {"tokens": toks})
+        cache = init_decode_cache(cfg, 1, T)
+        outs = []
+        for t in range(T):
+            lg, cache = decode_step(
+                cfg, params, {"tokens": toks[:, t:t + 1]}, cache
+            )
+            outs.append(lg)
+        logits_seq = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(logits_par[0]), np.asarray(logits_seq[0]),
+            atol=5e-3, rtol=1e-3,
+        )
+
+    def test_active_mask_freezes_rows(self):
+        cfg = reduced(ARCHS["llama3.2-1b"])
+        params = init_params(cfg, KEY)
+        cache = init_decode_cache(cfg, 2, 16)
+        b = {"tokens": jnp.array([[3], [4]], jnp.int32),
+             "active": jnp.array([1, 0], jnp.int32)}
+        _, cache = decode_step(cfg, params, b, cache)
+        assert int(cache["pos"][0]) == 1 and int(cache["pos"][1]) == 0
+        k0 = np.asarray(cache["segments"][0]["k"])
+        assert np.abs(k0[:, 1]).sum() == 0.0   # inactive row untouched
+
+
+class TestMoE:
+    def test_capacity_matches_dense_at_high_cf(self):
+        cfg = dataclasses.replace(
+            reduced(ARCHS["qwen3-moe-30b-a3b"]), moe_capacity_factor=8.0
+        )
+        p = init_moe_params(cfg, KEY, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+        o_d, _ = moe_mlp(cfg, p, x)
+        o_c, _ = moe_mlp_capacity(cfg, p, x)
+        np.testing.assert_allclose(np.asarray(o_d), np.asarray(o_c),
+                                   atol=1e-5)
+
+    def test_capacity_drops_overflow_gracefully(self):
+        cfg = dataclasses.replace(
+            reduced(ARCHS["qwen3-moe-30b-a3b"]), moe_capacity_factor=0.25
+        )
+        p = init_moe_params(cfg, KEY, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+        o, aux = moe_mlp_capacity(cfg, p, x)
+        assert np.isfinite(np.asarray(o)).all()
+
+
+def test_param_count_sanity():
+    """Analytic n_params should land near the arch's nameplate size."""
+    approx = {
+        "llama3.2-1b": (1.0e9, 1.7e9),
+        "deepseek-coder-33b": (30e9, 36e9),
+        "nemotron-4-340b": (300e9, 360e9),
+        "qwen3-moe-30b-a3b": (25e9, 33e9),
+        "mamba2-130m": (0.10e9, 0.18e9),
+        "hymba-1.5b": (1.2e9, 1.9e9),
+    }
+    for name, (lo, hi) in approx.items():
+        n = ARCHS[name].n_params()
+        assert lo < n < hi, f"{name}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"

@@ -1,0 +1,318 @@
+"""CURP protocol unit tests: witness, master, RIFL, recovery, consensus."""
+import pytest
+
+from repro.core import (
+    ClientSession,
+    ConsensusCluster,
+    KVStore,
+    LocalCluster,
+    Op,
+    OpType,
+    RecordStatus,
+    RiflTable,
+    Witness,
+    WitnessMode,
+    keyhash,
+    replay_threshold,
+    superquorum,
+)
+
+
+# ---------------------------------------------------------------- witnesses
+class TestWitness:
+    def test_accept_commutative(self):
+        w = Witness(64, 4)
+        w.start(1)
+        for i in range(10):
+            op = Op(OpType.SET, (f"k{i}",), ("v",), (1, i))
+            assert w.record(1, op.key_hashes(), op.rpc_id, op) is RecordStatus.ACCEPTED
+
+    def test_reject_same_key(self):
+        """'if a witness already accepted x<-1, it cannot accept x<-5' (§3.2.2)"""
+        w = Witness(64, 4)
+        w.start(1)
+        op1 = Op(OpType.SET, ("x",), (1,), (1, 1))
+        op2 = Op(OpType.SET, ("x",), (5,), (2, 1))
+        assert w.record(1, op1.key_hashes(), op1.rpc_id, op1) is RecordStatus.ACCEPTED
+        assert w.record(1, op2.key_hashes(), op2.rpc_id, op2) is RecordStatus.REJECTED
+
+    def test_duplicate_retry_idempotent(self):
+        w = Witness(64, 4)
+        w.start(1)
+        op = Op(OpType.SET, ("x",), (1,), (1, 1))
+        assert w.record(1, op.key_hashes(), op.rpc_id, op) is RecordStatus.ACCEPTED
+        assert w.record(1, op.key_hashes(), op.rpc_id, op) is RecordStatus.ACCEPTED
+
+    def test_wrong_master_rejected(self):
+        w = Witness(64, 4)
+        w.start(1)
+        op = Op(OpType.SET, ("x",), (1,), (1, 1))
+        assert w.record(2, op.key_hashes(), op.rpc_id, op) is RecordStatus.REJECTED
+
+    def test_set_full_rejects(self):
+        w = Witness(1, 2)   # 1 set, 2 ways
+        w.start(1)
+        accepted = 0
+        for i in range(5):
+            op = Op(OpType.SET, (f"k{i}",), ("v",), (1, i))
+            if w.record(1, op.key_hashes(), op.rpc_id, op) is RecordStatus.ACCEPTED:
+                accepted += 1
+        assert accepted == 2
+
+    def test_gc_frees_slots(self):
+        w = Witness(1, 2)
+        w.start(1)
+        op = Op(OpType.SET, ("a",), (1,), (1, 1))
+        w.record(1, op.key_hashes(), op.rpc_id, op)
+        w.gc(tuple((kh, op.rpc_id) for kh in op.key_hashes()))
+        assert w.occupancy == 0
+
+    def test_recovery_mode_irreversible(self):
+        w = Witness(64, 4)
+        w.start(1)
+        op = Op(OpType.SET, ("x",), (1,), (1, 1))
+        w.record(1, op.key_hashes(), op.rpc_id, op)
+        data = w.get_recovery_data(1)
+        assert len(data) == 1
+        assert w.mode is WitnessMode.RECOVERY
+        op2 = Op(OpType.SET, ("y",), (1,), (1, 2))
+        assert w.record(1, op2.key_hashes(), op2.rpc_id, op2) is RecordStatus.REJECTED
+
+    def test_multikey_all_or_nothing(self):
+        w = Witness(64, 4)
+        w.start(1)
+        op1 = Op(OpType.SET, ("a",), (1,), (1, 1))
+        w.record(1, op1.key_hashes(), op1.rpc_id, op1)
+        mop = Op(OpType.MSET, ("a", "b"), (2, 3), (2, 1))
+        assert w.record(1, mop.key_hashes(), mop.rpc_id, mop) is RecordStatus.REJECTED
+        # 'b' slot must NOT be occupied by the failed multi-key record
+        ok = Op(OpType.SET, ("b",), (9,), (3, 1))
+        assert w.record(1, ok.key_hashes(), ok.rpc_id, ok) is RecordStatus.ACCEPTED
+
+    def test_uncollected_garbage_surfaces(self):
+        """§4.5: records surviving >=3 gc rounds are reported as stale."""
+        w = Witness(64, 4)
+        w.start(1)
+        op = Op(OpType.SET, ("orphan",), (1,), (99, 1))
+        w.record(1, op.key_hashes(), op.rpc_id, op)
+        stale = ()
+        for _ in range(4):
+            stale = w.gc(()).stale_requests
+        assert any(o.rpc_id == (99, 1) for o in stale)
+
+
+# ---------------------------------------------------------------- RIFL
+class TestRifl:
+    def test_duplicate_detection(self):
+        r = RiflTable()
+        r.record_completion((1, 1), "res", synced=False)
+        rec = r.check_duplicate((1, 1))
+        assert rec is not None and rec.result == "res"
+
+    def test_acks_delete_records(self):
+        r = RiflTable()
+        r.record_completion((1, 1), "a", True)
+        r.record_completion((1, 2), "b", True)
+        r.apply_client_acks([(1, 2)])
+        assert r.check_duplicate((1, 1)) is not None  # acked => still dup
+        assert r.check_duplicate((1, 2)).result == "b"
+
+    def test_acks_ignored_in_replay_mode(self):
+        """§4.8 modification 1."""
+        r = RiflTable()
+        r.record_completion((1, 1), "a", True)
+        r.replay_mode = True
+        r.apply_client_acks([(1, 5)])
+        r.replay_mode = False
+        rec = r.check_duplicate((1, 1))
+        assert rec is not None and rec.result == "a"
+
+    def test_lease_expiry_requires_sync(self):
+        """§4.8 modification 2."""
+        r = RiflTable()
+        r.record_completion((1, 1), "a", synced=False)
+        assert not r.expire_client(1, all_synced=r.all_synced_for(1))
+        r.mark_synced_through([(1, 1)])
+        assert r.expire_client(1, all_synced=r.all_synced_for(1))
+        assert r.check_duplicate((1, 2)) is not None  # expired => ignored
+
+
+# ---------------------------------------------------------------- protocol paths
+class TestLocalCluster:
+    def test_fast_path_1rtt(self):
+        c = LocalCluster(f=3)
+        cl = c.new_client()
+        out = c.update(cl, cl.op_set("x", 1))
+        assert out.fast_path and out.rtts == 1 and out.witness_accepts == 3
+
+    def test_conflict_2rtt_synced_tag(self):
+        c = LocalCluster(f=3, sync_batch=50)
+        cl = c.new_client()
+        c.update(cl, cl.op_set("x", 1))
+        out = c.update(cl, cl.op_set("x", 2))
+        assert out.synced_path and out.rtts == 2
+
+    def test_read_blocked_by_unsynced_write(self):
+        c = LocalCluster(f=3, sync_batch=50)
+        cl = c.new_client()
+        c.update(cl, cl.op_set("x", 1))
+        out = c.read(cl, cl.op_get("x"))
+        assert out.value == 1 and out.rtts == 2   # §3.2.3: sync before read
+
+    def test_witness_drop_slow_path(self):
+        c = LocalCluster(f=3)
+        c.witness_drop(1)
+        cl = c.new_client()
+        out = c.update(cl, cl.op_set("x", 1))
+        assert not out.fast_path and out.rtts >= 2
+        # the op is durable via backup sync despite the dropped witness
+        assert c.master.synced_index == len(c.master.log)
+
+    def test_recovery_preserves_completed(self):
+        c = LocalCluster(f=3, sync_batch=50)
+        cl = c.new_client()
+        for i in range(30):
+            c.update(cl, cl.op_set(f"k{i}", i))
+        rep = c.crash_master()
+        assert rep.replayed >= 0
+        for i in range(30):
+            assert c.read(cl, cl.op_get(f"k{i}")).value == i
+
+    def test_retry_after_crash_rifl_filtered(self):
+        c = LocalCluster(f=3, sync_batch=50)
+        cl = c.new_client()
+        op = cl.op_incr("ctr")
+        out = c.update(cl, op)
+        assert out.value == 1
+        c.crash_master()
+        # client retries the SAME rpc: must not re-execute
+        verdict, res = c.master.handle_update(
+            op, c.config.fetch(0).witness_list_version, (), 0.0
+        )
+        assert verdict == "dup" and res.value == 1
+        assert c.read(cl, cl.op_get("ctr")).value == 1
+
+    def test_witness_reconfiguration_version_fence(self):
+        """§3.6: stale WitnessListVersion must be rejected by the master."""
+        c = LocalCluster(f=3)
+        cl = c.new_client()
+        old_version = c.config.fetch(0).witness_list_version
+        c.replace_witness(0)
+        op = cl.op_set("x", 1)
+        verdict, res = c.master.handle_update(op, old_version, (), 0.0)
+        assert verdict == "error" and res.error == "WRONG_WITNESS_VERSION"
+        # with the fresh config it succeeds
+        out = c.update(cl, cl.op_set("x", 1))
+        assert out.value == "OK"
+
+    def test_zombie_master_fenced_at_backups(self):
+        """§4.7: epoch fence rejects sync RPCs from a deposed master."""
+        c = LocalCluster(f=3, sync_batch=1000, auto_sync=False)
+        cl = c.new_client()
+        c.update(cl, cl.op_set("x", 1))
+        zombie = c.master
+        c.crash_master()
+        zombie.want_sync = True
+        req = zombie.begin_sync()
+        assert req is not None
+        resp = c.backups[0].handle_sync(req)
+        assert not resp.ok and c.backups[0].stats["rejected_epoch"] >= 1
+
+    def test_backup_read_consistency(self):
+        """§A.1: commutativity check against a witness gates backup reads."""
+        c = LocalCluster(f=3, sync_batch=50)
+        cl = c.new_client()
+        c.update(cl, cl.op_set("x", 1))
+        c.sync_now()
+        # synced: backup read allowed and fresh
+        v, from_backup = c.read_from_backup(cl, cl.op_get("x"))
+        assert v == 1 and from_backup
+        # unsynced write: witness holds x -> must fall back to master
+        c.update(cl, cl.op_set("x", 2))
+        v, from_backup = c.read_from_backup(cl, cl.op_get("x"))
+        assert v == 2 and not from_backup
+
+    def test_hot_key_preemptive_sync(self):
+        c = LocalCluster(f=3, sync_batch=1000, hot_key_window=10.0)
+        cl = c.new_client()
+        c.update(cl, cl.op_set("k", 1), now=0.0)
+        c.sync_now()
+        # synced but recently updated => next update is fast AND triggers a
+        # preemptive sync (§4.4), keeping future updates unblocked.
+        out = c.update(cl, cl.op_set("k", 2), now=5.0)
+        assert out.fast_path
+        assert c.master.stats["hot_key_syncs"] == 1
+        # far outside the window: no preemptive sync
+        c.sync_now()
+        c.update(cl, cl.op_set("k", 3), now=500.0)
+        assert c.master.stats["hot_key_syncs"] == 1
+
+
+# ---------------------------------------------------------------- consensus (§A.2)
+class TestConsensus:
+    def test_superquorum_math(self):
+        assert superquorum(2) == 4 and replay_threshold(2) == 2
+        assert superquorum(3) == 6 and replay_threshold(3) == 3
+
+    def test_fast_path_and_leader_change(self):
+        cc = ConsensusCluster(f=2)
+        s = ClientSession(client_id=7)
+        vals = {}
+        for i in range(10):
+            op = s.op_set(f"k{i}", i)
+            _, fast = cc.update(op)
+            assert fast
+            vals[f"k{i}"] = i
+        cc.crash(cc.leader.replica_id)
+        info = cc.change_leader()
+        for k, v in vals.items():
+            assert cc.store.get(k) == v, (k, info)
+
+    def test_completed_op_survives_f_failures(self):
+        cc = ConsensusCluster(f=2)
+        s = ClientSession(client_id=7)
+        op = s.op_set("precious", 42)
+        _, fast = cc.update(op)
+        assert fast
+        # kill the leader AND one more replica (f = 2 failures)
+        cc.crash(cc.leader.replica_id)
+        live = [r.replica_id for r in cc.live()]
+        cc.crash(live[-1])
+        cc.change_leader()
+        assert cc.store.get("precious") == 42
+
+
+# ---------------------------------------------------------------- §A.2 property
+from hypothesis import given, settings, strategies as st
+
+
+class TestConsensusProperty:
+    @settings(deadline=None, max_examples=12)
+    @given(seed=st.integers(0, 10_000), n_ops=st.integers(1, 25),
+           f=st.sampled_from([1, 2]))
+    def test_fast_completed_ops_survive_any_f_failures(self, seed, n_ops, f):
+        """§A.2 safety: every op completed via the witness superquorum
+        survives ANY f replica failures (including the leader)."""
+        import random
+
+        rng = random.Random(seed)
+        cc = ConsensusCluster(f=f, commit_batch=7)
+        s = ClientSession(client_id=5)
+        completed = {}
+        for i in range(n_ops):
+            op = s.op_set(f"k{rng.randrange(40)}", (seed, i))
+            res, fast = cc.update(op)
+            # Both paths complete durably: fast = witness superquorum,
+            # slow = committed to a majority before replying.
+            completed[op.keys[0]] = op.args[0]
+        # crash f replicas, leader first
+        victims = [cc.leader.replica_id]
+        others = [r.replica_id for r in cc.live()
+                  if r.replica_id not in victims]
+        rng.shuffle(others)
+        victims += others[: f - 1]
+        for v in victims:
+            cc.crash(v)
+        cc.change_leader()
+        for k, v in completed.items():
+            assert cc.store.get(k) == v, (k, seed)

@@ -1,0 +1,125 @@
+"""Simulator-level tests: calibration bands + linearizability under crashes
+(property-based over seeds/workloads with hypothesis)."""
+import statistics
+
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.client import ClientSession
+from repro.core.types import Op, OpType
+from repro.sim import (
+    SimParams,
+    UniformWriteWorkload,
+    YcsbWorkload,
+    check_linearizable,
+    run_scenario,
+)
+
+
+def median(xs):
+    return statistics.median(xs)
+
+
+class TestCalibration:
+    """The paper's headline numbers as bands (DESIGN.md §5)."""
+
+    def test_latency_1rtt_vs_2rtt(self):
+        unrep = run_scenario(mode="unreplicated", f=0, n_clients=1, n_ops=1500,
+                             op_factory=UniformWriteWorkload(seed=1), seed=42)
+        curp = run_scenario(mode="curp", f=3, n_clients=1, n_ops=1500,
+                            op_factory=UniformWriteWorkload(seed=1), seed=42)
+        sync = run_scenario(mode="sync", f=3, n_clients=1, n_ops=1500,
+                            op_factory=UniformWriteWorkload(seed=1), seed=42)
+        mu, mc, ms = (median(r.update_latencies) for r in (unrep, curp, sync))
+        # paper: 6.9 / 7.3 / 13.8 us
+        assert abs(mu - 6.9) < 0.5
+        assert abs(mc - 7.3) < 0.5
+        assert 1.7 < ms / mc < 2.3          # ~2x improvement
+        assert mc - mu < 1.0                # ~0.4us overhead vs unreplicated
+
+    def test_throughput_4x(self):
+        res = {}
+        for mode, f in [("curp", 3), ("sync", 3), ("async", 3),
+                        ("unreplicated", 0)]:
+            r = run_scenario(mode=mode, f=f, n_clients=24, n_ops=1500,
+                             op_factory=UniformWriteWorkload(seed=1), seed=7)
+            res[mode] = r.throughput_ops_per_sec
+        assert 3.0 < res["curp"] / res["sync"] < 5.0       # paper ~4x
+        assert res["curp"] / res["async"] > 0.85           # <=15% overhead
+        assert res["curp"] / res["unreplicated"] > 0.85
+
+    def test_conflicts_complete_in_2rtt(self):
+        """YCSB-A zipfian: conflicts kink at ~2 RTT, never more (§5.3)."""
+        r = run_scenario(mode="curp", f=3, n_clients=1, n_ops=2000,
+                         op_factory=YcsbWorkload(read_fraction=0.5,
+                                                 n_items=1000, seed=3),
+                         seed=5)
+        lat = sorted(r.update_latencies)
+        assert r.fast_fraction > 0.5
+        # p999 below 3 RTT-ish (~25us): no multi-RTT spirals
+        assert lat[int(0.999 * len(lat)) - 1] < 40.0
+
+
+class TestCrashLinearizability:
+    def test_crash_recovery_linearizable(self):
+        r = run_scenario(mode="curp", f=3, n_clients=8, n_ops=300,
+                         op_factory=UniformWriteWorkload(seed=3), seed=11,
+                         crash_at_us=1500.0)
+        assert r.recovery is not None
+        ok, key = check_linearizable(r.history)
+        assert ok, f"violation on {key}"
+
+    @settings(deadline=None, max_examples=8,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(0, 10_000),
+           crash_at=st.floats(500.0, 4000.0),
+           n_items=st.sampled_from([5, 50, 5000]))
+    def test_property_linearizable_under_crash(self, seed, crash_at, n_items):
+        """Random crash times x contention levels: completed ops are never
+        lost or reordered inconsistently (paper §3.4)."""
+        r = run_scenario(
+            mode="curp", f=3, n_clients=6, n_ops=120,
+            op_factory=UniformWriteWorkload(seed=seed, n_items=n_items),
+            seed=seed, crash_at_us=crash_at,
+        )
+        ok, key = check_linearizable(r.history)
+        assert ok, f"violation on {key} (seed={seed}, crash={crash_at})"
+
+    @settings(deadline=None, max_examples=6,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(0, 10_000))
+    def test_property_linearizable_ycsb_mixed(self, seed):
+        """Reads + writes on a hot zipfian keyspace stay linearizable."""
+        r = run_scenario(
+            mode="curp", f=3, n_clients=4, n_ops=100,
+            op_factory=YcsbWorkload(read_fraction=0.5, n_items=20, seed=seed),
+            seed=seed,
+        )
+        ok, key = check_linearizable(r.history)
+        assert ok, f"violation on {key} (seed={seed})"
+
+    def test_drops_and_reordering_still_linearizable(self):
+        p = SimParams(drop_prob=0.02, delay_jitter_sigma=0.4, tail_prob=0.05)
+        r = run_scenario(mode="curp", f=3, n_clients=4, n_ops=150,
+                         params=p,
+                         op_factory=UniformWriteWorkload(seed=1, n_items=30),
+                         seed=13)
+        ok, key = check_linearizable(r.history)
+        assert ok, f"violation on {key}"
+
+
+class TestWitnessChecker:
+    def test_checker_catches_violation(self):
+        """Sanity: the linearizability checker itself detects a fabricated
+        lost-update anomaly."""
+        w1 = Op(OpType.SET, ("k",), ("v1",), (1, 1))
+        rd = Op(OpType.GET, ("k",), (), (2, 1))
+        history = [
+            {"op": w1, "invoke": 0.0, "complete": 1.0, "value": "OK",
+             "failed": False, "client": 1},
+            # read AFTER the completed write returns None: violation
+            {"op": rd, "invoke": 2.0, "complete": 3.0, "value": None,
+             "failed": False, "client": 2},
+        ]
+        ok, key = check_linearizable(history)
+        assert not ok and key == "k"
