@@ -1,0 +1,10 @@
+.PHONY: check test bench-scaling
+
+check:
+	bash scripts/check.sh
+
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+bench-scaling:
+	PYTHONPATH=src python -m benchmarks.fig_scaling

@@ -1,0 +1,80 @@
+"""Scaling figure (sharding, §4/Fig. 3): aggregate committed-ops/s and
+fast-path ratio vs shard count, uniform and shard-skewed workloads.
+
+Each shard is a full CURP group (master + f witnesses + f backups) in one
+simulated network; clients route by the protocol's KeyRouter.  Expected
+shape: aggregate throughput grows monotonically with shards on a uniform
+workload while the fast-path ratio stays at the single-shard level (disjoint
+partitions can't conflict more by being split); a hot-shard skew caps the
+gain at the hot master's capacity — the case witness migration / resharding
+(ROADMAP) would address.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.sim import ShardSkewedWorkload, UniformWriteWorkload, run_sharded_scenario
+
+from .common import emit
+
+SHARD_COUNTS = (1, 2, 4)
+
+
+def main(n_ops: int = 1200, n_clients: int = 16) -> dict:
+    rows = []
+    thr = {}
+    fast = {}
+    for n_shards in SHARD_COUNTS:
+        r = run_sharded_scenario(
+            n_shards=n_shards, mode="curp", f=3, n_clients=n_clients,
+            n_ops=n_ops, op_factory=UniformWriteWorkload(seed=1), seed=7,
+        )
+        thr[n_shards] = r.throughput_ops_per_sec
+        fast[n_shards] = r.fast_fraction
+        rows.append({
+            "workload": "uniform", "shards": n_shards,
+            "kops_per_s": r.throughput_ops_per_sec / 1e3,
+            "fast_frac": r.fast_fraction,
+        })
+    skew = {}
+    for n_shards in SHARD_COUNTS:
+        r = run_sharded_scenario(
+            n_shards=n_shards, mode="curp", f=3, n_clients=n_clients,
+            n_ops=n_ops,
+            op_factory=ShardSkewedWorkload(
+                n_shards=n_shards, hot_frac=0.8,
+                n_items=max(4000, 1000 * n_shards), seed=2,
+            ),
+            seed=7,
+        )
+        skew[n_shards] = r.throughput_ops_per_sec
+        rows.append({
+            "workload": "skew80", "shards": n_shards,
+            "kops_per_s": r.throughput_ops_per_sec / 1e3,
+            "fast_frac": r.fast_fraction,
+        })
+    emit(rows, "fig_scaling: throughput & fast-path vs shard count")
+    hi = SHARD_COUNTS[-1]
+    derived = {
+        "thr_1shard_kops": thr[1] / 1e3,
+        f"thr_{hi}shard_kops": thr[hi] / 1e3,
+        f"speedup_{hi}x": thr[hi] / thr[1],
+        "monotonic": int(all(thr[a] < thr[b] for a, b in
+                             zip(SHARD_COUNTS, SHARD_COUNTS[1:]))),
+        f"fast_ratio_{hi}_vs_1": fast[hi] / fast[1],
+        f"skew_speedup_{hi}x": skew[hi] / skew[1],
+    }
+    print("derived:", derived)
+    return derived
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny op counts (CI wiring check, not a measurement)")
+    args = ap.parse_args()
+    if args.smoke:
+        d = main(n_ops=120, n_clients=8)
+    else:
+        d = main()
+    assert d["monotonic"] == 1, f"throughput not monotonic in shards: {d}"

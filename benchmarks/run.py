@@ -15,6 +15,7 @@ def main() -> None:
         fig10_ops,
         fig11_witness_capacity,
         fig12_batchsize,
+        fig_scaling,
         roofline_table,
     )
 
@@ -26,6 +27,7 @@ def main() -> None:
         ("fig10_ops", fig10_ops.main),
         ("fig11_witness_capacity", fig11_witness_capacity.main),
         ("fig12_batchsize", fig12_batchsize.main),
+        ("fig_scaling", fig_scaling.main),
         ("roofline_table", roofline_table.main),
     ]
     results = []

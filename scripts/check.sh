@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 gate + benchmark wiring check.
+#
+#   scripts/check.sh            # full tier-1 tests + fig_scaling smoke
+#   scripts/check.sh -m 'not slow'   # extra pytest args pass through
+#
+# The fig_scaling smoke run uses tiny op counts: it validates that the
+# sharded benchmark still runs end-to-end (and stays monotonic), not the
+# measured numbers.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"
+python -m benchmarks.fig_scaling --smoke
+echo "check.sh: all green"

@@ -7,13 +7,21 @@ backup syncs, RIFL exactly-once semantics, crash recovery, reconfiguration,
 and the §A.1 (backup reads) / §A.2 (consensus) extensions.
 """
 from .backup import Backup, LogEntry
-from .client import ClientSession, Decision, decide
+from .client import ClientSession, Decision, combine_decisions, decide, decide_multi
 from .config import ConfigManager
 from .consensus import ConsensusCluster, replay_threshold, superquorum
 from .local import LocalCluster, OpOutcome
 from .master import DUP, ERROR, FAST, SYNCED, Master
 from .recovery import RecoveryReport, recover_master
 from .rifl import RiflTable
+from .shard import (
+    ClusterRecoveryReport,
+    KeyRouter,
+    ShardedClientSession,
+    ShardedCluster,
+    ShardGroup,
+    mix2x32,
+)
 from .store import KVStore
 from .types import (
     ClusterConfig,
@@ -30,9 +38,12 @@ from .witness import Witness
 
 __all__ = [
     "Backup", "LogEntry", "ClientSession", "Decision", "decide",
+    "decide_multi", "combine_decisions",
     "ConfigManager", "ConsensusCluster", "replay_threshold", "superquorum",
     "LocalCluster", "OpOutcome", "Master", "FAST", "SYNCED", "DUP", "ERROR",
     "RecoveryReport", "recover_master", "RiflTable", "KVStore",
+    "ClusterRecoveryReport", "KeyRouter", "ShardedClientSession",
+    "ShardedCluster", "ShardGroup", "mix2x32",
     "ClusterConfig", "ExecResult", "Op", "OpType", "RecordStatus", "RpcId",
     "WitnessMode", "keyhash", "splitmix64", "Witness",
 ]

@@ -38,6 +38,37 @@ def decide(
     return Decision.NEED_SYNC
 
 
+def decide_multi(
+    parts: Sequence[Tuple[ExecResult, Sequence[RecordStatus]]]
+) -> Decision:
+    """Client completion rule for a multi-shard op (one sub-op per shard).
+
+    COMPLETE means the client owes no further RPCs: every shard's sub-op is
+    durable, either via that shard's full witness accept set (1 RTT) or
+    because that shard's master tagged its result synced (the master already
+    paid the sync before replying — 2 RTTs on that shard, but nothing left
+    for the client to do).  A stale config at any shard forces a refetch;
+    otherwise NEED_SYNC means the client must issue explicit sync RPCs — but
+    only to the shards whose own ``decide`` returned NEED_SYNC.  Note
+    COMPLETE is about completion, not latency: the op counts as 1-RTT only
+    if additionally every shard's verdict was fast (see ShardedCluster.mset).
+    """
+    return combine_decisions(decide(result, statuses)
+                             for result, statuses in parts)
+
+
+def combine_decisions(decisions) -> Decision:
+    """Fold per-shard ``decide`` outcomes into the op-level decision (the
+    single source of truth for both decide_multi and harnesses that already
+    hold the per-shard decisions)."""
+    decisions = list(decisions)
+    if any(d is Decision.REFETCH_CONFIG for d in decisions):
+        return Decision.REFETCH_CONFIG
+    if all(d is Decision.COMPLETE for d in decisions):
+        return Decision.COMPLETE
+    return Decision.NEED_SYNC
+
+
 @dataclass
 class ClientSession:
     """Per-client RIFL identity: rpc_id allocation + ack tracking."""

@@ -23,6 +23,15 @@ class ConfigManager:
     def fetch(self, shard_id: int = 0) -> ClusterConfig:
         return self._configs[shard_id]
 
+    def epoch(self, shard_id: int = 0) -> int:
+        """Per-shard epoch: each shard fails over independently, so epochs
+        advance per shard — a master crash on shard k fences only shard k's
+        zombies and leaves every other shard's epoch untouched."""
+        return self._configs[shard_id].epoch
+
+    def epochs(self) -> Dict[int, int]:
+        return {sid: cfg.epoch for sid, cfg in self._configs.items()}
+
     def replace_witness(
         self, shard_id: int, dead_witness: int, new_witness: int
     ) -> ClusterConfig:

@@ -5,6 +5,12 @@ every RPC is a function call, but the *protocol steps are the real ones* —
 witness records, speculative execution, batched syncs, gc, recovery, witness
 reconfiguration.  Timing behaviour (latency/throughput) lives in repro.sim.
 
+Shard model: the protocol drive loop lives in repro.core.shard.ShardGroup —
+one master plus its own witness group and backups.  LocalCluster is exactly
+one ShardGroup (the single-master harness the unit tests exercise);
+ShardedCluster (same module) is N of them behind a KeyRouter, which is how
+the paper deploys CURP on a partitioned store (§4, Fig. 3).
+
 Fault injection knobs let tests exercise the interesting interleavings:
   * ``witness_drop(witness_idx)``: client's record RPC to that witness is lost.
   * ``crash_master(lose_unsynced=True)``: master dies; unsynced state is gone;
@@ -13,22 +19,14 @@ Fault injection knobs let tests exercise the interesting interleavings:
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Tuple
 
-from .backup import Backup
-from .client import ClientSession, Decision, decide
+from .client import ClientSession
 from .config import ConfigManager
-from .master import DUP, ERROR, FAST, SYNCED, Master
-from .recovery import RecoveryReport, recover_master
-from .types import (
-    ClusterConfig,
-    ExecResult,
-    Op,
-    RecordStatus,
-    WitnessMode,
-)
-from .witness import Witness
+from .recovery import RecoveryReport
+from .shard import HistoryRecorder, ShardGroup
+from .types import Op
 
 
 @dataclass
@@ -41,6 +39,8 @@ class OpOutcome:
 
 
 class LocalCluster:
+    """Single-master CURP harness: a thin shell over one ShardGroup."""
+
     def __init__(
         self,
         f: int = 3,
@@ -53,40 +53,45 @@ class LocalCluster:
     ) -> None:
         self.f = f
         self.rng = random.Random(seed)
-        self.auto_sync = auto_sync
         self.config = ConfigManager()
         self._next_node_id = 0
-        self.master = Master(
-            self._node_id(), epoch=0, sync_batch=sync_batch,
-            hot_key_window=hot_key_window,
+        self._record = HistoryRecorder()
+        self.history = self._record.history   # linearizability-checkable log
+        self.group = ShardGroup(
+            shard_id=0, config=self.config, alloc_id=self._node_id,
+            f=f, sync_batch=sync_batch, witness_sets=witness_sets,
+            witness_ways=witness_ways, hot_key_window=hot_key_window,
+            auto_sync=auto_sync, record=self._record,
         )
-        self.backups = [Backup(self._node_id()) for _ in range(f)]
-        self.witnesses = [
-            Witness(witness_sets, witness_ways) for _ in range(f)
-        ]
-        self._witness_ids = tuple(self._node_id() for _ in range(f))
-        for w in self.witnesses:
-            w.start(self.master.master_id)
-        self.config.publish(0, ClusterConfig(
-            master_id=self.master.master_id,
-            epoch=0,
-            backup_ids=tuple(b.backup_id for b in self.backups),
-            witness_ids=self._witness_ids,
-            witness_list_version=0,
-        ))
-        self._dropped_witnesses: set[int] = set()
-        self.history: List[dict] = []   # linearizability-checkable op log
 
     def _node_id(self) -> int:
         self._next_node_id += 1
         return self._next_node_id
 
+    # ------------------------------------------------- group state passthrough
+    @property
+    def master(self):
+        return self.group.master
+
+    @property
+    def backups(self):
+        return self.group.backups
+
+    @property
+    def witnesses(self):
+        return self.group.witnesses
+
+    @property
+    def auto_sync(self) -> bool:
+        return self.group.auto_sync
+
+    @auto_sync.setter
+    def auto_sync(self, v: bool) -> None:
+        self.group.auto_sync = v
+
     # ------------------------------------------------------------------ faults
     def witness_drop(self, witness_idx: int, dropped: bool = True) -> None:
-        if dropped:
-            self._dropped_witnesses.add(witness_idx)
-        else:
-            self._dropped_witnesses.discard(witness_idx)
+        self.group.witness_drop(witness_idx, dropped)
 
     # ----------------------------------------------------------------- client
     def new_client(self) -> ClientSession:
@@ -94,71 +99,10 @@ class LocalCluster:
 
     def update(self, session: ClientSession, op: Op, now: float = 0.0) -> OpOutcome:
         """Full CURP update: update RPC + parallel witness records."""
-        for _attempt in range(4):
-            cfg = self.config.fetch(0)
-            # 1 RTT: client -> master (speculative) and client -> witnesses.
-            verdict, result = self.master.handle_update(
-                op, cfg.witness_list_version, session.acks(), now
-            )
-            if verdict == ERROR:
-                # Stale witness list / migration: refetch config and retry.
-                continue
-
-            statuses = []
-            for i, w in enumerate(self.witnesses):
-                if i in self._dropped_witnesses:
-                    statuses.append(RecordStatus.REJECTED)  # timeout == reject
-                else:
-                    statuses.append(
-                        w.record(cfg.master_id, op.key_hashes(), op.rpc_id, op)
-                    )
-
-            if verdict == SYNCED:
-                self._drain_syncs()
-                decision = Decision.COMPLETE
-                rtts, fast = 2, False
-            else:
-                decision = decide(result, statuses)
-                rtts, fast = (1, True) if decision is Decision.COMPLETE else (2, False)
-
-            if decision is Decision.NEED_SYNC:
-                # Slow path: explicit sync RPC.
-                self._drain_syncs()
-                decision = Decision.COMPLETE
-
-            if self.auto_sync and self.master.want_sync:
-                self._drain_syncs()
-
-            session.mark_completed(op.rpc_id)
-            out = OpOutcome(
-                value=result.value,
-                rtts=rtts,
-                fast_path=fast and verdict == FAST,
-                synced_path=verdict == SYNCED,
-                witness_accepts=sum(
-                    1 for s in statuses if s is RecordStatus.ACCEPTED
-                ),
-            )
-            self.history.append({
-                "op": op, "value": result.value, "client": session.client_id,
-            })
-            return out
-        raise RuntimeError("update retries exhausted")
+        return self.group.update(session, op, now)
 
     def read(self, session: ClientSession, op: Op, now: float = 0.0) -> OpOutcome:
-        verdict, result = self.master.handle_read(op, now)
-        if verdict == SYNCED:
-            self._drain_syncs()
-        self.history.append({
-            "op": op, "value": result.value, "client": session.client_id,
-        })
-        return OpOutcome(
-            value=result.value,
-            rtts=1 if verdict == FAST else 2,
-            fast_path=verdict == FAST,
-            synced_path=verdict == SYNCED,
-            witness_accepts=0,
-        )
+        return self.group.read(session, op, now)
 
     def read_from_backup(
         self, session: ClientSession, op: Op, backup_idx: int = 0,
@@ -166,95 +110,22 @@ class LocalCluster:
     ) -> Tuple[Any, bool]:
         """§A.1 consistent read from a (local) backup: check commutativity with
         a (local) witness first.  Returns (value, served_by_backup)."""
-        w = self.witnesses[witness_idx]
-        if w.commutes_with_all(op.key_hashes()):
-            # Backup value is guaranteed fresh: rebuild view from its log.
-            from .store import KVStore
-
-            view = KVStore()
-            for e in self.backups[backup_idx].get_log():
-                view.execute(e.op)
-            return view.get(op.keys[0]), True
-        # Witness holds a non-commutative record: must go to the master.
-        out = self.read(session, op)
-        return out.value, False
+        return self.group.read_from_backup(session, op, backup_idx, witness_idx)
 
     # ------------------------------------------------------------------ syncs
     def _drain_syncs(self) -> None:
-        """Run batched backup syncs + witness gc until quiescent (§4.4, §3.5)."""
-        while True:
-            req = self.master.begin_sync()
-            if req is None:
-                return
-            ok = True
-            for b in self.backups:
-                resp = b.handle_sync(req)
-                ok = ok and resp.ok
-            if not ok:
-                self.master.abort_sync()
-                return
-            gc_entries = self.master.complete_sync()
-            for i, w in enumerate(self.witnesses):
-                if i not in self._dropped_witnesses:
-                    resp = w.gc(gc_entries)
-                    # §4.5: retry suspected uncollected garbage through RIFL.
-                    for op in resp.stale_requests:
-                        self.master.handle_update(
-                            op, self.config.fetch(0).witness_list_version, (), 0.0
-                        )
+        self.group._drain_syncs()
 
     def sync_now(self) -> None:
-        self.master.want_sync = True
-        self._drain_syncs()
+        self.group.sync_now()
 
     # --------------------------------------------------------------- recovery
     def crash_master(self) -> RecoveryReport:
         """Kill the master (unsynced state is lost) and recover a new one from
         backups + one witness (§3.3)."""
-        old_id = self.master.master_id
-        new_master = Master(
-            self._node_id(),
-            sync_batch=self.master.sync_batch,
-            hot_key_window=self.master.hot_key_window,
-        )
-        # Pick any reachable witness (here: first non-dropped).
-        live = [i for i in range(self.f) if i not in self._dropped_witnesses]
-        assert live, "no witness reachable: recovery must wait (§3.3)"
-        recovery_witness = self.witnesses[live[0]]
-        new_witnesses = [
-            Witness(recovery_witness.n_sets, recovery_witness.n_ways)
-            for _ in range(self.f)
-        ]
-        new_ids = tuple(self._node_id() for _ in range(self.f))
-        report = recover_master(
-            shard_id=0,
-            old_master_id=old_id,
-            new_master=new_master,
-            backups=self.backups,
-            recovery_witness=recovery_witness,
-            new_witnesses=new_witnesses,
-            new_witness_ids=new_ids,
-            config=self.config,
-        )
-        self.master = new_master
-        self.witnesses = new_witnesses
-        self._witness_ids = new_ids
-        self._dropped_witnesses.clear()
-        return report
+        return self.group.crash_master()
 
     def replace_witness(self, witness_idx: int) -> None:
         """§3.6 case 2: decommission a witness, install a fresh one, bump the
         WitnessListVersion; master syncs before the new config goes live."""
-        dead_id = self._witness_ids[witness_idx]
-        new_w = Witness(
-            self.witnesses[witness_idx].n_sets, self.witnesses[witness_idx].n_ways
-        )
-        new_id = self._node_id()
-        self.sync_now()  # master must sync to restore f fault tolerance
-        cfg = self.config.replace_witness(0, dead_id, new_id)
-        self.master.witness_list_version = cfg.witness_list_version
-        new_w.start(self.master.master_id)
-        self.witnesses[witness_idx] = new_w
-        ids = list(self._witness_ids)
-        ids[witness_idx] = new_id
-        self._witness_ids = tuple(ids)
+        self.group.replace_witness(witness_idx)

@@ -25,6 +25,7 @@ class RecoveryReport:
     replayed: int            # ops actually re-executed (not RIFL-filtered)
     new_epoch: int
     new_witness_list_version: int
+    shard_id: int = 0        # which shard failed over (per-shard epochs)
 
 
 def recover_master(
@@ -75,4 +76,5 @@ def recover_master(
         replayed=replayed,
         new_epoch=cfg.epoch,
         new_witness_list_version=cfg.witness_list_version,
+        shard_id=shard_id,
     )

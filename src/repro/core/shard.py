@@ -1,0 +1,566 @@
+"""Sharded CURP: multi-master partitioning (§4, Fig. 3).
+
+CURP is designed for partitioned stores: each master owns a key partition and
+has its *own* witness group and backups; commutativity is judged per shard, so
+disjoint partitions proceed entirely in parallel and one master crash only
+replays that shard's witnesses.
+
+Three pieces live here:
+
+  * ``KeyRouter`` — hash-based placement.  The mix is the pure-Python mirror
+    of the Pallas ``keyhash2x32`` kernel (repro.kernels.keyhash): the 64-bit
+    splitmix key hash is split into (hi, lo) uint32 lanes, pushed through the
+    murmur3 fmix32 chain, and the low output lane mod ``n_shards`` picks the
+    shard.  ``repro.kernels.ops.shard_route`` computes the same placement
+    batched on-device; Python and Pallas must agree bit-for-bit.
+  * ``ShardGroup`` — one master + its witness group + its backups, with the
+    full protocol drive loop (speculative update, witness records, batched
+    syncs + gc, crash recovery, witness reconfiguration).  This is the unit
+    ``LocalCluster`` wraps exactly once and ``ShardedCluster`` wraps N times.
+  * ``ShardedCluster`` — a set of shards behind a ``KeyRouter``, with
+    per-shard RPC-id spaces (``ShardedClientSession``) and cross-shard
+    multi-key ops (``mset``): each shard's sub-op takes the per-shard 1-RTT
+    fast path; if any shard's witnesses reject, only that shard falls back to
+    an explicit sync (2 RTTs overall).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .backup import Backup
+from .client import ClientSession, Decision, combine_decisions, decide
+from .config import ConfigManager
+from .master import DUP, ERROR, FAST, SYNCED, Master
+from .recovery import RecoveryReport, recover_master
+from .types import ClusterConfig, ExecResult, Op, RecordStatus, keyhash
+from .witness import Witness
+
+_M32 = 0xFFFFFFFF
+
+
+def _fmix32(x: int) -> int:
+    """murmur3 32-bit finalizer — must match kernels/ref.py ``fmix32``."""
+    x &= _M32
+    x ^= x >> 16
+    x = (x * 0x85EBCA6B) & _M32
+    x ^= x >> 13
+    x = (x * 0xC2B2AE35) & _M32
+    x ^= x >> 16
+    return x
+
+
+def mix2x32(hi: int, lo: int) -> Tuple[int, int]:
+    """Pure-Python mirror of ``ref_keyhash2x32``: (hi, lo) -> (h2, h3)."""
+    h1 = _fmix32((lo + 0x9E3779B9) & _M32)
+    h2 = _fmix32(hi ^ h1)
+    h3 = _fmix32((h1 + h2 * 5 + 0xE6546B64) & _M32)
+    return h2, h3
+
+
+class KeyRouter:
+    """Deterministic key -> shard placement shared by Python and Pallas.
+
+    Input is the canonical 64-bit key hash (types.keyhash) split into uint32
+    lanes; the shard is the keyhash2x32-mixed low lane mod ``n_shards``.
+    """
+
+    def __init__(self, n_shards: int) -> None:
+        assert n_shards >= 1
+        self.n_shards = n_shards
+
+    def shard_of_hash(self, kh64: int) -> int:
+        _, h3 = mix2x32((kh64 >> 32) & _M32, kh64 & _M32)
+        return h3 % self.n_shards
+
+    def shard_of(self, key: Any) -> int:
+        return self.shard_of_hash(keyhash(key))
+
+    def split_keys(self, keys: Sequence[Any]) -> Dict[int, List[int]]:
+        """Group key *positions* by owning shard (stable within a shard)."""
+        parts: Dict[int, List[int]] = {}
+        for i, k in enumerate(keys):
+            parts.setdefault(self.shard_of(k), []).append(i)
+        return parts
+
+
+class HistoryRecorder:
+    """Linearizability-checkable op log shared by the in-process harnesses.
+
+    Entries carry logical (invoke, complete) windows: sequential ops get
+    disjoint windows; sub-ops of one multi-shard op share a window (they ran
+    concurrently, and linearizability decomposes per key).  The entry shape
+    is what repro.sim.linearizability's checker consumes.
+    """
+
+    def __init__(self) -> None:
+        self.history: List[dict] = []
+        self._tick = 0
+
+    def next_window(self) -> Tuple[float, float]:
+        t = float(self._tick)
+        self._tick += 1
+        return (t, t + 0.5)
+
+    def __call__(self, op: Op, value: Any, client_id: int,
+                 window: Optional[Tuple[float, float]] = None) -> None:
+        if window is None:
+            window = self.next_window()
+        self.history.append({
+            "op": op, "value": value, "client": client_id,
+            "invoke": window[0], "complete": window[1], "failed": False,
+        })
+
+
+# ---------------------------------------------------------------------------
+# One shard = one master group
+# ---------------------------------------------------------------------------
+class ShardGroup:
+    """One CURP replica group: master + f witnesses + f backups.
+
+    Transport is instant function calls (the timed mirror is repro.sim); the
+    protocol steps are the real ones.  The enclosing cluster owns node-id
+    allocation (``alloc_id``), the shared ConfigManager, and history
+    recording (``record``).
+    """
+
+    def __init__(
+        self,
+        shard_id: int,
+        config: ConfigManager,
+        alloc_id: Callable[[], int],
+        f: int = 3,
+        sync_batch: int = 50,
+        witness_sets: int = 1024,
+        witness_ways: int = 4,
+        hot_key_window: float = 0.0,
+        auto_sync: bool = True,
+        record: Optional[Callable[[Op, Any, int], None]] = None,
+    ) -> None:
+        self.shard_id = shard_id
+        self.config = config
+        self.alloc_id = alloc_id
+        self.f = f
+        self.auto_sync = auto_sync
+        self.record = record or (lambda op, value, client_id: None)
+        self.master = Master(
+            alloc_id(), epoch=0, sync_batch=sync_batch,
+            hot_key_window=hot_key_window,
+        )
+        self.backups = [Backup(alloc_id()) for _ in range(f)]
+        self.witnesses = [Witness(witness_sets, witness_ways) for _ in range(f)]
+        self._witness_ids = tuple(alloc_id() for _ in range(f))
+        for w in self.witnesses:
+            w.start(self.master.master_id)
+        config.publish(shard_id, ClusterConfig(
+            master_id=self.master.master_id,
+            epoch=0,
+            backup_ids=tuple(b.backup_id for b in self.backups),
+            witness_ids=self._witness_ids,
+            witness_list_version=0,
+        ))
+        self._dropped_witnesses: set[int] = set()
+
+    # ------------------------------------------------------------------ faults
+    def witness_drop(self, witness_idx: int, dropped: bool = True) -> None:
+        if dropped:
+            self._dropped_witnesses.add(witness_idx)
+        else:
+            self._dropped_witnesses.discard(witness_idx)
+
+    # ----------------------------------------------------------------- updates
+    def attempt_update(
+        self, op: Op, acks: Tuple[Tuple[int, int], ...], now: float = 0.0,
+    ) -> Tuple[str, ExecResult, List[RecordStatus]]:
+        """One 1-RTT round: update RPC to the master + parallel witness
+        records.  Retries internally on stale-config errors (§3.6)."""
+        for _attempt in range(4):
+            cfg = self.config.fetch(self.shard_id)
+            verdict, result = self.master.handle_update(
+                op, cfg.witness_list_version, acks, now
+            )
+            if verdict == ERROR:
+                continue  # refetch config and retry
+            statuses: List[RecordStatus] = []
+            for i, w in enumerate(self.witnesses):
+                if i in self._dropped_witnesses:
+                    statuses.append(RecordStatus.REJECTED)  # timeout == reject
+                else:
+                    statuses.append(
+                        w.record(cfg.master_id, op.key_hashes(), op.rpc_id, op)
+                    )
+            return verdict, result, statuses
+        raise RuntimeError("update retries exhausted")
+
+    def update(self, session: ClientSession, op: Op, now: float = 0.0):
+        """Full CURP update; returns an OpOutcome (see local.py)."""
+        from .local import OpOutcome
+
+        verdict, result, statuses = self.attempt_update(op, session.acks(), now)
+
+        if verdict == SYNCED:
+            self._drain_syncs()
+            decision = Decision.COMPLETE
+            rtts, fast = 2, False
+        else:
+            decision = decide(result, statuses)
+            rtts, fast = (1, True) if decision is Decision.COMPLETE else (2, False)
+
+        if decision is Decision.NEED_SYNC:
+            # Slow path: explicit sync RPC.
+            self._drain_syncs()
+            decision = Decision.COMPLETE
+
+        if self.auto_sync and self.master.want_sync:
+            self._drain_syncs()
+
+        session.mark_completed(op.rpc_id)
+        self.record(op, result.value, session.client_id)
+        return OpOutcome(
+            value=result.value,
+            rtts=rtts,
+            fast_path=fast and verdict == FAST,
+            synced_path=verdict == SYNCED,
+            witness_accepts=sum(
+                1 for s in statuses if s is RecordStatus.ACCEPTED
+            ),
+        )
+
+    def read(self, session: ClientSession, op: Op, now: float = 0.0):
+        from .local import OpOutcome
+
+        verdict, result = self.master.handle_read(op, now)
+        if verdict == SYNCED:
+            self._drain_syncs()
+        self.record(op, result.value, session.client_id)
+        return OpOutcome(
+            value=result.value,
+            rtts=1 if verdict == FAST else 2,
+            fast_path=verdict == FAST,
+            synced_path=verdict == SYNCED,
+            witness_accepts=0,
+        )
+
+    def read_from_backup(
+        self, session: ClientSession, op: Op, backup_idx: int = 0,
+        witness_idx: int = 0,
+    ) -> Tuple[Any, bool]:
+        """§A.1 consistent read from a (local) backup: check commutativity with
+        a (local) witness first.  Returns (value, served_by_backup)."""
+        w = self.witnesses[witness_idx]
+        if w.commutes_with_all(op.key_hashes()):
+            from .store import KVStore
+
+            view = KVStore()
+            for e in self.backups[backup_idx].get_log():
+                view.execute(e.op)
+            return view.get(op.keys[0]), True
+        out = self.read(session, op)
+        return out.value, False
+
+    # ------------------------------------------------------------------ syncs
+    def _drain_syncs(self) -> None:
+        """Run batched backup syncs + witness gc until quiescent (§4.4, §3.5)."""
+        while True:
+            req = self.master.begin_sync()
+            if req is None:
+                return
+            ok = True
+            for b in self.backups:
+                resp = b.handle_sync(req)
+                ok = ok and resp.ok
+            if not ok:
+                self.master.abort_sync()
+                return
+            gc_entries = self.master.complete_sync()
+            for i, w in enumerate(self.witnesses):
+                if i not in self._dropped_witnesses:
+                    resp = w.gc(gc_entries)
+                    # §4.5: retry suspected uncollected garbage through RIFL.
+                    for op in resp.stale_requests:
+                        self.master.handle_update(
+                            op,
+                            self.config.fetch(self.shard_id).witness_list_version,
+                            (), 0.0,
+                        )
+
+    def sync_now(self) -> None:
+        self.master.want_sync = True
+        self._drain_syncs()
+
+    # --------------------------------------------------------------- recovery
+    def crash_master(self) -> RecoveryReport:
+        """Kill this shard's master (unsynced state lost) and recover a new
+        one from this shard's backups + one of its witnesses (§3.3).  Other
+        shards are untouched by construction."""
+        old_id = self.master.master_id
+        new_master = Master(
+            self.alloc_id(),
+            sync_batch=self.master.sync_batch,
+            hot_key_window=self.master.hot_key_window,
+        )
+        live = [i for i in range(self.f) if i not in self._dropped_witnesses]
+        assert live, "no witness reachable: recovery must wait (§3.3)"
+        recovery_witness = self.witnesses[live[0]]
+        new_witnesses = [
+            Witness(recovery_witness.n_sets, recovery_witness.n_ways)
+            for _ in range(self.f)
+        ]
+        new_ids = tuple(self.alloc_id() for _ in range(self.f))
+        report = recover_master(
+            shard_id=self.shard_id,
+            old_master_id=old_id,
+            new_master=new_master,
+            backups=self.backups,
+            recovery_witness=recovery_witness,
+            new_witnesses=new_witnesses,
+            new_witness_ids=new_ids,
+            config=self.config,
+        )
+        self.master = new_master
+        self.witnesses = new_witnesses
+        self._witness_ids = new_ids
+        self._dropped_witnesses.clear()
+        return report
+
+    def replace_witness(self, witness_idx: int) -> None:
+        """§3.6 case 2: decommission a witness, install a fresh one, bump the
+        WitnessListVersion; master syncs before the new config goes live."""
+        dead_id = self._witness_ids[witness_idx]
+        new_w = Witness(
+            self.witnesses[witness_idx].n_sets, self.witnesses[witness_idx].n_ways
+        )
+        new_id = self.alloc_id()
+        self.sync_now()  # master must sync to restore f fault tolerance
+        cfg = self.config.replace_witness(self.shard_id, dead_id, new_id)
+        self.master.witness_list_version = cfg.witness_list_version
+        new_w.start(self.master.master_id)
+        self.witnesses[witness_idx] = new_w
+        ids = list(self._witness_ids)
+        ids[witness_idx] = new_id
+        self._witness_ids = tuple(ids)
+
+
+# ---------------------------------------------------------------------------
+# Client sessions with per-shard RPC-id spaces
+# ---------------------------------------------------------------------------
+class ShardedClientSession:
+    """One logical client talking to N shards.
+
+    Each shard's master has its own RIFL table, so the client keeps an
+    independent (client_id, seq) space per shard — acks to shard k can never
+    delete completion records held by shard j's master.
+    """
+
+    def __init__(self, client_id: int, router: KeyRouter) -> None:
+        self.client_id = client_id
+        self.router = router
+        self._subs: Dict[int, ClientSession] = {}
+
+    def session_for(self, shard_id: int) -> ClientSession:
+        s = self._subs.get(shard_id)
+        if s is None:
+            s = self._subs[shard_id] = ClientSession(client_id=self.client_id)
+        return s
+
+    # convenience constructors (route, then allocate from that shard's space)
+    def _sub(self, key) -> ClientSession:
+        return self.session_for(self.router.shard_of(key))
+
+    def op_set(self, key, value) -> Op:
+        return self._sub(key).op_set(key, value)
+
+    def op_get(self, key) -> Op:
+        return self._sub(key).op_get(key)
+
+    def op_incr(self, key, delta: int = 1) -> Op:
+        return self._sub(key).op_incr(key, delta)
+
+    def op_hmset(self, key, fields) -> Op:
+        return self._sub(key).op_hmset(key, fields)
+
+    def op_del(self, key) -> Op:
+        return self._sub(key).op_del(key)
+
+    def mset_parts(self, kvs) -> Dict[int, Op]:
+        """Split a multi-key set into per-shard MSET sub-ops, each carrying an
+        rpc_id from that shard's RIFL space."""
+        kvs = list(kvs)
+        parts = self.router.split_keys([k for k, _ in kvs])
+        out: Dict[int, Op] = {}
+        for shard_id, idxs in parts.items():
+            out[shard_id] = self.session_for(shard_id).op_mset(
+                [kvs[i] for i in idxs]
+            )
+        return out
+
+
+@dataclass
+class ClusterRecoveryReport:
+    """Aggregate of per-shard RecoveryReports (serving-level crash)."""
+    per_shard: Tuple[RecoveryReport, ...]
+
+    @property
+    def replayed(self) -> int:
+        return sum(r.replayed for r in self.per_shard)
+
+    @property
+    def restored_log_entries(self) -> int:
+        return sum(r.restored_log_entries for r in self.per_shard)
+
+    @property
+    def witness_requests(self) -> int:
+        return sum(r.witness_requests for r in self.per_shard)
+
+
+# ---------------------------------------------------------------------------
+# The sharded cluster
+# ---------------------------------------------------------------------------
+class ShardedCluster:
+    """N CURP shards behind a KeyRouter (paper §4, Fig. 3 deployment shape).
+
+    Single-shard ops behave exactly like LocalCluster ops against the owning
+    shard.  ``mset`` fans sub-ops out to every touched shard; it completes in
+    1 RTT iff every shard's witnesses accepted, otherwise only the rejecting
+    shards pay the sync fallback.
+    """
+
+    def __init__(
+        self,
+        n_shards: int = 4,
+        f: int = 3,
+        sync_batch: int = 50,
+        witness_sets: int = 1024,
+        witness_ways: int = 4,
+        hot_key_window: float = 0.0,
+        seed: int = 0,
+        auto_sync: bool = True,
+    ) -> None:
+        self.n_shards = n_shards
+        self.f = f
+        self.rng = random.Random(seed)
+        self.config = ConfigManager()
+        self.router = KeyRouter(n_shards)
+        self._record = HistoryRecorder()
+        self.history = self._record.history   # linearizability-checkable log
+        self._next_node_id = 0
+        self.shards = [
+            ShardGroup(
+                shard_id=i, config=self.config, alloc_id=self._node_id,
+                f=f, sync_batch=sync_batch, witness_sets=witness_sets,
+                witness_ways=witness_ways, hot_key_window=hot_key_window,
+                auto_sync=auto_sync, record=self._record,
+            )
+            for i in range(n_shards)
+        ]
+
+    def _node_id(self) -> int:
+        self._next_node_id += 1
+        return self._next_node_id
+
+    # ----------------------------------------------------------------- client
+    def new_client(self) -> ShardedClientSession:
+        return ShardedClientSession(self._node_id(), self.router)
+
+    def shard_of(self, key: Any) -> int:
+        return self.router.shard_of(key)
+
+    def _group_for(self, op: Op) -> ShardGroup:
+        sids = {self.router.shard_of(k) for k in op.keys}
+        if len(sids) != 1:
+            raise ValueError(
+                f"op spans shards {sorted(sids)}; use ShardedCluster.mset"
+            )
+        return self.shards[sids.pop()]
+
+    def update(self, session: ShardedClientSession, op: Op, now: float = 0.0):
+        group = self._group_for(op)
+        return group.update(session.session_for(group.shard_id), op, now)
+
+    def read(self, session: ShardedClientSession, op: Op, now: float = 0.0):
+        group = self._group_for(op)
+        return group.read(session.session_for(group.shard_id), op, now)
+
+    def mset(self, session: ShardedClientSession, kvs, now: float = 0.0):
+        """Cross-shard multi-key set: per-shard 1-RTT fast path when every
+        shard's sub-op is accepted, per-shard sync fallback otherwise."""
+        from .local import OpOutcome
+
+        parts = session.mset_parts(kvs)
+        # Round 1 (parallel in a real deployment): speculative execute + record
+        # at every touched shard.
+        attempts: Dict[int, Tuple[str, ExecResult, List[RecordStatus]]] = {}
+        decisions: Dict[int, Decision] = {}
+        for shard_id, sub_op in parts.items():
+            sub_session = session.session_for(shard_id)
+            attempt = self.shards[shard_id].attempt_update(
+                sub_op, sub_session.acks(), now
+            )
+            attempts[shard_id] = attempt
+            decisions[shard_id] = decide(attempt[1], attempt[2])
+        # A SYNCED verdict means that master must finish its sync before the
+        # reply is externalized; the harness performs the master's sync here.
+        for shard_id, (verdict, _res, _sts) in attempts.items():
+            if verdict == SYNCED:
+                self.shards[shard_id]._drain_syncs()
+        # Client completion rule across shards (§3.2.1, same fold as
+        # decide_multi): if not COMPLETE, round 2 sends explicit syncs to the
+        # NEED_SYNC shards only.
+        overall = combine_decisions(decisions.values())
+        if overall is Decision.NEED_SYNC:
+            for shard_id, d in decisions.items():
+                if d is Decision.NEED_SYNC:
+                    self.shards[shard_id]._drain_syncs()
+        # 1 RTT only if every shard was fast AND fully witness-accepted.
+        all_fast = all(
+            attempts[sid][0] == FAST and d is Decision.COMPLETE
+            for sid, d in decisions.items()
+        )
+        accepts = sum(
+            1 for (_v, _r, statuses) in attempts.values()
+            for s in statuses if s is RecordStatus.ACCEPTED
+        )
+        any_synced = any(v == SYNCED for (v, _r, _s) in attempts.values())
+        window = self._record.next_window()
+        for shard_id, sub_op in parts.items():
+            sub_session = session.session_for(shard_id)
+            sub_session.mark_completed(sub_op.rpc_id)
+            group = self.shards[shard_id]
+            if group.auto_sync and group.master.want_sync:
+                group._drain_syncs()
+            self._record(sub_op, attempts[shard_id][1].value,
+                         session.client_id, window=window)
+        return OpOutcome(
+            value="OK",
+            rtts=1 if all_fast else 2,
+            fast_path=all_fast,
+            synced_path=any_synced,
+            witness_accepts=accepts,
+        )
+
+    # ------------------------------------------------------------------ admin
+    def sync_all(self) -> None:
+        for g in self.shards:
+            g.sync_now()
+
+    def crash_master(self, shard_id: int) -> RecoveryReport:
+        """Crash exactly one shard's master; only that shard's witnesses are
+        frozen and replayed (per-shard epochs via the ConfigManager)."""
+        return self.shards[shard_id].crash_master()
+
+    def crash_all(self) -> ClusterRecoveryReport:
+        return ClusterRecoveryReport(
+            per_shard=tuple(g.crash_master() for g in self.shards)
+        )
+
+    def epochs(self) -> Dict[int, int]:
+        return self.config.epochs()
+
+    def stats(self) -> Dict[str, int]:
+        """Aggregate master stats across shards (per-shard in .shards[i])."""
+        out: Dict[str, int] = {}
+        for g in self.shards:
+            for k, v in g.master.stats.items():
+                out[k] = out.get(k, 0) + v
+        return out

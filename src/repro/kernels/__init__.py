@@ -16,12 +16,13 @@ from .ops import (
     ref_keyhash2x32,
     ref_witness_gc,
     ref_witness_record,
+    shard_route,
     witness_gc,
     witness_record,
 )
 
 __all__ = [
-    "WitnessTable", "conflict_scan", "keyhash2x32", "witness_gc",
-    "witness_record", "ref_conflict_scan", "ref_keyhash2x32",
+    "WitnessTable", "conflict_scan", "keyhash2x32", "shard_route",
+    "witness_gc", "witness_record", "ref_conflict_scan", "ref_keyhash2x32",
     "ref_witness_gc", "ref_witness_record",
 ]

@@ -48,6 +48,17 @@ def keyhash2x32(hi, lo, *, block: int = 1024, interpret: bool | None = None):
     return oh[:n], ol[:n]
 
 
+def shard_route(hi, lo, n_shards: int, *, block: int = 1024,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """Batched key -> shard placement: keyhash2x32 mix, low lane mod
+    ``n_shards``.  Must agree bit-for-bit with the pure-Python
+    ``repro.core.shard.KeyRouter`` (same fmix32 chain) so device-side routing
+    and protocol-side placement never disagree.  Returns [N] int32 shard ids.
+    """
+    _, ol = keyhash2x32(hi, lo, block=block, interpret=interpret)
+    return (ol % jnp.uint32(n_shards)).astype(jnp.int32)
+
+
 def witness_record(table: WitnessTable, q_hi, q_lo,
                    *, interpret: bool | None = None):
     """Batched record RPCs against a device-side witness table.
@@ -95,8 +106,8 @@ def conflict_scan(w_hi, w_lo, w_valid, q_hi, q_lo,
 
 
 __all__ = [
-    "WitnessTable", "keyhash2x32", "witness_record", "witness_gc",
-    "conflict_scan",
+    "WitnessTable", "keyhash2x32", "shard_route", "witness_record",
+    "witness_gc", "conflict_scan",
     "ref_keyhash2x32", "ref_witness_record", "ref_witness_gc",
     "ref_conflict_scan",
 ]

@@ -254,6 +254,8 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_tag: str, *,
     t2 = time.time()
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per computation
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     if probes:

@@ -5,10 +5,13 @@ Sessions are the keys: per-session state updates commute across sessions
 commit — two concurrent updates hit the same key only if the same session is
 decoded twice within one unsynced window, which the driver never does.
 
-Built directly on the protocol objects (LocalCluster): every session commit
+Built directly on the protocol objects (ShardedCluster): every session commit
 is a real CURP update (witness records + speculative master + batched backup
 syncs), and crash recovery rebuilds the session map via backup restore +
-witness replay.
+witness replay.  With ``n_shards > 1`` sessions are partitioned across
+independent master groups by session-id hash (the KeyRouter over the
+``session:{id}`` key), so commit load spreads across masters and a single
+master crash only replays that shard's witnesses.
 """
 from __future__ import annotations
 
@@ -16,7 +19,7 @@ import json
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
-from repro.core import ClientSession, LocalCluster
+from repro.core import ClusterRecoveryReport, ShardedClientSession, ShardedCluster
 
 
 @dataclass
@@ -27,26 +30,48 @@ class SessionState:
 
 
 class CurpSessionStore:
-    def __init__(self, f: int = 3, sync_batch: int = 50, seed: int = 0) -> None:
+    def __init__(self, f: int = 3, sync_batch: int = 50, seed: int = 0,
+                 n_shards: int = 1) -> None:
         # Sessions are hot keys by construction (one update per token), so we
         # enable the paper's §4.4 preemptive-sync heuristic: the master syncs
         # right after responding to an update of a recently-updated key,
         # keeping the NEXT commit of that session on the 1-RTT fast path.
-        self.cluster = LocalCluster(
-            f=f, sync_batch=sync_batch, seed=seed, hot_key_window=1e12,
+        self.n_shards = n_shards
+        self.cluster = ShardedCluster(
+            n_shards=n_shards, f=f, sync_batch=sync_batch, seed=seed,
+            hot_key_window=1e12,
         )
-        self.client = self.cluster.new_client()
+        self.client: ShardedClientSession = self.cluster.new_client()
         self.fast_commits = 0
         self.slow_commits = 0
+        # Counted store-side so the numbers survive master failovers (the
+        # per-shard Master.stats reset when recovery installs a new master).
+        self._commits_by_shard = [0] * n_shards
+        # Session placement is immutable, so memoize it: commit() runs per
+        # generated token and shouldn't re-run the routing hash every time.
+        self._shard_cache: Dict[str, int] = {}
+
+    @staticmethod
+    def _key(session_id: str) -> str:
+        return f"session:{session_id}"
+
+    def shard_of(self, session_id: str) -> int:
+        """Which master group owns this session (session-id hash routing)."""
+        shard = self._shard_cache.get(session_id)
+        if shard is None:
+            shard = self.cluster.shard_of(self._key(session_id))
+            self._shard_cache[session_id] = shard
+        return shard
 
     # -- write path -------------------------------------------------------------
     def commit(self, s: SessionState) -> None:
         """Durably commit a session snapshot (1 RTT on the fast path)."""
         op = self.client.op_set(
-            f"session:{s.session_id}",
+            self._key(s.session_id),
             json.dumps({"tokens": s.tokens, "done": s.done}),
         )
         out = self.cluster.update(self.client, op)
+        self._commits_by_shard[self.shard_of(s.session_id)] += 1
         if out.fast_path:
             self.fast_commits += 1
         else:
@@ -55,7 +80,7 @@ class CurpSessionStore:
     # -- read path ----------------------------------------------------------------
     def load(self, session_id: str) -> Optional[SessionState]:
         out = self.cluster.read(
-            self.client, self.client.op_get(f"session:{session_id}")
+            self.client, self.client.op_get(self._key(session_id))
         )
         if out.value is None:
             return None
@@ -63,5 +88,16 @@ class CurpSessionStore:
         return SessionState(session_id, d["tokens"], d["done"])
 
     # -- failures -------------------------------------------------------------------
-    def crash_and_recover(self):
-        return self.cluster.crash_master()
+    def crash_and_recover(self) -> ClusterRecoveryReport:
+        """Total serving-node loss: every shard's master dies and recovers
+        (each from its own backups + one of its own witnesses)."""
+        return self.cluster.crash_all()
+
+    def crash_shard(self, shard_id: int):
+        """Partial failure: one master group dies; sessions on other shards
+        keep their unsynced windows and witnesses untouched."""
+        return self.cluster.crash_master(shard_id)
+
+    # -- stats -----------------------------------------------------------------------
+    def per_shard_commits(self) -> List[int]:
+        return list(self._commits_by_shard)

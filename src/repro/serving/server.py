@@ -31,6 +31,7 @@ class ServeConfig:
     commit_every: int = 1      # session commits per generated token
     f: int = 3
     sync_batch: int = 50
+    n_shards: int = 1          # session partitions (one master group each)
 
 
 class CurpServeDriver:
@@ -42,7 +43,8 @@ class CurpServeDriver:
         self.params = params if params is not None else init_params(
             cfg, jax.random.PRNGKey(seed)
         )
-        self.store = CurpSessionStore(f=serve.f, sync_batch=serve.sync_batch)
+        self.store = CurpSessionStore(f=serve.f, sync_batch=serve.sync_batch,
+                                      n_shards=serve.n_shards)
         self.sessions: Dict[str, SessionState] = {}
         self._decode = jax.jit(
             lambda p, b, c: decode_step(cfg, p, b, c)

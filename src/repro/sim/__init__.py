@@ -1,16 +1,32 @@
 """repro.sim — discrete-event simulation of CURP clusters.
 
 Timing model calibrated to the paper's RAMCloud/Redis numbers (see params.py
-for the napkin math); protocol logic is repro.core, unchanged.
+for the napkin math); protocol logic is repro.core, unchanged.  Sharded
+scenarios (multi-master, per-shard witnesses) run via run_sharded_scenario.
 """
-from .curp_sim import ScenarioResult, SimCluster, run_scenario
+from .curp_sim import (
+    ScenarioResult,
+    ShardedScenarioResult,
+    ShardedSimCluster,
+    SimCluster,
+    run_scenario,
+    run_sharded_scenario,
+)
 from .linearizability import check_linearizable
 from .network import Network, Node, Sim
 from .params import DEFAULT, SimParams
-from .workload import UniformWriteWorkload, YcsbWorkload, ZipfianGenerator
+from .workload import (
+    ShardSkewedWorkload,
+    UniformWriteWorkload,
+    YcsbWorkload,
+    ZipfianGenerator,
+)
 
 __all__ = [
-    "ScenarioResult", "SimCluster", "run_scenario", "check_linearizable",
+    "ScenarioResult", "ShardedScenarioResult", "ShardedSimCluster",
+    "SimCluster", "run_scenario", "run_sharded_scenario",
+    "check_linearizable",
     "Network", "Node", "Sim", "DEFAULT", "SimParams",
-    "UniformWriteWorkload", "YcsbWorkload", "ZipfianGenerator",
+    "ShardSkewedWorkload", "UniformWriteWorkload", "YcsbWorkload",
+    "ZipfianGenerator",
 ]

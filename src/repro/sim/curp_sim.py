@@ -9,6 +9,12 @@ Modes (the four lines of the paper's Figs. 5/6):
   * "async"        — respond before sync, NO witnesses (fast but unsafe;
                       the paper's "Async" comparison).
   * "unreplicated" — no backups, no witnesses.
+
+Sharded mode (§4, Fig. 3): ``run_sharded_scenario`` builds N independent
+shard groups — each with its own master, witness group, and backups — in one
+simulated network.  Clients route every op through the same KeyRouter the
+protocol layer uses, so per-shard witnesses only ever see their own
+partition's key hashes, and a crash on one shard replays only that shard.
 """
 from __future__ import annotations
 
@@ -20,6 +26,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 from repro.core.backup import Backup
 from repro.core.client import ClientSession, Decision, decide
 from repro.core.master import DUP, ERROR, FAST, SYNCED, Master
+from repro.core.shard import KeyRouter
 from repro.core.types import ExecResult, Op, OpType, RecordStatus
 from repro.core.witness import Witness
 
@@ -412,10 +419,12 @@ class SimClient(Node):
         pend = self.pending
         op = pend.op
         mode = self.cluster.mode
-        master = self.cluster.master_node
+        # Route to the owning shard (single-shard clusters route to self).
+        target = self.cluster.route(op)
+        master = target.master_node
         t0 = self.sim.now
         if pend.is_update and mode == "curp":
-            wits = self.cluster.witness_nodes
+            wits = target.witness_nodes
             pend.want_witnesses = len(wits)
             pend.witness_statuses = []
             # Client serializes the extra record sends before the update RPC
@@ -425,7 +434,7 @@ class SimClient(Node):
                 self.sim.at(
                     t0 + (k + 1) * self.p.client_record_send_cost_us,
                     lambda w=w, op=op, att=att: self.net.send(
-                        w, MRecord(self, self.cluster.master_id, op, att)
+                        w, MRecord(self, target.master_id, op, att)
                     ),
                 )
             t0 += len(wits) * self.p.client_record_send_cost_us
@@ -434,7 +443,7 @@ class SimClient(Node):
             pend.witness_statuses = []
         t0 += self.p.client_send_cost_us
         if pend.is_update:
-            msg = MUpdate(self, op, self.cluster.wlv, self.session.acks())
+            msg = MUpdate(self, op, target.wlv, self.session.acks())
         else:
             msg = MRead(self, op)
         self.sim.at(t0, lambda: self.net.send(master, msg, size_bytes=256))
@@ -513,7 +522,8 @@ class SimClient(Node):
             self.sim.after(
                 self.p.client_send_cost_us,
                 lambda: self.net.send(
-                    self.cluster.master_node, MSyncReq(self, pend.op.rpc_id)
+                    self.cluster.route(pend.op).master_node,
+                    MSyncReq(self, pend.op.rpc_id),
                 ),
             )
 
@@ -594,6 +604,10 @@ class SimCluster:
         self._id += 1
         return self._id
 
+    def route(self, op: Op) -> "SimCluster":
+        """Single-master cluster: every key lives here."""
+        return self
+
     def on_completion(self, t: float) -> None:
         self.completions.append(t)
 
@@ -669,6 +683,63 @@ class SimCluster:
         self.sim.after(restore_us, after_restore)
 
 
+class ShardedSimCluster:
+    """N shard groups (each a full SimCluster: master + witnesses + backups)
+    sharing one simulated network, behind the protocol-layer KeyRouter.
+
+    Exposes the same client-facing surface as SimCluster (``mode``,
+    ``route``, ``on_completion``), so SimClient drives either transparently.
+    """
+
+    def __init__(self, sim: Sim, net: Network, params: SimParams, mode: str,
+                 f: int, n_shards: int,
+                 backup_service_us: Optional[float] = None) -> None:
+        self.sim = sim
+        self.net = net
+        self.p = params
+        self.mode = mode
+        self.f = f
+        self.n_shards = n_shards
+        self.router = KeyRouter(n_shards)
+        self.shards = [
+            SimCluster(sim, net, params, mode, f,
+                       backup_service_us=backup_service_us)
+            for _ in range(n_shards)
+        ]
+        self.clients: List[SimClient] = []
+        self.completions: List[float] = []
+
+    def route(self, op: Op) -> SimCluster:
+        sids = {self.router.shard_of(k) for k in op.keys}
+        if len(sids) != 1:
+            # Mirror ShardedCluster._group_for: the sim models per-shard
+            # placement, so a cross-shard op must fail loudly, not land
+            # whole on keys[0]'s shard.
+            raise ValueError(f"op spans shards {sorted(sids)}; "
+                             "sharded sim clients issue single-shard ops")
+        return self.shards[sids.pop()]
+
+    def on_completion(self, t: float) -> None:
+        self.completions.append(t)
+
+    def crash_shard_at(self, t: float, shard: int) -> None:
+        """Crash exactly one shard's master; the other shards keep serving
+        and none of their witnesses are frozen."""
+        self.shards[shard].crash_master_at(t)
+
+    @property
+    def recovery_reports(self) -> Dict[int, dict]:
+        return {i: s.recovery_report for i, s in enumerate(self.shards)
+                if s.recovery_report is not None}
+
+    def master_stats(self) -> dict:
+        agg: Dict[str, int] = {}
+        for s in self.shards:
+            for k, v in s.master_node.core.stats.items():
+                agg[k] = agg.get(k, 0) + v
+        return agg
+
+
 @dataclass
 class ScenarioResult:
     mode: str
@@ -685,24 +756,7 @@ class ScenarioResult:
     sim_time_us: float
 
 
-def run_scenario(
-    mode: str = "curp",
-    f: int = 3,
-    n_clients: int = 1,
-    n_ops: int = 2000,
-    seed: int = 0,
-    params: Optional[SimParams] = None,
-    op_factory: Optional[Callable[[ClientSession], Op]] = None,
-    crash_at_us: Optional[float] = None,
-    backup_service_us: Optional[float] = None,
-    warmup_frac: float = 0.1,
-) -> ScenarioResult:
-    p = params or DEFAULT
-    sim = Sim(seed=seed)
-    net = Network(sim, p)
-    cluster = SimCluster(sim, net, p, mode, f,
-                         backup_service_us=backup_service_us)
-
+def _spawn_clients(sim, net, p, cluster, n_clients, n_ops, op_factory):
     if op_factory is None:
         counter = [0]
 
@@ -717,11 +771,11 @@ def run_scenario(
         cluster.clients.append(c)
         c.start()
 
-    if crash_at_us is not None:
-        cluster.crash_master_at(crash_at_us)
 
-    sim.run(until=60_000_000.0)  # 60 simulated seconds hard cap
-
+def _collect_run(cluster, warmup_frac: float):
+    """Aggregate client-side results after sim.run: latencies, fast/slow
+    counts, history (with never-completed "maybe" ops for the checker), and
+    warmup-windowed aggregate throughput."""
     upd, rd = [], []
     fast = slow = 0
     history = []
@@ -744,6 +798,36 @@ def run_scenario(
         thr = n_mid / (hi - lo) * 1e6 if hi > lo else 0.0
     else:
         thr = 0.0
+    return upd, rd, fast, slow, history, completed, thr
+
+
+def run_scenario(
+    mode: str = "curp",
+    f: int = 3,
+    n_clients: int = 1,
+    n_ops: int = 2000,
+    seed: int = 0,
+    params: Optional[SimParams] = None,
+    op_factory: Optional[Callable[[ClientSession], Op]] = None,
+    crash_at_us: Optional[float] = None,
+    backup_service_us: Optional[float] = None,
+    warmup_frac: float = 0.1,
+) -> ScenarioResult:
+    p = params or DEFAULT
+    sim = Sim(seed=seed)
+    net = Network(sim, p)
+    cluster = SimCluster(sim, net, p, mode, f,
+                         backup_service_us=backup_service_us)
+    _spawn_clients(sim, net, p, cluster, n_clients, n_ops, op_factory)
+
+    if crash_at_us is not None:
+        cluster.crash_master_at(crash_at_us)
+
+    sim.run(until=60_000_000.0)  # 60 simulated seconds hard cap
+
+    upd, rd, fast, slow, history, completed, thr = _collect_run(
+        cluster, warmup_frac
+    )
     return ScenarioResult(
         mode=mode, f=f, n_clients=n_clients,
         update_latencies=upd, read_latencies=rd,
@@ -753,5 +837,70 @@ def run_scenario(
         history=history,
         recovery=cluster.recovery_report,
         master_stats=dict(cluster.master_node.core.stats),
+        sim_time_us=sim.now,
+    )
+
+
+@dataclass
+class ShardedScenarioResult:
+    mode: str
+    f: int
+    n_shards: int
+    n_clients: int
+    update_latencies: list
+    read_latencies: list
+    throughput_ops_per_sec: float   # aggregate committed-ops/s across shards
+    fast_fraction: float
+    completed: int
+    history: list
+    recoveries: Dict[int, dict]     # shard -> recovery report (crashed shards)
+    master_stats: dict              # summed across shard masters
+    per_shard_stats: List[dict]
+    sim_time_us: float
+
+
+def run_sharded_scenario(
+    n_shards: int = 4,
+    mode: str = "curp",
+    f: int = 3,
+    n_clients: int = 8,
+    n_ops: int = 2000,
+    seed: int = 0,
+    params: Optional[SimParams] = None,
+    op_factory: Optional[Callable[[ClientSession], Op]] = None,
+    crash_shard_at: Optional[Tuple[float, int]] = None,
+    backup_service_us: Optional[float] = None,
+    warmup_frac: float = 0.1,
+) -> ShardedScenarioResult:
+    """Timed sharded run: clients route each op to its owning shard's master
+    and witness group.  ``crash_shard_at=(t_us, shard)`` kills exactly that
+    shard's master; the rest of the cluster keeps serving."""
+    p = params or DEFAULT
+    sim = Sim(seed=seed)
+    net = Network(sim, p)
+    cluster = ShardedSimCluster(sim, net, p, mode, f, n_shards,
+                                backup_service_us=backup_service_us)
+    _spawn_clients(sim, net, p, cluster, n_clients, n_ops, op_factory)
+
+    if crash_shard_at is not None:
+        t, shard = crash_shard_at
+        cluster.crash_shard_at(t, shard)
+
+    sim.run(until=60_000_000.0)  # 60 simulated seconds hard cap
+
+    upd, rd, fast, slow, history, completed, thr = _collect_run(
+        cluster, warmup_frac
+    )
+    return ShardedScenarioResult(
+        mode=mode, f=f, n_shards=n_shards, n_clients=n_clients,
+        update_latencies=upd, read_latencies=rd,
+        throughput_ops_per_sec=thr,
+        fast_fraction=fast / max(1, fast + slow),
+        completed=completed,
+        history=history,
+        recoveries=cluster.recovery_reports,
+        master_stats=cluster.master_stats(),
+        per_shard_stats=[dict(s.master_node.core.stats)
+                         for s in cluster.shards],
         sim_time_us=sim.now,
     )

@@ -1,8 +1,13 @@
-"""Workload generators: uniform + YCSB-style zipfian key choosers (§5.3).
+"""Workload generators: uniform + YCSB-style zipfian key choosers (§5.3),
+plus shard-aware skew for the sharded scenarios.
 
 The zipfian chooser follows the YCSB implementation (Gray et al.'s algorithm)
 with theta = 0.99 over 1M items — the defaults of YCSB-A (50/50 read/update)
 and YCSB-B (95/5).
+
+``ShardSkewedWorkload`` routes through the same KeyRouter as the protocol and
+skews load toward one hot shard — the adversarial placement case for
+multi-master scaling (a uniform workload spreads ~evenly by hash design).
 """
 from __future__ import annotations
 
@@ -82,4 +87,49 @@ class UniformWriteWorkload:
 
     def __call__(self, session: ClientSession) -> Op:
         key = f"k{self.rng.randrange(self.n_items)}"
+        return session.op_set(key, self._value)
+
+
+@dataclass
+class ShardSkewedWorkload:
+    """Writes whose *shard* distribution is skewed: ``hot_frac`` of ops land
+    on ``hot_shard``, the rest spread uniformly over the other shards.
+
+    Keys are pre-bucketed by the protocol's own KeyRouter, so the skew is
+    exact with respect to actual placement (not an approximation of the
+    hash).  With hot_frac = 1/n_shards this degenerates to ~uniform.
+    """
+    n_shards: int
+    hot_frac: float = 0.8
+    hot_shard: int = 0
+    n_items: int = 20_000
+    seed: int = 0
+    value_size: int = 100
+    read_fraction: float = 0.0
+
+    def __post_init__(self) -> None:
+        from repro.core.shard import KeyRouter
+
+        router = KeyRouter(self.n_shards)
+        self.rng = random.Random(self.seed)
+        self._value = "x" * self.value_size
+        self._pools: list = [[] for _ in range(self.n_shards)]
+        for i in range(self.n_items):
+            key = f"k{i}"
+            self._pools[router.shard_of(key)].append(key)
+        assert all(self._pools), "n_items too small to cover every shard"
+        self._cold = [s for s in range(self.n_shards) if s != self.hot_shard]
+
+    def _next_key(self) -> str:
+        if self.n_shards == 1 or self.rng.random() < self.hot_frac:
+            shard = self.hot_shard
+        else:
+            shard = self.rng.choice(self._cold)
+        pool = self._pools[shard]
+        return pool[self.rng.randrange(len(pool))]
+
+    def __call__(self, session: ClientSession) -> Op:
+        key = self._next_key()
+        if self.read_fraction > 0 and self.rng.random() < self.read_fraction:
+            return session.op_get(key)
         return session.op_set(key, self._value)

@@ -1,0 +1,42 @@
+"""Import-or-skip shim for hypothesis (optional test dependency).
+
+Test modules import the hypothesis surface from here instead of hard-importing
+``hypothesis`` — the hard import errored the whole file at collection when the
+package is absent.  With hypothesis installed the real objects pass through
+unchanged and every property test runs; without it the decorators degrade to
+``pytest.mark.skip``, so files still collect and their non-property tests run.
+
+(Equivalent in effect to ``pytest.importorskip("hypothesis")``, but scoped to
+the property tests only instead of skipping whole files.)
+"""
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def _skipping_decorator_factory(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    given = _skipping_decorator_factory
+    settings = _skipping_decorator_factory
+
+    class _Anything:
+        """Stands in for ``strategies`` / ``HealthCheck``: any attribute
+        access or call returns another stub, so decorator arguments like
+        ``st.integers(0, 10)`` still evaluate at class-body time."""
+
+        def __getattr__(self, _name):
+            return _Anything()
+
+        def __call__(self, *_a, **_k):
+            return _Anything()
+
+    st = _Anything()
+    HealthCheck = _Anything()
+
+__all__ = ["HAVE_HYPOTHESIS", "HealthCheck", "given", "settings", "st"]

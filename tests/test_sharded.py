@@ -1,0 +1,340 @@
+"""Sharded CURP tests: KeyRouter placement, the single-master protocol
+matrix run against every shard of a ShardedCluster, cross-shard multi-key
+ops, per-shard crash recovery, and the sharded serving store."""
+import pytest
+
+from repro.core import (
+    ClientSession,
+    KeyRouter,
+    Op,
+    OpType,
+    RecordStatus,
+    ShardedCluster,
+    keyhash,
+)
+from repro.core.client import Decision, decide_multi
+from repro.core.types import ExecResult
+from repro.sim import check_linearizable
+
+N_SHARDS = 4
+
+
+def key_on_shard(router: KeyRouter, shard: int, tag: str = "k") -> str:
+    """Deterministically find a key the router places on ``shard``."""
+    for i in range(10_000):
+        k = f"{tag}{i}"
+        if router.shard_of(k) == shard:
+            return k
+    raise AssertionError(f"no key found for shard {shard}")
+
+
+def keys_on_shard(router: KeyRouter, shard: int, n: int, tag: str = "k"):
+    out = []
+    i = 0
+    while len(out) < n:
+        k = f"{tag}{i}"
+        if router.shard_of(k) == shard:
+            out.append(k)
+        i += 1
+    return out
+
+
+# ---------------------------------------------------------------- router
+class TestKeyRouter:
+    def test_deterministic_and_in_range(self):
+        r = KeyRouter(N_SHARDS)
+        for k in ["a", "b", 17, "user123", b"bytes"]:
+            s = r.shard_of(k)
+            assert 0 <= s < N_SHARDS
+            assert r.shard_of(k) == s
+
+    def test_single_shard_degenerates(self):
+        r = KeyRouter(1)
+        assert all(r.shard_of(f"k{i}") == 0 for i in range(50))
+
+    def test_covers_all_shards_roughly_evenly(self):
+        r = KeyRouter(N_SHARDS)
+        counts = [0] * N_SHARDS
+        n = 2000
+        for i in range(n):
+            counts[r.shard_of(f"user{i}")] += 1
+        assert min(counts) > n // (N_SHARDS * 3)
+
+    def test_split_keys_partitions(self):
+        r = KeyRouter(N_SHARDS)
+        keys = [f"x{i}" for i in range(32)]
+        parts = r.split_keys(keys)
+        seen = sorted(i for idxs in parts.values() for i in idxs)
+        assert seen == list(range(32))
+        for shard, idxs in parts.items():
+            assert all(r.shard_of(keys[i]) == shard for i in idxs)
+
+
+# ------------------------------------------- per-shard protocol matrix
+@pytest.fixture(params=list(range(N_SHARDS)))
+def shard(request):
+    return request.param
+
+
+class TestPerShardProtocolMatrix:
+    """The LocalCluster protocol tests, replayed against each shard of a
+    4-shard cluster via keys pinned to that shard."""
+
+    def test_fast_path_1rtt(self, shard):
+        c = ShardedCluster(n_shards=N_SHARDS, f=3)
+        cl = c.new_client()
+        k = key_on_shard(c.router, shard)
+        out = c.update(cl, cl.op_set(k, 1))
+        assert out.fast_path and out.rtts == 1 and out.witness_accepts == 3
+
+    def test_conflict_2rtt_synced_tag(self, shard):
+        c = ShardedCluster(n_shards=N_SHARDS, f=3, sync_batch=50)
+        cl = c.new_client()
+        k = key_on_shard(c.router, shard)
+        c.update(cl, cl.op_set(k, 1))
+        out = c.update(cl, cl.op_set(k, 2))
+        assert out.synced_path and out.rtts == 2
+
+    def test_read_blocked_by_unsynced_write(self, shard):
+        c = ShardedCluster(n_shards=N_SHARDS, f=3, sync_batch=50)
+        cl = c.new_client()
+        k = key_on_shard(c.router, shard)
+        c.update(cl, cl.op_set(k, 1))
+        out = c.read(cl, cl.op_get(k))
+        assert out.value == 1 and out.rtts == 2   # §3.2.3: sync before read
+
+    def test_witness_drop_slow_path(self, shard):
+        c = ShardedCluster(n_shards=N_SHARDS, f=3)
+        c.shards[shard].witness_drop(1)
+        cl = c.new_client()
+        k = key_on_shard(c.router, shard)
+        out = c.update(cl, cl.op_set(k, 1))
+        assert not out.fast_path and out.rtts >= 2
+        m = c.shards[shard].master
+        assert m.synced_index == len(m.log)
+        # other shards are unaffected by the dropped witness
+        other = (shard + 1) % N_SHARDS
+        out2 = c.update(cl, cl.op_set(key_on_shard(c.router, other), 1))
+        assert out2.fast_path
+
+    def test_recovery_preserves_completed(self, shard):
+        c = ShardedCluster(n_shards=N_SHARDS, f=3, sync_batch=50)
+        cl = c.new_client()
+        ks = keys_on_shard(c.router, shard, 12)
+        for i, k in enumerate(ks):
+            c.update(cl, cl.op_set(k, i))
+        rep = c.crash_master(shard)
+        assert rep.shard_id == shard and rep.replayed >= 0
+        for i, k in enumerate(ks):
+            assert c.read(cl, cl.op_get(k)).value == i
+
+    def test_witness_reconfiguration_version_fence(self, shard):
+        c = ShardedCluster(n_shards=N_SHARDS, f=3)
+        cl = c.new_client()
+        old_version = c.config.fetch(shard).witness_list_version
+        c.shards[shard].replace_witness(0)
+        k = key_on_shard(c.router, shard)
+        op = cl.op_set(k, 1)
+        verdict, res = c.shards[shard].master.handle_update(
+            op, old_version, (), 0.0
+        )
+        assert verdict == "error" and res.error == "WRONG_WITNESS_VERSION"
+        out = c.update(cl, cl.op_set(k, 1))
+        assert out.value == "OK"
+
+
+# ---------------------------------------------------------- cross-shard mset
+class TestCrossShardMset:
+    def test_split_spans_shards_with_per_shard_rpc_ids(self):
+        c = ShardedCluster(n_shards=N_SHARDS, f=3)
+        cl = c.new_client()
+        kvs = [(key_on_shard(c.router, s, tag=f"m{s}_"), s)
+               for s in range(N_SHARDS)]
+        parts = cl.mset_parts(kvs)
+        assert sorted(parts) == list(range(N_SHARDS))
+        for shard_id, sub in parts.items():
+            assert sub.op_type is OpType.MSET
+            assert all(c.router.shard_of(k) == shard_id for k in sub.keys)
+        # per-shard RPC-id spaces: same client, INDEPENDENT seqs — every
+        # shard's first sub-op is seq 1 of that shard's space (a shared
+        # space would have handed out 1..N across the sub-ops)
+        assert all(sub.rpc_id == (cl.client_id, 1) for sub in parts.values())
+        parts2 = cl.mset_parts(kvs)
+        assert all(sub.rpc_id == (cl.client_id, 2)
+                   for sub in parts2.values())
+
+    def test_fast_path_when_all_shards_accept(self):
+        c = ShardedCluster(n_shards=N_SHARDS, f=3)
+        cl = c.new_client()
+        kvs = [(key_on_shard(c.router, s), s * 10) for s in range(N_SHARDS)]
+        out = c.mset(cl, kvs)
+        assert out.fast_path and out.rtts == 1
+        assert out.witness_accepts == 3 * N_SHARDS
+        for k, v in kvs:
+            assert c.read(cl, cl.op_get(k)).value == v
+
+    def test_sync_fallback_on_one_conflicting_shard(self):
+        """A conflict on ONE shard demotes the whole op to 2 RTTs, but the
+        other shards still completed via their own witnesses."""
+        c = ShardedCluster(n_shards=N_SHARDS, f=3, sync_batch=50)
+        cl = c.new_client()
+        hot = key_on_shard(c.router, 0)
+        c.update(cl, cl.op_set(hot, "warm"))        # leaves shard 0 unsynced
+        kvs = [(hot, "clash")] + [
+            (key_on_shard(c.router, s), s) for s in range(1, N_SHARDS)
+        ]
+        out = c.mset(cl, kvs)
+        assert not out.fast_path and out.rtts == 2 and out.synced_path
+        for k, v in kvs:
+            assert c.read(cl, cl.op_get(k)).value == v
+        # the conflict synced only shard 0; others still have no conflicts
+        assert c.shards[0].master.stats["conflict_syncs"] == 1
+        for s in range(1, N_SHARDS):
+            assert c.shards[s].master.stats["conflict_syncs"] == 0
+
+    def test_witness_drop_on_one_shard_demotes_only_that_shard(self):
+        c = ShardedCluster(n_shards=N_SHARDS, f=3)
+        c.shards[2].witness_drop(0)
+        cl = c.new_client()
+        kvs = [(key_on_shard(c.router, s), s) for s in range(N_SHARDS)]
+        out = c.mset(cl, kvs)
+        assert not out.fast_path and out.rtts == 2
+        # shard 2's sub-op is durable via backup sync despite the drop
+        m = c.shards[2].master
+        assert m.synced_index == len(m.log)
+
+    def test_mset_history_linearizable(self):
+        """Cross-shard msets + reads + single-key writes: the recorded local
+        history passes the sim linearizability checker."""
+        c = ShardedCluster(n_shards=N_SHARDS, f=3, sync_batch=4)
+        cl = c.new_client()
+        import random
+
+        rng = random.Random(7)
+        keys = [f"k{i}" for i in range(12)]
+        for step in range(60):
+            roll = rng.random()
+            if roll < 0.3:
+                picked = rng.sample(keys, rng.randrange(2, 5))
+                c.mset(cl, [(k, f"v{step}_{k}") for k in picked])
+            elif roll < 0.6:
+                k = rng.choice(keys)
+                c.update(cl, cl.op_set(k, f"v{step}"))
+            else:
+                c.read(cl, cl.op_get(rng.choice(keys)))
+        ok, key = check_linearizable(c.history)
+        assert ok, f"violation on {key}"
+
+    def test_decide_multi_rules(self):
+        acc = [RecordStatus.ACCEPTED] * 3
+        rej = [RecordStatus.ACCEPTED, RecordStatus.REJECTED,
+               RecordStatus.ACCEPTED]
+        fast = ExecResult("OK", synced=False)
+        synced = ExecResult("OK", synced=True)
+        bad = ExecResult(None, synced=False, ok=False, error="NOT_OWNER")
+        assert decide_multi([(fast, acc), (fast, acc)]) is Decision.COMPLETE
+        assert decide_multi([(fast, acc), (synced, rej)]) is Decision.COMPLETE
+        assert decide_multi([(fast, acc), (fast, rej)]) is Decision.NEED_SYNC
+        assert decide_multi([(fast, rej), (bad, acc)]) is Decision.REFETCH_CONFIG
+
+
+# ------------------------------------------------------- per-shard recovery
+class TestShardedRecovery:
+    def test_crash_one_shard_replays_only_that_shard(self):
+        c = ShardedCluster(n_shards=N_SHARDS, f=3, sync_batch=1000,
+                           auto_sync=False)
+        cl = c.new_client()
+        per_shard_keys = {s: keys_on_shard(c.router, s, 5)
+                          for s in range(N_SHARDS)}
+        for s, ks in per_shard_keys.items():
+            for i, k in enumerate(ks):
+                c.update(cl, cl.op_set(k, (s, i)))
+        # every shard has a full unsynced window and loaded witnesses
+        unsynced_before = {s: c.shards[s].master.unsynced_count
+                           for s in range(N_SHARDS)}
+        occ_before = {s: c.shards[s].witnesses[0].occupancy
+                      for s in range(N_SHARDS)}
+        assert all(v == 5 for v in unsynced_before.values())
+
+        victim = 1
+        rep = c.crash_master(victim)
+        # the victim replayed its 5 unsynced ops from ONE of its witnesses
+        assert rep.shard_id == victim
+        assert rep.replayed == 5 and rep.witness_requests == 5
+        assert rep.new_epoch == 1
+        # other shards: unsynced windows and witness contents untouched
+        for s in range(N_SHARDS):
+            if s == victim:
+                continue
+            assert c.shards[s].master.unsynced_count == unsynced_before[s]
+            assert c.shards[s].witnesses[0].occupancy == occ_before[s]
+            assert c.config.epoch(s) == 0
+        assert c.config.epoch(victim) == 1
+        # nothing lost anywhere
+        for s, ks in per_shard_keys.items():
+            for i, k in enumerate(ks):
+                assert c.read(cl, cl.op_get(k)).value == (s, i)
+
+    def test_per_shard_epochs_fence_only_victim_zombie(self):
+        c = ShardedCluster(n_shards=2, f=3, sync_batch=1000, auto_sync=False)
+        cl = c.new_client()
+        k0 = key_on_shard(c.router, 0)
+        k1 = key_on_shard(c.router, 1)
+        c.update(cl, cl.op_set(k0, 1))
+        c.update(cl, cl.op_set(k1, 1))
+        zombie = c.shards[0].master
+        c.crash_master(0)
+        # zombie of shard 0 is fenced at shard 0's backups
+        zombie.want_sync = True
+        req = zombie.begin_sync()
+        assert req is not None
+        assert not c.shards[0].backups[0].handle_sync(req).ok
+        # shard 1's original master is NOT fenced (its epoch never moved)
+        c.shards[1].sync_now()
+        m1 = c.shards[1].master
+        assert m1.synced_index == len(m1.log)
+
+    def test_repeated_crashes_accumulate_epochs_independently(self):
+        c = ShardedCluster(n_shards=3, f=3)
+        cl = c.new_client()
+        for s in (0, 0, 2):
+            c.update(cl, cl.op_set(key_on_shard(c.router, s), s))
+            c.crash_master(s)
+        assert c.epochs() == {0: 2, 1: 0, 2: 1}
+
+
+# ------------------------------------------------------------ sharded serving
+class TestShardedSessionStore:
+    def test_sessions_spread_and_survive_full_crash(self):
+        from repro.serving.kvstore import CurpSessionStore, SessionState
+
+        store = CurpSessionStore(f=3, sync_batch=8, n_shards=4)
+        for i in range(16):
+            store.commit(SessionState(f"s{i}", [1, 2, i]))
+        shards_used = {store.shard_of(f"s{i}") for i in range(16)}
+        assert len(shards_used) >= 3
+        rep = store.crash_and_recover()
+        assert len(rep.per_shard) == 4
+        for i in range(16):
+            st = store.load(f"s{i}")
+            assert st is not None and st.tokens == [1, 2, i]
+
+    def test_one_shard_crash_keeps_other_sessions_unsynced(self):
+        from repro.serving.kvstore import CurpSessionStore, SessionState
+
+        store = CurpSessionStore(f=3, sync_batch=1000, n_shards=2)
+        # hot_key_window syncs repeats; first commits of distinct sessions
+        # stay unsynced until the batch fills
+        sids = [f"s{i}" for i in range(8)]
+        for sid in sids:
+            store.commit(SessionState(sid, [1]))
+        by_shard = {0: [], 1: []}
+        for sid in sids:
+            by_shard[store.shard_of(sid)].append(sid)
+        assert by_shard[0] and by_shard[1]
+        other = store.cluster.shards[1].master.unsynced_count
+        rep = store.crash_shard(0)
+        assert rep.shard_id == 0
+        assert store.cluster.shards[1].master.unsynced_count == other
+        for sid in sids:
+            assert store.load(sid) is not None

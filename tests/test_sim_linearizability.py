@@ -1,18 +1,22 @@
 """Simulator-level tests: calibration bands + linearizability under crashes
-(property-based over seeds/workloads with hypothesis)."""
+(property-based over seeds/workloads with hypothesis — optional via the _hyp
+shim; non-property tests always run)."""
 import statistics
 
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
+
+from _hyp import HealthCheck, given, settings, st
 
 from repro.core.client import ClientSession
 from repro.core.types import Op, OpType
 from repro.sim import (
+    ShardSkewedWorkload,
     SimParams,
     UniformWriteWorkload,
     YcsbWorkload,
     check_linearizable,
     run_scenario,
+    run_sharded_scenario,
 )
 
 
@@ -104,6 +108,48 @@ class TestCrashLinearizability:
                          params=p,
                          op_factory=UniformWriteWorkload(seed=1, n_items=30),
                          seed=13)
+        ok, key = check_linearizable(r.history)
+        assert ok, f"violation on {key}"
+
+
+class TestShardedLinearizability:
+    """Multi-master partitioning keeps per-key linearizability (§4/Fig. 3):
+    shards only split the keyspace; within a key nothing changes."""
+
+    def test_sharded_uniform_linearizable(self):
+        r = run_sharded_scenario(
+            n_shards=4, mode="curp", f=3, n_clients=6, n_ops=150,
+            op_factory=UniformWriteWorkload(seed=5, n_items=60), seed=17,
+        )
+        ok, key = check_linearizable(r.history)
+        assert ok, f"violation on {key}"
+        # load actually spread over several masters
+        active = sum(1 for s in r.per_shard_stats
+                     if s["fast"] + s["conflict_syncs"] > 0)
+        assert active >= 3
+
+    def test_sharded_crash_one_shard_linearizable(self):
+        """Crash one shard's master mid-run: that shard replays its own
+        witnesses; every other shard is untouched; history stays clean."""
+        r = run_sharded_scenario(
+            n_shards=4, mode="curp", f=3, n_clients=8, n_ops=200,
+            op_factory=UniformWriteWorkload(seed=3, n_items=500), seed=11,
+            crash_shard_at=(1500.0, 2),
+        )
+        assert list(r.recoveries) == [2]     # only shard 2 failed over
+        ok, key = check_linearizable(r.history)
+        assert ok, f"violation on {key}"
+
+    def test_sharded_skewed_contended_linearizable(self):
+        """Hot-shard skew + tiny keyspace: heavy same-key contention on one
+        master, cross-shard traffic on the rest."""
+        r = run_sharded_scenario(
+            n_shards=2, mode="curp", f=3, n_clients=4, n_ops=120,
+            op_factory=ShardSkewedWorkload(n_shards=2, hot_frac=0.9,
+                                           n_items=40, seed=4,
+                                           read_fraction=0.3),
+            seed=23,
+        )
         ok, key = check_linearizable(r.history)
         assert ok, f"violation on {key}"
 
