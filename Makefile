@@ -1,4 +1,4 @@
-.PHONY: check test bench-scaling
+.PHONY: check test bench-scaling bench-fastpath
 
 check:
 	bash scripts/check.sh
@@ -8,3 +8,6 @@ test:
 
 bench-scaling:
 	PYTHONPATH=src python -m benchmarks.fig_scaling
+
+bench-fastpath:
+	PYTHONPATH=src python -m benchmarks.fig_fastpath

@@ -1,14 +1,24 @@
 """Shared benchmark helpers."""
 from __future__ import annotations
 
+import math
 import statistics
 from typing import Dict, List, Sequence
 
 
 def pct(xs: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile: the smallest sample whose empirical CDF is
+    >= p, i.e. xs_sorted[ceil(p * n) - 1].  (The previous ``int(p * len)``
+    indexing truncated instead of rounding the rank up, which biased p90/p99
+    one sample high on small samples — e.g. p90 of 10 samples returned the
+    maximum instead of the 9th value.)"""
+    if not xs:
+        raise ValueError("pct() of empty sequence")
     xs = sorted(xs)
-    i = min(len(xs) - 1, max(0, int(p * len(xs))))
-    return xs[i]
+    n = len(xs)
+    if p <= 0:
+        return xs[0]
+    return xs[min(n, max(1, math.ceil(p * n))) - 1]
 
 
 def cdf_points(xs: Sequence[float], n: int = 20) -> List[tuple]:

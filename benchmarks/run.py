@@ -1,9 +1,46 @@
 """Benchmark harness entry point: one benchmark per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV at the end (per the grading
-contract), after each figure's own detailed tables."""
+contract), after each figure's own detailed tables, and writes the same
+numbers to ``BENCH_curp.json`` at the repo root so the perf trajectory is
+machine-readable across PRs.
+"""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_curp.json"
+
+
+def _jsonable(v):
+    try:
+        json.dumps(v)
+        return v
+    except TypeError:
+        return float(v)
+
+
+def write_bench_json(results, path: pathlib.Path = BENCH_JSON) -> None:
+    """Persist every figure's derived metrics (the summary CSV, structured).
+
+    Schema: {"schema": 1, "unix_time": ..., "figures": {name:
+    {"us_per_call": ..., "derived": {...}}}} — stable keys so a driver can
+    diff BENCH_curp.json between PRs.
+    """
+    payload = {
+        "schema": 1,
+        "unix_time": time.time(),
+        "figures": {
+            name: {
+                "us_per_call": dt,
+                "derived": {k: _jsonable(v) for k, v in derived.items()},
+            }
+            for name, dt, derived in results
+        },
+    }
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {path}")
 
 
 def main() -> None:
@@ -15,6 +52,7 @@ def main() -> None:
         fig10_ops,
         fig11_witness_capacity,
         fig12_batchsize,
+        fig_fastpath,
         fig_scaling,
         roofline_table,
     )
@@ -28,6 +66,7 @@ def main() -> None:
         ("fig11_witness_capacity", fig11_witness_capacity.main),
         ("fig12_batchsize", fig12_batchsize.main),
         ("fig_scaling", fig_scaling.main),
+        ("fig_fastpath", fig_fastpath.main),
         ("roofline_table", roofline_table.main),
     ]
     results = []
@@ -45,6 +84,8 @@ def main() -> None:
             for k, v in list(derived.items())[:8]
         )
         print(f"{name},{dt:.0f},{compact}")
+
+    write_bench_json(results)
 
 
 if __name__ == "__main__":

@@ -1,16 +1,18 @@
 #!/usr/bin/env bash
 # Tier-1 gate + benchmark wiring check.
 #
-#   scripts/check.sh            # full tier-1 tests + fig_scaling smoke
+#   scripts/check.sh            # full tier-1 tests + benchmark smokes
 #   scripts/check.sh -m 'not slow'   # extra pytest args pass through
 #
-# The fig_scaling smoke run uses tiny op counts: it validates that the
-# sharded benchmark still runs end-to-end (and stays monotonic), not the
-# measured numbers.
+# The smoke runs use tiny op counts: they validate that the sharded and
+# fused-fast-path benchmarks still run end-to-end (fig_scaling stays
+# monotonic; fig_fastpath keeps its bit-exact parity assertion and its
+# 1-dispatch-per-batch invariant), not the measured numbers.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q "$@"
 python -m benchmarks.fig_scaling --smoke
+python -m benchmarks.fig_fastpath --smoke
 echo "check.sh: all green"

@@ -8,8 +8,9 @@ and the §A.1 (backup reads) / §A.2 (consensus) extensions.
 """
 from .backup import Backup, LogEntry
 from .client import ClientSession, Decision, combine_decisions, decide, decide_multi
-from .config import ConfigManager
+from .config import ConfigManager, WitnessGeometry
 from .consensus import ConsensusCluster, replay_threshold, superquorum
+from .device_witness import DeviceWitness
 from .local import LocalCluster, OpOutcome
 from .master import DUP, ERROR, FAST, SYNCED, Master
 from .recovery import RecoveryReport, recover_master
@@ -39,7 +40,8 @@ from .witness import Witness
 __all__ = [
     "Backup", "LogEntry", "ClientSession", "Decision", "decide",
     "decide_multi", "combine_decisions",
-    "ConfigManager", "ConsensusCluster", "replay_threshold", "superquorum",
+    "ConfigManager", "WitnessGeometry", "DeviceWitness",
+    "ConsensusCluster", "replay_threshold", "superquorum",
     "LocalCluster", "OpOutcome", "Master", "FAST", "SYNCED", "DUP", "ERROR",
     "RecoveryReport", "recover_master", "RiflTable", "KVStore",
     "ClusterRecoveryReport", "KeyRouter", "ShardedClientSession",

@@ -1,9 +1,13 @@
-"""Cluster configuration manager (§3.6).
+"""Cluster configuration manager (§3.6) + witness table geometry.
 
 Owns the authoritative mapping master -> (epoch, backups, witnesses,
 WitnessListVersion).  Clients cache configs; masters reject updates carrying a
 stale WitnessListVersion, which forces clients to refetch — this is the §3.6
 mechanism that makes witness reconfiguration safe.
+
+``WitnessGeometry`` is the single knob for the witness table shape (S sets x
+W ways, §4.2/§B.1), threaded from ServeConfig through ShardedCluster down to
+the Pallas kernels so every layer agrees on capacity and VMEM footprint.
 """
 from __future__ import annotations
 
@@ -11,6 +15,35 @@ from dataclasses import dataclass, replace
 from typing import Dict, Optional, Tuple
 
 from .types import ClusterConfig
+
+
+@dataclass(frozen=True)
+class WitnessGeometry:
+    """Witness table shape: ``n_sets`` x ``n_ways`` keyhash slots (§4.2).
+
+    The paper's default is 1024x4 (§B.1: 4096 slots, 4-way associativity —
+    direct-mapped tables start conflicting after ~80 inserts).  ``n_sets``
+    must be a power of two: the device kernels pick the probed set with
+    ``lo & (n_sets - 1)``.
+    """
+    n_sets: int = 1024
+    n_ways: int = 4
+
+    def __post_init__(self) -> None:
+        if self.n_sets < 1 or self.n_sets & (self.n_sets - 1):
+            raise ValueError(f"n_sets must be a power of two, got {self.n_sets}")
+        if self.n_ways < 1:
+            raise ValueError(f"n_ways must be >= 1, got {self.n_ways}")
+
+    @property
+    def slots(self) -> int:
+        return self.n_sets * self.n_ways
+
+    @property
+    def vmem_bytes(self) -> int:
+        """Device footprint of one table: keys_hi + keys_lo (uint32) + occ
+        (int32), the whole-table figure the kernels keep VMEM-resident."""
+        return 3 * 4 * self.slots
 
 
 class ConfigManager:

@@ -1,0 +1,268 @@
+"""Kernel-backed CURP witness: the accept/reject hot path runs on device.
+
+``DeviceWitness`` is a drop-in for :class:`repro.core.witness.Witness` whose
+conflict/capacity decisions come from the Pallas set-parallel witness table
+(repro.kernels): one ``record_batch`` call is ONE fused kernel dispatch for
+the whole batch (keyhash2x32 mix -> set-parallel record), instead of a Python
+slot walk per op.  A small host-side mirror (keyhash -> (rpc_id, Op, age))
+carries the protocol metadata the table doesn't hold — recovery replay data,
+RIFL-duplicate idempotence, and §4.5 gc-age suspicion — so the semantics
+match the Python reference witness:
+
+  * duplicate record retries (same rpc_id, same key) are accepted
+    idempotently: the kernel rejects the same-key probe, and the mirror
+    recognises the rpc and upgrades the verdict;
+  * gc entries whose rpc_id doesn't match the held record are ignored (the
+    mirror filters them before the gc kernel runs), so a stale gc can never
+    drop a newer record for the same key;
+  * survivors age per gc round and are reported as suspected uncollected
+    garbage once they reach ``SUSPECT_AGE``.
+
+Set placement differs from the Python witness (keyhash2x32-mixed low lane
+masked by S-1, vs ``kh % n_sets`` on the raw 64-bit hash), so occupancy
+patterns differ between backends; accept/reject *semantics* do not.
+
+Multi-key ops take an all-or-nothing path: the op's distinct keys run as one
+kernel batch; a key whose kernel probe rejects against this op's OWN prior
+record (same rpc_id) is an idempotent hit, and if any key rejects against
+someone else's record (or capacity), the accepted prefix is rolled back with
+a gc call (second dispatch on the reject path only).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .types import GcResp, Op, RecordStatus, RpcId, WitnessMode
+
+_M32 = 0xFFFFFFFF
+
+
+@dataclass
+class _Held:
+    rpc_id: RpcId
+    request: Op
+    gc_age: int = 0
+
+
+def _lanes(khs) -> Tuple[np.ndarray, np.ndarray]:
+    hi = np.fromiter(((kh >> 32) & _M32 for kh in khs), np.uint32, len(khs))
+    lo = np.fromiter((kh & _M32 for kh in khs), np.uint32, len(khs))
+    return hi, lo
+
+
+def _pad_repeat(a: np.ndarray) -> np.ndarray:
+    """Pad to the record path's jit-cache bucket size by repeating the first
+    element — gc clears are idempotent, so repeats are semantically free
+    while keeping the gc kernel's jit cache to O(log G) entries."""
+    from repro.kernels.ops import _bucket
+
+    b = _bucket(len(a))
+    if b == len(a):
+        return a
+    return np.concatenate([a, np.full(b - len(a), a[0], a.dtype)])
+
+
+class DeviceWitness:
+    """One witness instance serving one master, table state on device."""
+
+    SUSPECT_AGE = 3
+
+    def __init__(self, n_sets: int = 1024, n_ways: int = 4) -> None:
+        from repro.kernels import WitnessTable  # deferred: keeps jax import lazy
+
+        self.n_sets = n_sets
+        self.n_ways = n_ways
+        self.mode = WitnessMode.ENDED
+        self.master_id: Optional[int] = None
+        self._table_cls = WitnessTable
+        self._table = None
+        # keyhash -> protocol metadata for every occupied slot.
+        self._held: Dict[int, _Held] = {}
+        self.stats = {"accepts": 0, "rejects_conflict": 0, "rejects_full": 0,
+                      "rejects_mode": 0, "gc_drops": 0, "kernel_batches": 0}
+
+    # -- lifecycle (Fig. 4: coordinator -> witness) ---------------------------
+    def start(self, master_id: int) -> bool:
+        self.master_id = master_id
+        self.mode = WitnessMode.NORMAL
+        self._table = self._table_cls.empty(self.n_sets, self.n_ways)
+        self._held = {}
+        return True
+
+    def end(self) -> None:
+        self.mode = WitnessMode.ENDED
+        self.master_id = None
+        self._table = None
+        self._held = {}
+
+    # -- client -> witness ----------------------------------------------------
+    def record(
+        self, master_id: int, key_hashes: Tuple[int, ...], rpc_id: RpcId,
+        request: Op,
+    ) -> RecordStatus:
+        """Single-op record: a batch of one (multi-key ops roll back the
+        accepted prefix if any key rejects)."""
+        if self.mode is not WitnessMode.NORMAL or master_id != self.master_id:
+            self.stats["rejects_mode"] += 1
+            return RecordStatus.REJECTED
+        return self._record_keys(key_hashes, rpc_id, request)
+
+    def record_batch(self, master_id: int, ops: List[Op]) -> List[RecordStatus]:
+        """Whole-batch record: ONE fused kernel dispatch resolves every
+        single-key op's accept bit.  Multi-key ops take the all-or-nothing
+        per-op path; batch order is preserved exactly (consecutive
+        single-key runs batch together, so an all-single-key batch — the
+        batched client path's common case — is still one dispatch)."""
+        from repro.kernels import fastpath_batch
+
+        if self.mode is not WitnessMode.NORMAL or master_id != self.master_id:
+            self.stats["rejects_mode"] += len(ops)
+            return [RecordStatus.REJECTED] * len(ops)
+        out: List[RecordStatus] = [RecordStatus.REJECTED] * len(ops)
+        i = 0
+        while i < len(ops):
+            if len(ops[i].key_hashes()) != 1:
+                out[i] = self._record_keys(
+                    ops[i].key_hashes(), ops[i].rpc_id, ops[i]
+                )
+                i += 1
+                continue
+            j = i
+            while j < len(ops) and len(ops[j].key_hashes()) == 1:
+                j += 1
+            khs = [op.key_hashes()[0] for op in ops[i:j]]
+            hi, lo = _lanes(khs)
+            res = fastpath_batch(self._table, hi, lo)
+            self._table = res.table
+            self.stats["kernel_batches"] += 1
+            accepted = np.asarray(res.accepted)
+            for k, idx in enumerate(range(i, j)):
+                out[idx] = self._settle(
+                    khs[k], bool(accepted[k]), ops[idx].rpc_id, ops[idx]
+                )
+            i = j
+        return out
+
+    def _settle(self, kh: int, accepted: bool, rpc_id: RpcId,
+                request: Op) -> RecordStatus:
+        """Fold a kernel accept bit into protocol-level status + mirror."""
+        if accepted:
+            self._held[kh] = _Held(rpc_id, request)
+            self.stats["accepts"] += 1
+            return RecordStatus.ACCEPTED
+        held = self._held.get(kh)
+        if held is not None and held.rpc_id == rpc_id:
+            # Duplicate record RPC (client retry): idempotent accept; the
+            # table already holds the key.
+            held.gc_age = 0
+            self.stats["accepts"] += 1
+            return RecordStatus.ACCEPTED
+        if held is not None:
+            self.stats["rejects_conflict"] += 1
+        else:
+            self.stats["rejects_full"] += 1
+        return RecordStatus.REJECTED
+
+    def _record_keys(self, key_hashes: Tuple[int, ...], rpc_id: RpcId,
+                     request: Op) -> RecordStatus:
+        from repro.kernels import fastpath_batch, witness_gc
+
+        # A key repeated within ONE op occupies one slot and trivially
+        # commutes with itself (Python Witness semantics): probe each
+        # distinct key once, in first-occurrence order.
+        khs = list(dict.fromkeys(key_hashes))
+        hi, lo = _lanes(khs)
+        res = fastpath_batch(self._table, hi, lo)
+        acc = np.asarray(res.accepted)
+        self.stats["kernel_batches"] += 1
+        # A kernel reject is idempotent iff that key is already held under
+        # this exact rpc_id (client retry, §3.2.2) — then the slot content is
+        # already right.  The op succeeds iff every key either inserted fresh
+        # or hit its own prior record.
+        ok = all(
+            bool(a)
+            or ((h := self._held.get(kh)) is not None and h.rpc_id == rpc_id)
+            for kh, a in zip(khs, acc)
+        )
+        if ok:
+            self._table = res.table
+            for kh, a in zip(khs, acc):
+                if a:
+                    self._held[kh] = _Held(rpc_id, request)
+                else:
+                    self._held[kh].gc_age = 0
+            self.stats["accepts"] += 1
+            return RecordStatus.ACCEPTED
+        # All-or-nothing: roll back any accepted prefix (gc of just-inserted
+        # mixed lanes; a dispatch only on the reject path).
+        table = res.table
+        if any(bool(a) for a in acc):
+            keep = acc.astype(bool)
+            table = witness_gc(
+                table,
+                _pad_repeat(np.asarray(res.q_hi)[keep]),
+                _pad_repeat(np.asarray(res.q_lo)[keep]),
+            )
+        self._table = table
+        if any(
+            (h := self._held.get(kh)) is not None and h.rpc_id != rpc_id
+            for kh in khs
+        ):
+            self.stats["rejects_conflict"] += 1
+        else:
+            self.stats["rejects_full"] += 1
+        return RecordStatus.REJECTED
+
+    # -- master -> witness ----------------------------------------------------
+    def gc(self, entries: Tuple[Tuple[int, RpcId], ...]) -> GcResp:
+        """Drop synced records (one gc kernel dispatch); report suspects."""
+        from repro.kernels import witness_gc
+
+        from .shard import mix2x32
+
+        if self.mode is not WitnessMode.NORMAL:
+            return GcResp(stale_requests=())
+        # The mirror filters entries to those actually held under the synced
+        # rpc_id — a stale gc can never drop a newer same-key record.
+        drop = [kh for kh, rpc_id in entries
+                if (h := self._held.get(kh)) is not None and h.rpc_id == rpc_id]
+        if drop:
+            mixed = [mix2x32((kh >> 32) & _M32, kh & _M32) for kh in drop]
+            mh = _pad_repeat(np.asarray([m[0] for m in mixed], np.uint32))
+            ml = _pad_repeat(np.asarray([m[1] for m in mixed], np.uint32))
+            self._table = witness_gc(self._table, mh, ml)
+            for kh in drop:
+                del self._held[kh]
+            self.stats["gc_drops"] += len(drop)
+        # Age survivors; collect suspects (§4.5), dedup by rpc.
+        stale: List[Op] = []
+        seen: set = set()
+        for held in self._held.values():
+            held.gc_age += 1
+            if held.gc_age >= self.SUSPECT_AGE and held.rpc_id not in seen:
+                seen.add(held.rpc_id)
+                stale.append(held.request)
+        return GcResp(stale_requests=tuple(stale))
+
+    def get_recovery_data(self, master_id: int) -> Tuple[Op, ...]:
+        """Irreversibly freeze (recovery mode) and return all held requests."""
+        if self.master_id != master_id or self.mode is WitnessMode.ENDED:
+            return ()
+        self.mode = WitnessMode.RECOVERY
+        out: Dict[RpcId, Op] = {}
+        for held in self._held.values():
+            out[held.rpc_id] = held.request     # dedupe multi-key entries
+        return tuple(out.values())
+
+    # -- §A.1 consistent reads from backups ------------------------------------
+    def commutes_with_all(self, key_hashes: Tuple[int, ...]) -> bool:
+        if self.mode is not WitnessMode.NORMAL:
+            return False
+        return all(kh not in self._held for kh in key_hashes)
+
+    @property
+    def occupancy(self) -> int:
+        return len(self._held)

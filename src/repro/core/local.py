@@ -50,6 +50,8 @@ class LocalCluster:
         hot_key_window: float = 0.0,
         seed: int = 0,
         auto_sync: bool = True,
+        geometry=None,
+        witness_backend: str = "python",
     ) -> None:
         self.f = f
         self.rng = random.Random(seed)
@@ -61,7 +63,8 @@ class LocalCluster:
             shard_id=0, config=self.config, alloc_id=self._node_id,
             f=f, sync_batch=sync_batch, witness_sets=witness_sets,
             witness_ways=witness_ways, hot_key_window=hot_key_window,
-            auto_sync=auto_sync, record=self._record,
+            auto_sync=auto_sync, record=self._record, geometry=geometry,
+            witness_backend=witness_backend,
         )
 
     def _node_id(self) -> int:
@@ -100,6 +103,11 @@ class LocalCluster:
     def update(self, session: ClientSession, op: Op, now: float = 0.0) -> OpOutcome:
         """Full CURP update: update RPC + parallel witness records."""
         return self.group.update(session, op, now)
+
+    def update_batch(self, session: ClientSession, ops, now: float = 0.0):
+        """Batched updates: one master round + one record invocation per
+        witness for the whole batch (see ShardGroup.update_batch)."""
+        return self.group.update_batch(session, ops, now)
 
     def read(self, session: ClientSession, op: Op, now: float = 0.0) -> OpOutcome:
         return self.group.read(session, op, now)

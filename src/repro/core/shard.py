@@ -31,7 +31,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from .backup import Backup
 from .client import ClientSession, Decision, combine_decisions, decide
-from .config import ConfigManager
+from .config import ConfigManager, WitnessGeometry
 from .master import DUP, ERROR, FAST, SYNCED, Master
 from .recovery import RecoveryReport, recover_master
 from .types import ClusterConfig, ExecResult, Op, RecordStatus, keyhash
@@ -137,6 +137,8 @@ class ShardGroup:
         hot_key_window: float = 0.0,
         auto_sync: bool = True,
         record: Optional[Callable[[Op, Any, int], None]] = None,
+        geometry: Optional[WitnessGeometry] = None,
+        witness_backend: str = "python",
     ) -> None:
         self.shard_id = shard_id
         self.config = config
@@ -144,12 +146,17 @@ class ShardGroup:
         self.f = f
         self.auto_sync = auto_sync
         self.record = record or (lambda op, value, client_id: None)
+        if geometry is None:
+            geometry = WitnessGeometry(witness_sets, witness_ways)
+        self.geometry = geometry
+        assert witness_backend in ("python", "device"), witness_backend
+        self.witness_backend = witness_backend
         self.master = Master(
             alloc_id(), epoch=0, sync_batch=sync_batch,
             hot_key_window=hot_key_window,
         )
         self.backups = [Backup(alloc_id()) for _ in range(f)]
-        self.witnesses = [Witness(witness_sets, witness_ways) for _ in range(f)]
+        self.witnesses = [self._new_witness() for _ in range(f)]
         self._witness_ids = tuple(alloc_id() for _ in range(f))
         for w in self.witnesses:
             w.start(self.master.master_id)
@@ -162,6 +169,16 @@ class ShardGroup:
         ))
         self._dropped_witnesses: set[int] = set()
 
+    def _new_witness(self):
+        """Build one witness at this group's geometry: the protocol-reference
+        Python witness, or the kernel-backed device witness (one Pallas
+        dispatch per record batch; see repro.core.device_witness)."""
+        if self.witness_backend == "device":
+            from .device_witness import DeviceWitness
+
+            return DeviceWitness(self.geometry.n_sets, self.geometry.n_ways)
+        return Witness(self.geometry.n_sets, self.geometry.n_ways)
+
     # ------------------------------------------------------------------ faults
     def witness_drop(self, witness_idx: int, dropped: bool = True) -> None:
         if dropped:
@@ -170,47 +187,59 @@ class ShardGroup:
             self._dropped_witnesses.discard(witness_idx)
 
     # ----------------------------------------------------------------- updates
-    def attempt_update(
-        self, op: Op, acks: Tuple[Tuple[int, int], ...], now: float = 0.0,
-    ) -> Tuple[str, ExecResult, List[RecordStatus]]:
-        """One 1-RTT round: update RPC to the master + parallel witness
-        records.  Retries internally on stale-config errors (§3.6)."""
+    def _master_round(
+        self, op: Op, acks: Tuple[Tuple[int, int], ...], now: float,
+    ) -> Tuple[str, ExecResult, ClusterConfig]:
+        """Master half of one update round, retrying stale-config errors
+        (§3.6).  Shared by the per-op and batched paths."""
         for _attempt in range(4):
             cfg = self.config.fetch(self.shard_id)
             verdict, result = self.master.handle_update(
                 op, cfg.witness_list_version, acks, now
             )
-            if verdict == ERROR:
-                continue  # refetch config and retry
-            statuses: List[RecordStatus] = []
-            for i, w in enumerate(self.witnesses):
-                if i in self._dropped_witnesses:
-                    statuses.append(RecordStatus.REJECTED)  # timeout == reject
-                else:
-                    statuses.append(
-                        w.record(cfg.master_id, op.key_hashes(), op.rpc_id, op)
-                    )
-            return verdict, result, statuses
+            if verdict != ERROR:
+                return verdict, result, cfg
         raise RuntimeError("update retries exhausted")
+
+    @staticmethod
+    def _classify(verdict: str, result: ExecResult,
+                  statuses: Sequence[RecordStatus]) -> Tuple[Decision, int, bool]:
+        """Fold (master verdict, witness statuses) into the client view:
+        (decision, rtts, fast).  Single source of truth for both the per-op
+        and batched paths' accounting."""
+        if verdict == SYNCED:
+            return Decision.COMPLETE, 2, False
+        decision = decide(result, statuses)
+        if decision is Decision.COMPLETE:
+            return decision, 1, verdict == FAST
+        return decision, 2, False
+
+    def attempt_update(
+        self, op: Op, acks: Tuple[Tuple[int, int], ...], now: float = 0.0,
+    ) -> Tuple[str, ExecResult, List[RecordStatus]]:
+        """One 1-RTT round: update RPC to the master + parallel witness
+        records.  Retries internally on stale-config errors (§3.6)."""
+        verdict, result, cfg = self._master_round(op, acks, now)
+        statuses: List[RecordStatus] = []
+        for i, w in enumerate(self.witnesses):
+            if i in self._dropped_witnesses:
+                statuses.append(RecordStatus.REJECTED)  # timeout == reject
+            else:
+                statuses.append(
+                    w.record(cfg.master_id, op.key_hashes(), op.rpc_id, op)
+                )
+        return verdict, result, statuses
 
     def update(self, session: ClientSession, op: Op, now: float = 0.0):
         """Full CURP update; returns an OpOutcome (see local.py)."""
         from .local import OpOutcome
 
         verdict, result, statuses = self.attempt_update(op, session.acks(), now)
+        decision, rtts, fast = self._classify(verdict, result, statuses)
 
-        if verdict == SYNCED:
+        if verdict == SYNCED or decision is Decision.NEED_SYNC:
+            # Conflict path / slow path: sync before the reply externalizes.
             self._drain_syncs()
-            decision = Decision.COMPLETE
-            rtts, fast = 2, False
-        else:
-            decision = decide(result, statuses)
-            rtts, fast = (1, True) if decision is Decision.COMPLETE else (2, False)
-
-        if decision is Decision.NEED_SYNC:
-            # Slow path: explicit sync RPC.
-            self._drain_syncs()
-            decision = Decision.COMPLETE
 
         if self.auto_sync and self.master.want_sync:
             self._drain_syncs()
@@ -220,12 +249,58 @@ class ShardGroup:
         return OpOutcome(
             value=result.value,
             rtts=rtts,
-            fast_path=fast and verdict == FAST,
+            fast_path=fast,
             synced_path=verdict == SYNCED,
             witness_accepts=sum(
                 1 for s in statuses if s is RecordStatus.ACCEPTED
             ),
         )
+
+    def update_batch(self, session: ClientSession, ops: Sequence[Op],
+                     now: float = 0.0) -> List["OpOutcome"]:
+        """Batched CURP updates: one master round (ops executed in order) +
+        ONE record invocation per witness for the whole batch (a single
+        set-parallel kernel dispatch on the device backend).
+
+        Per-op accept/reject and fast/slow-path accounting are preserved —
+        op j's witness statuses see exactly the accepts of ops < j, as the
+        per-op path would.  Syncs and gc don't interleave inside a batch
+        (that's the batching window); any op that needs a sync is drained
+        once before the batch returns, so nothing is externalized early.
+        """
+        from .local import OpOutcome
+
+        results = [self._master_round(op, session.acks(), now) for op in ops]
+        cfg = self.config.fetch(self.shard_id)
+        per_witness: List[List[RecordStatus]] = []
+        for i, w in enumerate(self.witnesses):
+            if i in self._dropped_witnesses:
+                per_witness.append([RecordStatus.REJECTED] * len(ops))
+            else:
+                per_witness.append(w.record_batch(cfg.master_id, list(ops)))
+
+        outcomes: List[OpOutcome] = []
+        need_drain = False
+        for j, op in enumerate(ops):
+            verdict, result, _cfg = results[j]
+            statuses = [pw[j] for pw in per_witness]
+            decision, rtts, fast = self._classify(verdict, result, statuses)
+            if verdict == SYNCED or decision is Decision.NEED_SYNC:
+                need_drain = True
+            session.mark_completed(op.rpc_id)
+            self.record(op, result.value, session.client_id)
+            outcomes.append(OpOutcome(
+                value=result.value,
+                rtts=rtts,
+                fast_path=fast,
+                synced_path=verdict == SYNCED,
+                witness_accepts=sum(
+                    1 for s in statuses if s is RecordStatus.ACCEPTED
+                ),
+            ))
+        if need_drain or (self.auto_sync and self.master.want_sync):
+            self._drain_syncs()
+        return outcomes
 
     def read(self, session: ClientSession, op: Op, now: float = 0.0):
         from .local import OpOutcome
@@ -303,10 +378,7 @@ class ShardGroup:
         live = [i for i in range(self.f) if i not in self._dropped_witnesses]
         assert live, "no witness reachable: recovery must wait (§3.3)"
         recovery_witness = self.witnesses[live[0]]
-        new_witnesses = [
-            Witness(recovery_witness.n_sets, recovery_witness.n_ways)
-            for _ in range(self.f)
-        ]
+        new_witnesses = [self._new_witness() for _ in range(self.f)]
         new_ids = tuple(self.alloc_id() for _ in range(self.f))
         report = recover_master(
             shard_id=self.shard_id,
@@ -328,9 +400,7 @@ class ShardGroup:
         """§3.6 case 2: decommission a witness, install a fresh one, bump the
         WitnessListVersion; master syncs before the new config goes live."""
         dead_id = self._witness_ids[witness_idx]
-        new_w = Witness(
-            self.witnesses[witness_idx].n_sets, self.witnesses[witness_idx].n_ways
-        )
+        new_w = self._new_witness()
         new_id = self.alloc_id()
         self.sync_now()  # master must sync to restore f fault tolerance
         cfg = self.config.replace_witness(self.shard_id, dead_id, new_id)
@@ -436,6 +506,8 @@ class ShardedCluster:
         hot_key_window: float = 0.0,
         seed: int = 0,
         auto_sync: bool = True,
+        geometry: Optional[WitnessGeometry] = None,
+        witness_backend: str = "python",
     ) -> None:
         self.n_shards = n_shards
         self.f = f
@@ -445,12 +517,16 @@ class ShardedCluster:
         self._record = HistoryRecorder()
         self.history = self._record.history   # linearizability-checkable log
         self._next_node_id = 0
+        if geometry is None:
+            geometry = WitnessGeometry(witness_sets, witness_ways)
+        self.geometry = geometry
+        self.witness_backend = witness_backend
         self.shards = [
             ShardGroup(
                 shard_id=i, config=self.config, alloc_id=self._node_id,
-                f=f, sync_batch=sync_batch, witness_sets=witness_sets,
-                witness_ways=witness_ways, hot_key_window=hot_key_window,
-                auto_sync=auto_sync, record=self._record,
+                f=f, sync_batch=sync_batch, hot_key_window=hot_key_window,
+                auto_sync=auto_sync, record=self._record, geometry=geometry,
+                witness_backend=witness_backend,
             )
             for i in range(n_shards)
         ]
@@ -481,6 +557,25 @@ class ShardedCluster:
     def read(self, session: ShardedClientSession, op: Op, now: float = 0.0):
         group = self._group_for(op)
         return group.read(session.session_for(group.shard_id), op, now)
+
+    def update_batch(self, session: ShardedClientSession, ops: Sequence[Op],
+                     now: float = 0.0) -> List["OpOutcome"]:
+        """Batched client path: group ops by owning shard, drive each shard's
+        batch through ShardGroup.update_batch (one witness-record invocation
+        — one kernel dispatch on the device backend — per witness per shard),
+        and return per-op outcomes in the input order."""
+        groups: Dict[int, List[int]] = {}
+        for idx, op in enumerate(ops):
+            groups.setdefault(self._group_for(op).shard_id, []).append(idx)
+        out: List[Optional["OpOutcome"]] = [None] * len(ops)
+        for shard_id, idxs in groups.items():
+            sub = session.session_for(shard_id)
+            res = self.shards[shard_id].update_batch(
+                sub, [ops[i] for i in idxs], now
+            )
+            for i, outcome in zip(idxs, res):
+                out[i] = outcome
+        return out  # type: ignore[return-value]
 
     def mset(self, session: ShardedClientSession, kvs, now: float = 0.0):
         """Cross-shard multi-key set: per-shard 1-RTT fast path when every

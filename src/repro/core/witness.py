@@ -116,6 +116,16 @@ class Witness:
         self.stats["accepts"] += 1
         return RecordStatus.ACCEPTED
 
+    def record_batch(self, master_id: int, ops: List[Op]) -> List[RecordStatus]:
+        """One witness invocation for a whole update batch (the batched
+        client path): per-op accept/reject with the same in-order semantics
+        as issuing ``record`` once per op.  The kernel-backed DeviceWitness
+        overrides this with a single set-parallel kernel call."""
+        return [
+            self.record(master_id, op.key_hashes(), op.rpc_id, op)
+            for op in ops
+        ]
+
     # -- master -> witness ----------------------------------------------------
     def gc(self, entries: Tuple[Tuple[int, RpcId], ...]) -> GcResp:
         """Drop synced records; report suspected uncollected garbage (§4.5)."""

@@ -1,28 +1,43 @@
 """Pallas TPU kernels for the CURP protocol hot spots (DESIGN.md §4).
 
-witness_record — batched set-associative witness record (paper §4.2)
+witness_record — SET-PARALLEL batched witness record (paper §4.2): the batch
+                 is bucketed by probed set and whole "rounds" (one query per
+                 set) resolve vectorized, so wall-clock scales with the
+                 longest per-set run, not the batch size
 conflict_scan  — master commutativity check vs the unsynced window (§4.3)
 keyhash        — 2x32-lane key hashing (TPU adaptation of the 64-bit hash)
+fastpath_batch — the fused pipeline: keyhash2x32 -> shard_route ->
+                 witness_record -> conflict_scan as ONE device dispatch per
+                 update batch (vs 3-4 dispatches per op on the per-op path)
 
-Validated in interpret mode against the pure-jnp oracles in ref.py; the
-model-zoo code deliberately contains no Pallas so the dry-run roofline
-reflects real XLA numbers (DESIGN.md §4).
+Fast-path pipeline docs (set-parallel layout, VMEM budget, and the buffer
+donation/aliasing contract) live in witness_record.py's module docstring and
+in README.md next to this file.  Validated in interpret mode against the
+pure-jnp oracles in ref.py; the model-zoo code deliberately contains no
+Pallas so the dry-run roofline reflects real XLA numbers (DESIGN.md §4).
 """
 from .ops import (
+    FastPathResult,
     WitnessTable,
     conflict_scan,
+    dispatch_count,
+    fastpath_batch,
     keyhash2x32,
     ref_conflict_scan,
     ref_keyhash2x32,
     ref_witness_gc,
     ref_witness_record,
+    reset_dispatch_count,
     shard_route,
     witness_gc,
     witness_record,
+    witness_record_seq,
 )
 
 __all__ = [
-    "WitnessTable", "conflict_scan", "keyhash2x32", "shard_route",
-    "witness_gc", "witness_record", "ref_conflict_scan", "ref_keyhash2x32",
-    "ref_witness_gc", "ref_witness_record",
+    "FastPathResult", "WitnessTable", "conflict_scan", "keyhash2x32",
+    "shard_route", "witness_gc", "witness_record", "witness_record_seq",
+    "fastpath_batch", "dispatch_count", "reset_dispatch_count",
+    "ref_conflict_scan", "ref_keyhash2x32", "ref_witness_gc",
+    "ref_witness_record",
 ]

@@ -2,14 +2,37 @@
 
 Each op pads/validates shapes, picks interpret mode automatically (interpret
 on CPU — the kernels target TPU), and exposes a pytree-friendly API used by
-the device-side witness in repro.serving.
+the device-side witness (repro.core.device_witness) and the fast-path
+benchmarks.
+
+Fast-path pipeline
+------------------
+``fastpath_batch`` is the one-dispatch-per-batch op: it fuses
+
+    keyhash2x32 -> shard_route -> witness_record -> conflict_scan
+
+into a single jitted call whose only pallas_call is the fused set-parallel
+record+scan kernel (the hash/route/sort prep is plain XLA that fuses around
+it).  The per-op path costs 3-4 device dispatches per update (hash, record,
+scan, sometimes route); the fused path costs exactly one per *batch*.
+``dispatch_count()`` exposes a host-side counter that fig_fastpath uses to
+demonstrate the difference.
+
+The set-parallel prep (``_setpar_prep``) buckets a query batch by probed set:
+a stable sort by ``lo & (S-1)``, a rank-within-set computation, and a second
+stable sort by rank — after which "round" r (the r-th query of every set) is
+one contiguous span and the kernel resolves whole rounds vectorized across
+sets.  See repro/kernels/witness_record.py for the kernel-side story and the
+buffer-donation contract.
 """
 from __future__ import annotations
 
-from typing import Tuple
+import functools
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .conflict_scan import conflict_scan_pallas
 from .keyhash import keyhash2x32_pallas
@@ -21,7 +44,41 @@ from .ref import (
     ref_witness_gc,
     ref_witness_record,
 )
-from .witness_record import witness_gc_pallas, witness_record_pallas
+from .witness_record import (
+    DEFAULT_TILE_SETS,
+    fastpath_record_scan_pallas,
+    witness_gc_pallas,
+    witness_record_seq_pallas,
+    witness_record_setpar_pallas,
+)
+
+# ---------------------------------------------------------------------------
+# Host-side dispatch accounting (benchmarks read this; see module docstring)
+# ---------------------------------------------------------------------------
+_DISPATCHES = {"count": 0}
+
+
+def _count_dispatch(n: int = 1) -> None:
+    _DISPATCHES["count"] += n
+
+
+def dispatch_count() -> int:
+    """Jitted-program launches issued via this module since the last reset.
+
+    Structural accounting, not a device-side trace: each public op wraps
+    exactly one jitted program (every prep/pad step is host-side numpy, so
+    the jitted call is the only device program a wrapper launches), and the
+    counter increments once per wrapper call.  fig_fastpath uses it to show
+    the API-level amortization — 3 program launches per op on the per-op
+    path vs 1 per *batch* on the fused path.  It does not see launches made
+    outside this module, nor would it catch a second pallas_call added
+    inside an impl (the parity tests pin the impl's behavior instead).
+    """
+    return _DISPATCHES["count"]
+
+
+def reset_dispatch_count() -> None:
+    _DISPATCHES["count"] = 0
 
 
 def _on_tpu() -> bool:
@@ -36,10 +93,112 @@ def _pad_to(x: jnp.ndarray, m: int, fill=0) -> Tuple[jnp.ndarray, int]:
     return x, n
 
 
+# ---------------------------------------------------------------------------
+# Set-parallel prep: bucket the batch by probed set (traced; fuses into the
+# surrounding jit)
+# ---------------------------------------------------------------------------
+def _setpar_prep(n_sets: int, q_hi: jnp.ndarray, q_lo: jnp.ndarray,
+                 q_valid: jnp.ndarray | None = None):
+    """Sort a query batch into round-contiguous set-parallel order.
+
+    Returns (qhi_f, qlo_f, sets_f, round_start, n_rounds, perm) where
+    ``perm`` maps final positions -> original batch positions,
+    ``round_start[r]`` is the offset of round r in the final order (round r
+    holds every set's r-th query, set-ascending), and ``n_rounds`` is a [1]
+    int32 array (the longest per-set run).
+
+    ``q_valid`` marks bucket-padding lanes: invalid queries get the
+    out-of-range set id ``n_sets`` and rank B, so they sort to the tail,
+    fall beyond ``n_rounds``, and are never touched by the kernel (their
+    accept bit stays 0).
+    """
+    (B,) = q_hi.shape
+    sets = (q_lo & jnp.uint32(n_sets - 1)).astype(jnp.int32)       # [B]
+    if q_valid is None:
+        valid = jnp.ones((B,), jnp.int32)
+    else:
+        valid = q_valid.astype(jnp.int32)
+        sets = jnp.where(valid == 1, sets, jnp.int32(n_sets))
+    order1 = jnp.argsort(sets, stable=True)                        # by set
+    sets_s = sets[order1]
+    seg_count = jnp.zeros((n_sets,), jnp.int32).at[sets].add(
+        valid, mode="drop"
+    )
+    seg_start = jnp.cumsum(seg_count) - seg_count                  # exclusive
+    rank_s = jnp.where(
+        sets_s < n_sets,
+        jnp.arange(B, dtype=jnp.int32)
+        - seg_start[jnp.clip(sets_s, 0, n_sets - 1)],
+        jnp.int32(B),
+    )
+    # Stable sort by rank keeps the set-ascending order within each round.
+    order2 = jnp.argsort(rank_s, stable=True)
+    perm = order1[order2]
+    rank_f = rank_s[order2]
+    round_start = jnp.searchsorted(
+        rank_f, jnp.arange(B + 1, dtype=jnp.int32)
+    ).astype(jnp.int32)
+    # Longest VALID run (invalid lanes carry the rank-B sentinel).
+    n_rounds = (
+        jnp.max(jnp.where(rank_f >= B, jnp.int32(-1), rank_f)) + 1
+    ).reshape((1,))
+    return q_hi[perm], q_lo[perm], sets_s[order2], round_start, n_rounds, perm
+
+
+def _unsort(perm: jnp.ndarray, x_sorted: jnp.ndarray) -> jnp.ndarray:
+    return jnp.zeros_like(x_sorted).at[perm].set(x_sorted)
+
+
+def _bucket(n: int, lo: int = 16) -> int:
+    """Next power-of-two >= n (>= lo): stable jit-cache keys across the
+    varying batch sizes the protocol layer produces."""
+    b = lo
+    while b < n:
+        b <<= 1
+    return b
+
+
+def _pad_valid(B: int, *arrays):
+    """Pad 1-D arrays to the bucket size; returns (padded..., valid).
+
+    Host-side numpy on purpose: padding must happen OUTSIDE the jit (the
+    cache keys on shapes, and bucketing is what keeps it O(log B)), and
+    doing it in numpy means it costs zero device-op launches — the padded
+    arrays enter the device once, at the jitted call's transfer.
+    """
+    pad = _bucket(B) - B
+    valid = np.ones((B + pad,), np.int32)
+    valid[B:] = 0
+    out = tuple(
+        np.concatenate([np.asarray(a), np.zeros((pad,), np.asarray(a).dtype)])
+        if pad else np.asarray(a)
+        for a in arrays
+    )
+    return out + (valid,)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_sets"))
+def _witness_record_impl(table: WitnessTable, q_hi, q_lo, q_valid,
+                         interpret: bool, tile_sets: int):
+    S, _W = table.occ.shape
+    qhi_f, qlo_f, sets_f, rstart, n_rounds, perm = _setpar_prep(
+        S, q_hi, q_lo, q_valid
+    )
+    acc_f, new_table = witness_record_setpar_pallas(
+        table, qhi_f, qlo_f, sets_f, rstart, n_rounds,
+        tile_sets=tile_sets, interpret=interpret,
+    )
+    return _unsort(perm, acc_f), new_table
+
+
+# ---------------------------------------------------------------------------
+# Public ops
+# ---------------------------------------------------------------------------
 def keyhash2x32(hi, lo, *, block: int = 1024, interpret: bool | None = None):
     """Batched 64-bit-equivalent key hash as (hi, lo) uint32 lanes."""
     if interpret is None:
         interpret = not _on_tpu()
+    _count_dispatch()
     hi = jnp.asarray(hi, U32)
     lo = jnp.asarray(lo, U32)
     hp, n = _pad_to(hi, block)
@@ -60,22 +219,45 @@ def shard_route(hi, lo, n_shards: int, *, block: int = 1024,
 
 
 def witness_record(table: WitnessTable, q_hi, q_lo,
-                   *, interpret: bool | None = None):
-    """Batched record RPCs against a device-side witness table.
+                   *, interpret: bool | None = None,
+                   tile_sets: int = DEFAULT_TILE_SETS):
+    """Batched record RPCs against a device-side witness table, resolved by
+    the set-parallel kernel (order preserved per set; sets in parallel).
 
-    Returns (accepted [B] int32, new_table).
+    Returns (accepted [B] int32, new_table).  Table buffers are aliased
+    in-program (no intermediate copy inside the dispatch); rebind ``table``
+    to the returned table (see witness_record.py for the exact contract).
     """
     if interpret is None:
         interpret = not _on_tpu()
+    _count_dispatch()
+    q_hi = np.asarray(q_hi, np.uint32)
+    q_lo = np.asarray(q_lo, np.uint32)
+    (B,) = q_hi.shape
+    q_hi, q_lo, valid = _pad_valid(B, q_hi, q_lo)
+    acc, new_table = _witness_record_impl(
+        table, q_hi, q_lo, valid, interpret, tile_sets
+    )
+    return acc[:B], new_table
+
+
+def witness_record_seq(table: WitnessTable, q_hi, q_lo,
+                       *, interpret: bool | None = None):
+    """Pre-refactor sequential-kernel record path (whole batch = one ordered
+    fori_loop).  Kept for old-vs-new benchmarking and differential tests."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    _count_dispatch()
     q_hi = jnp.asarray(q_hi, U32)
     q_lo = jnp.asarray(q_lo, U32)
-    return witness_record_pallas(table, q_hi, q_lo, interpret=interpret)
+    return witness_record_seq_pallas(table, q_hi, q_lo, interpret=interpret)
 
 
 def witness_gc(table: WitnessTable, g_hi, g_lo,
                *, interpret: bool | None = None):
     if interpret is None:
         interpret = not _on_tpu()
+    _count_dispatch()
     return witness_gc_pallas(
         table, jnp.asarray(g_hi, U32), jnp.asarray(g_lo, U32),
         interpret=interpret,
@@ -88,6 +270,7 @@ def conflict_scan(w_hi, w_lo, w_valid, q_hi, q_lo,
     """Commutativity check of B queries vs a U-entry unsynced window."""
     if interpret is None:
         interpret = not _on_tpu()
+    _count_dispatch()
     w_hi = jnp.asarray(w_hi, U32)
     w_lo = jnp.asarray(w_lo, U32)
     w_valid = jnp.asarray(w_valid, jnp.int32)
@@ -105,9 +288,101 @@ def conflict_scan(w_hi, w_lo, w_valid, q_hi, q_lo,
     return out[:b]
 
 
+# ---------------------------------------------------------------------------
+# Fused fast path: hash -> route -> record -> conflict scan, one dispatch
+# ---------------------------------------------------------------------------
+class FastPathResult(NamedTuple):
+    """Result of one fused fast-path batch (all [B], caller order)."""
+    accepted: jnp.ndarray    # witness accept bit per op
+    conflicts: jnp.ndarray   # master-window conflict bit per op
+    shard_ids: jnp.ndarray   # keyhash2x32 placement (int32)
+    q_hi: jnp.ndarray        # mixed keyhash lanes — callers extend their
+    q_lo: jnp.ndarray        # unsynced window with these on accept
+    table: WitnessTable      # updated witness table (donated buffers)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_shards", "interpret", "tile_sets")
+)
+def _fastpath_impl(table, w_hi, w_lo, w_valid, k_hi, k_lo, k_valid,
+                   n_shards: int, interpret: bool, tile_sets: int):
+    # Hash: bit-exact with the keyhash2x32 Pallas kernel (same fmix32 chain);
+    # inlined here so XLA fuses it with the sort/segment prep.
+    qh, ql = ref_keyhash2x32(k_hi, k_lo)
+    shard_ids = (ql % jnp.uint32(n_shards)).astype(jnp.int32)
+    S, _W = table.occ.shape
+    qhi_f, qlo_f, sets_f, rstart, n_rounds, perm = _setpar_prep(
+        S, qh, ql, k_valid
+    )
+    acc_f, con_f, new_table = fastpath_record_scan_pallas(
+        table, qhi_f, qlo_f, sets_f, rstart, n_rounds,
+        w_hi, w_lo, w_valid, tile_sets=tile_sets, interpret=interpret,
+    )
+    return (_unsort(perm, acc_f), _unsort(perm, con_f), shard_ids,
+            qh, ql, new_table)
+
+
+def fastpath_batch(
+    table: WitnessTable, key_hi, key_lo,
+    *, window_hi=None, window_lo=None, window_valid=None,
+    n_shards: int = 1, interpret: bool | None = None,
+    tile_sets: int = DEFAULT_TILE_SETS,
+) -> FastPathResult:
+    """One fused device dispatch for a whole update batch.
+
+    ``key_hi``/``key_lo`` are the RAW 64-bit keyhash lanes (types.keyhash
+    split into uint32 halves); the op mixes them (keyhash2x32), derives shard
+    placement, resolves witness accept/reject via the set-parallel kernel,
+    and checks commutativity against the master's unsynced window — all in a
+    single jitted program containing a single pallas_call.
+
+    The window arguments are MIXED lanes (as previously returned in
+    ``FastPathResult.q_hi/q_lo``); omit them for an empty window.  Table
+    buffers are donated; rebind to ``result.table``.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    _count_dispatch()
+    key_hi = np.asarray(key_hi, np.uint32)
+    key_lo = np.asarray(key_lo, np.uint32)
+    if window_hi is None or np.asarray(window_hi).shape[0] == 0:
+        if window_lo is not None and np.asarray(window_lo).shape[0] > 0:
+            raise ValueError("window_lo given without window_hi")
+        w_hi = np.zeros((1,), np.uint32)
+        w_lo = np.zeros((1,), np.uint32)
+        w_val = np.zeros((1,), np.int32)
+    else:
+        if window_lo is None:
+            raise ValueError("window_hi given without window_lo")
+        w_hi = np.asarray(window_hi, np.uint32)
+        w_lo = np.asarray(window_lo, np.uint32)
+        w_val = (np.ones(w_hi.shape, np.int32) if window_valid is None
+                 else np.asarray(window_valid, np.int32))
+    # Bucket-pad the batch and the window (host-side): the protocol layer
+    # produces arbitrary sizes per shard; padding keeps the jit cache to
+    # O(log B) entries.  Padded query lanes are masked out end to end;
+    # padded window lanes carry valid=0 and can never hit.
+    (B,) = key_hi.shape
+    key_hi, key_lo, k_valid = _pad_valid(B, key_hi, key_lo)
+    (U,) = w_hi.shape
+    pad_u = _bucket(U) - U
+    if pad_u:
+        w_hi = np.concatenate([w_hi, np.zeros((pad_u,), np.uint32)])
+        w_lo = np.concatenate([w_lo, np.zeros((pad_u,), np.uint32)])
+        w_val = np.concatenate([w_val, np.zeros((pad_u,), np.int32)])
+    acc, con, shard_ids, qh, ql, new_table = _fastpath_impl(
+        table, w_hi, w_lo, w_val, key_hi, key_lo, k_valid,
+        n_shards, interpret, tile_sets,
+    )
+    return FastPathResult(
+        acc[:B], con[:B], shard_ids[:B], qh[:B], ql[:B], new_table
+    )
+
+
 __all__ = [
-    "WitnessTable", "keyhash2x32", "shard_route", "witness_record",
-    "witness_gc", "conflict_scan",
+    "WitnessTable", "FastPathResult", "keyhash2x32", "shard_route",
+    "witness_record", "witness_record_seq", "witness_gc", "conflict_scan",
+    "fastpath_batch", "dispatch_count", "reset_dispatch_count",
     "ref_keyhash2x32", "ref_witness_record", "ref_witness_gc",
     "ref_conflict_scan",
 ]

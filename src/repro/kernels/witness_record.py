@@ -1,22 +1,58 @@
-"""Pallas TPU kernel: batched set-associative witness record (§4.2).
+"""Pallas TPU kernels: set-parallel batched witness record (§4.2) + gc.
 
-The witness table (S sets x W ways of 2x32-bit keyhash slots, DESIGN.md §4)
-lives entirely in VMEM — at the paper's 1024x4 geometry that is 48 KiB of
-state, far under the ~16 MiB VMEM budget, so a single kernel invocation
-amortizes the HBM round-trip over a whole batch of record requests.
+Fast-path pipeline (DESIGN.md §4, this PR's layout)
+---------------------------------------------------
+The witness table is S sets x W ways of 2x32-bit keyhash slots.  Records are
+order-dependent *within one set* (an accepted record occupies a way that later
+same-key records must conflict with) but **commute across sets** — two records
+that probe different sets touch disjoint table rows and disjoint accept bits.
+The set-parallel kernel exploits exactly that independence:
 
-Records are ORDER-DEPENDENT within a batch (an accepted record occupies a
-slot that later conflicting records must see), so the kernel runs a
-``fori_loop`` over the batch; each iteration is vectorized across the W ways
-of the probed set (VPU lanes).  Accept/reject semantics match
-repro.core.witness for single-key records:
+  1. A prep pass (repro.kernels.ops._setpar_prep, plain XLA so it fuses with
+     the hash) buckets the query batch by probed set ``lo & (S-1)``: a stable
+     sort by set id, then a stable sort by rank-within-set.  After the second
+     sort, "round" r (the r-th query of every set's run) is one contiguous,
+     set-ascending span of the reordered batch.
+  2. The kernel runs a grid over set-tiles (TILE_S rows of the table per grid
+     cell).  Each cell loops over rounds; one round loads a contiguous query
+     chunk (dynamic start, static size), masks it to this cell's sets, and
+     resolves up to TILE_S sets **simultaneously** with pure VPU work — every
+     set in the round probes, conflict-checks, and fills its first free way in
+     the same vectorized step.  The per-cell loop length is the longest run in
+     the batch (≈ B/S for hashed keys), not B: the old kernel's O(B)
+     sequential ``fori_loop`` becomes O(max-run) with S-wide parallelism.
+  3. Accept bits are written round-chunk-contiguously into a [B] output that
+     all grid cells revisit (accumulate-on-revisit, same pattern as
+     conflict_scan); ops.py unsorts them back to caller order.
 
-  reject  if any occupied way holds the same (hi, lo) keyhash   (conflict)
-  reject  if no way in the set is free                          (capacity)
-  accept  otherwise, writing the first free way
+VMEM budget: the table tile is 3 x TILE_S x W x 4 B (48 KiB at the default
+1024x4 tile = the paper's full geometry), the reordered query batch is
+3 x B x 4 B (48 KiB at B=4096) plus the [B+1] round index — far under the
+~16 MiB budget at every supported geometry; ``WitnessGeometry.vmem_bytes``
+(repro.core.config) computes the whole-table figure used to sanity-check
+configured geometries.
 
-A companion gc kernel clears synced entries (order-independent, fully
-vectorized over the table).
+Donation / aliasing contract
+----------------------------
+Both kernels declare ``input_output_aliases`` for the table buffers
+(keys_hi/keys_lo/occ -> the corresponding outputs).  What that buys, and
+what it does not:
+
+  * WITHIN one jitted program the table is updated in place: the pallas_call
+    consumes its operand buffer instead of allocating + copying a second
+    [S, W] triple, and in the fused ``ops.fastpath_batch`` the table threads
+    prep -> kernel -> result with no intermediate copy.
+  * ACROSS public-op calls the jax.jit boundary still owns the buffers:
+    without jit-level donation (``donate_argnums``) XLA materializes a fresh
+    output buffer per call, and we deliberately do not donate there — the
+    oracle/differential tests replay one table against several ops, and CPU
+    (where the kernels run in interpret mode) ignores jit donation anyway.
+    Cross-call in-place reuse is a TPU deployment follow-up (ROADMAP), wired
+    by donating the table argument at the caller's jit boundary.
+
+The sequential reference kernel (`witness_record_seq_pallas`, the pre-refactor
+fori_loop design) is kept for the old-vs-new comparison in
+benchmarks/fig_fastpath.py and for differential testing.
 """
 from __future__ import annotations
 
@@ -28,12 +64,246 @@ from jax.experimental import pallas as pl
 
 from .ref import U32, WitnessTable
 
+# Default number of table rows (sets) handled by one grid cell.  At the
+# paper's 1024x4 geometry one tile is the whole table (48 KiB — trivially
+# VMEM-resident), so the grid has a single cell; larger geometries split into
+# S/TILE_S cells.  Smaller tiles trade VMEM residency for redundant query
+# scans (every cell walks the full round sequence and masks to its sets), so
+# shrink the tile only when the table itself outgrows VMEM.
+DEFAULT_TILE_SETS = 1024
 
-def _record_kernel(qhi_ref, qlo_ref, khi_in, klo_in, occ_in,
-                   acc_ref, khi_ref, klo_ref, occ_ref):
+
+# ---------------------------------------------------------------------------
+# Set-parallel record kernel (optionally fused with the conflict scan)
+# ---------------------------------------------------------------------------
+def _setpar_kernel_body(
+    tile_lo, r_blk, nrounds_ref, qhi_ref, qlo_ref, sets_ref, rstart_ref,
+    khi_in, klo_in, occ_in, acc_ref, khi_ref, klo_ref, occ_ref,
+):
+    """Resolve every set's (short, ordered) query run for one table tile.
+
+    Queries arrive sorted by (rank-within-set, set): round r is a contiguous
+    chunk in which each set appears at most once, so one round is a fully
+    vectorized [r_blk]-wide probe/insert with no intra-round hazards.
+    """
+    TILE_S, W = khi_in.shape
+    B = qhi_ref.shape[0]
+    way_iota = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+    rstart = rstart_ref[...]                      # [B + 1] round offsets
+    n_rounds = nrounds_ref[0]
+
+    def round_body(r, carry):
+        khi, klo, occ = carry
+        start = rstart[r]
+        end = rstart[r + 1]
+        # Static-size window clamped into range; the valid mask trims it to
+        # the round's true [start, end) span.
+        base = jnp.minimum(start, B - r_blk)
+        qhi_c = pl.load(qhi_ref, (pl.ds(base, r_blk),))
+        qlo_c = pl.load(qlo_ref, (pl.ds(base, r_blk),))
+        sets_c = pl.load(sets_ref, (pl.ds(base, r_blk),))
+        pos = base + jax.lax.iota(jnp.int32, r_blk)
+        valid = (pos >= start) & (pos < end)
+        row = sets_c - tile_lo
+        in_tile = (row >= 0) & (row < TILE_S)
+        m = valid & in_tile
+        rowc = jnp.clip(row, 0, TILE_S - 1)
+        row_hi = khi[rowc]                        # [r_blk, W] gathers
+        row_lo = klo[rowc]
+        row_occ = occ[rowc]
+        conflict = jnp.any(
+            (row_occ == 1)
+            & (row_hi == qhi_c[:, None])
+            & (row_lo == qlo_c[:, None]),
+            axis=1,
+        )
+        free = row_occ == 0
+        has_free = jnp.any(free, axis=1)
+        way = jnp.argmax(free, axis=1)            # first free way per set
+        accq = m & ~conflict & has_free           # [r_blk]
+        sel = (way_iota == way[:, None]) & accq[:, None]
+        new_hi = jnp.where(sel, qhi_c[:, None], row_hi)
+        new_lo = jnp.where(sel, qlo_c[:, None], row_lo)
+        new_occ = jnp.where(sel, 1, row_occ)
+        # Distinct sets within a round => distinct rows: scatter is race-free.
+        # Non-accepted lanes are routed out of range and dropped.
+        srow = jnp.where(accq, rowc, TILE_S)
+        khi = khi.at[srow].set(new_hi, mode="drop")
+        klo = klo.at[srow].set(new_lo, mode="drop")
+        occ = occ.at[srow].set(new_occ, mode="drop")
+        old_acc = pl.load(acc_ref, (pl.ds(base, r_blk),))
+        pl.store(acc_ref, (pl.ds(base, r_blk),),
+                 jnp.where(m, accq.astype(jnp.int32), old_acc))
+        return khi, klo, occ
+
+    khi, klo, occ = jax.lax.fori_loop(
+        0, n_rounds, round_body, (khi_in[...], klo_in[...], occ_in[...])
+    )
+    khi_ref[...] = khi
+    klo_ref[...] = klo
+    occ_ref[...] = occ
+
+
+def _make_record_kernel(r_blk: int, tile_s: int):
+    def kernel(nrounds_ref, qhi_ref, qlo_ref, sets_ref, rstart_ref,
+               khi_in, klo_in, occ_in,
+               acc_ref, khi_ref, klo_ref, occ_ref):
+        g = pl.program_id(0)
+
+        @pl.when(g == 0)
+        def _init_acc():
+            # The [B] accept vector is revisited by every cell; cell 0 zeroes
+            # it, later cells only overwrite their own sets' positions.
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        _setpar_kernel_body(
+            g * tile_s, r_blk, nrounds_ref, qhi_ref, qlo_ref, sets_ref,
+            rstart_ref, khi_in, klo_in, occ_in,
+            acc_ref, khi_ref, klo_ref, occ_ref,
+        )
+    return kernel
+
+
+def _make_fused_kernel(r_blk: int, tile_s: int):
+    """Record kernel fused with the §4.3 conflict scan: one pallas_call per
+    batch resolves witness accept bits AND master-window conflicts."""
+    def kernel(nrounds_ref, qhi_ref, qlo_ref, sets_ref, rstart_ref,
+               whi_ref, wlo_ref, wval_ref,
+               khi_in, klo_in, occ_in,
+               acc_ref, con_ref, khi_ref, klo_ref, occ_ref):
+        g = pl.program_id(0)
+
+        @pl.when(g == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            # Conflict scan touches the whole (tiny) unsynced window, so a
+            # single cell computes it; the window stays VMEM-resident.
+            qhi = qhi_ref[...]
+            qlo = qlo_ref[...]
+            eq = (
+                (whi_ref[...][None, :] == qhi[:, None])
+                & (wlo_ref[...][None, :] == qlo[:, None])
+                & (wval_ref[...][None, :] == 1)
+            )
+            con_ref[...] = jnp.any(eq, axis=1).astype(jnp.int32)
+
+        _setpar_kernel_body(
+            g * tile_s, r_blk, nrounds_ref, qhi_ref, qlo_ref, sets_ref,
+            rstart_ref, khi_in, klo_in, occ_in,
+            acc_ref, khi_ref, klo_ref, occ_ref,
+        )
+    return kernel
+
+
+def _grid_and_specs(S: int, W: int, B: int, tile_s: int):
+    # A non-dividing tile would silently leave table rows uncovered (their
+    # queries would all "reject" and their output rows would be garbage).
+    assert S % tile_s == 0, f"tile_sets {tile_s} must divide n_sets {S}"
+    grid = (S // tile_s,)
+    full = lambda shape: pl.BlockSpec(shape, lambda g: tuple(0 for _ in shape))
+    tile = pl.BlockSpec((tile_s, W), lambda g: (g, 0))
+    return grid, full, tile
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_sets", "interpret")
+)
+def witness_record_setpar_pallas(
+    table: WitnessTable,
+    qhi_f: jnp.ndarray, qlo_f: jnp.ndarray, sets_f: jnp.ndarray,
+    round_start: jnp.ndarray, n_rounds: jnp.ndarray,
+    *, tile_sets: int = DEFAULT_TILE_SETS, interpret: bool = True,
+):
+    """Set-parallel batched record over prep-sorted queries.
+
+    Inputs must come from ``ops._setpar_prep`` (sorted by (rank, set) with
+    round offsets); returns (accepted-in-sorted-order [B], new table).  The
+    table inputs are aliased to the table outputs (input_output_aliases);
+    see the module docstring for the exact donation contract.
+    """
+    S, W = table.occ.shape
+    (B,) = qhi_f.shape
+    tile_s = min(tile_sets, S)
+    r_blk = min(B, S)
+    grid, full, tile = _grid_and_specs(S, W, B, tile_s)
+    out = pl.pallas_call(
+        _make_record_kernel(r_blk, tile_s),
+        grid=grid,
+        in_specs=[
+            full((1,)), full((B,)), full((B,)), full((B,)), full((B + 1,)),
+            tile, tile, tile,
+        ],
+        out_specs=[full((B,)), tile, tile, tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((S, W), U32),
+            jax.ShapeDtypeStruct((S, W), U32),
+            jax.ShapeDtypeStruct((S, W), jnp.int32),
+        ],
+        input_output_aliases={5: 1, 6: 2, 7: 3},
+        interpret=interpret,
+    )(n_rounds, qhi_f, qlo_f, sets_f, round_start,
+      table.keys_hi, table.keys_lo, table.occ)
+    acc, khi, klo, occ = out
+    return acc, WitnessTable(khi, klo, occ)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_sets", "interpret")
+)
+def fastpath_record_scan_pallas(
+    table: WitnessTable,
+    qhi_f: jnp.ndarray, qlo_f: jnp.ndarray, sets_f: jnp.ndarray,
+    round_start: jnp.ndarray, n_rounds: jnp.ndarray,
+    w_hi: jnp.ndarray, w_lo: jnp.ndarray, w_valid: jnp.ndarray,
+    *, tile_sets: int = DEFAULT_TILE_SETS, interpret: bool = True,
+):
+    """Fused fast-path kernel: set-parallel record + conflict scan in ONE
+    pallas_call.  Same prep contract as witness_record_setpar_pallas; the
+    window (w_hi/w_lo/w_valid) is the master's unsynced-op keyhash window.
+
+    Returns (accepted [B], conflicts [B], new table), accepted/conflicts in
+    sorted order.
+    """
+    S, W = table.occ.shape
+    (B,) = qhi_f.shape
+    (U,) = w_hi.shape
+    tile_s = min(tile_sets, S)
+    r_blk = min(B, S)
+    grid, full, tile = _grid_and_specs(S, W, B, tile_s)
+    out = pl.pallas_call(
+        _make_fused_kernel(r_blk, tile_s),
+        grid=grid,
+        in_specs=[
+            full((1,)), full((B,)), full((B,)), full((B,)), full((B + 1,)),
+            full((U,)), full((U,)), full((U,)),
+            tile, tile, tile,
+        ],
+        out_specs=[full((B,)), full((B,)), tile, tile, tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((S, W), U32),
+            jax.ShapeDtypeStruct((S, W), U32),
+            jax.ShapeDtypeStruct((S, W), jnp.int32),
+        ],
+        input_output_aliases={8: 2, 9: 3, 10: 4},
+        interpret=interpret,
+    )(n_rounds, qhi_f, qlo_f, sets_f, round_start,
+      w_hi, w_lo, w_valid,
+      table.keys_hi, table.keys_lo, table.occ)
+    acc, con, khi, klo, occ = out
+    return acc, con, WitnessTable(khi, klo, occ)
+
+
+# ---------------------------------------------------------------------------
+# Sequential reference kernel (pre-refactor design, kept for old-vs-new
+# benchmarking and differential tests)
+# ---------------------------------------------------------------------------
+def _record_seq_kernel(qhi_ref, qlo_ref, khi_in, klo_in, occ_in,
+                       acc_ref, khi_ref, klo_ref, occ_ref):
     S, W = khi_in.shape
     set_mask = jnp.uint32(S - 1)
-    # Copy table state into the output refs; the loop mutates those.
     khi_ref[...] = khi_in[...]
     klo_ref[...] = klo_in[...]
     occ_ref[...] = occ_in[...]
@@ -69,16 +339,17 @@ def _record_kernel(qhi_ref, qlo_ref, khi_in, klo_in, occ_in,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def witness_record_pallas(
+def witness_record_seq_pallas(
     table: WitnessTable, q_hi: jnp.ndarray, q_lo: jnp.ndarray,
     *, interpret: bool = True,
 ):
-    """Process a batch of records against the table.  Single grid cell: the
-    whole table is the working set and the batch is a sequential scan."""
+    """Pre-refactor sequential kernel: the whole batch is one ordered
+    fori_loop over a single grid cell.  O(B) serial steps — the throughput
+    ceiling fig_fastpath measures the set-parallel design against."""
     S, W = table.occ.shape
     (B,) = q_hi.shape
     out = pl.pallas_call(
-        _record_kernel,
+        _record_seq_kernel,
         out_shape=[
             jax.ShapeDtypeStruct((B,), jnp.int32),
             jax.ShapeDtypeStruct((S, W), U32),
@@ -92,6 +363,9 @@ def witness_record_pallas(
     return accepted, WitnessTable(khi, klo, occ)
 
 
+# ---------------------------------------------------------------------------
+# GC kernel (order-independent), with the same donation contract
+# ---------------------------------------------------------------------------
 def _gc_kernel(ghi_ref, glo_ref, khi_in, klo_in, occ_in, occ_ref):
     # occ[s,w] = 0 wherever (hi, lo) matches any gc entry.  G is one gc batch
     # (<= a sync batch), so the [S, W, G] compare cube stays tiny.
@@ -113,10 +387,15 @@ def witness_gc_pallas(
     table: WitnessTable, g_hi: jnp.ndarray, g_lo: jnp.ndarray,
     *, interpret: bool = True,
 ):
+    """Clear synced entries.  The occupancy buffer is aliased in-program
+    (input_output_aliases: occ in -> occ out), so the dispatch mutates one
+    [S, W] occupancy buffer instead of copying it (module docstring has the
+    full donation contract)."""
     S, W = table.occ.shape
     occ = pl.pallas_call(
         _gc_kernel,
         out_shape=jax.ShapeDtypeStruct((S, W), jnp.int32),
+        input_output_aliases={4: 0},
         interpret=interpret,
     )(g_hi.astype(U32), g_lo.astype(U32),
       table.keys_hi, table.keys_lo, table.occ)

@@ -17,9 +17,14 @@ from __future__ import annotations
 
 import json
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from repro.core import ClusterRecoveryReport, ShardedClientSession, ShardedCluster
+from repro.core import (
+    ClusterRecoveryReport,
+    ShardedClientSession,
+    ShardedCluster,
+    WitnessGeometry,
+)
 
 
 @dataclass
@@ -31,7 +36,9 @@ class SessionState:
 
 class CurpSessionStore:
     def __init__(self, f: int = 3, sync_batch: int = 50, seed: int = 0,
-                 n_shards: int = 1) -> None:
+                 n_shards: int = 1,
+                 geometry: Optional[WitnessGeometry] = None,
+                 witness_backend: str = "python") -> None:
         # Sessions are hot keys by construction (one update per token), so we
         # enable the paper's §4.4 preemptive-sync heuristic: the master syncs
         # right after responding to an update of a recently-updated key,
@@ -39,7 +46,8 @@ class CurpSessionStore:
         self.n_shards = n_shards
         self.cluster = ShardedCluster(
             n_shards=n_shards, f=f, sync_batch=sync_batch, seed=seed,
-            hot_key_window=1e12,
+            hot_key_window=1e12, geometry=geometry,
+            witness_backend=witness_backend,
         )
         self.client: ShardedClientSession = self.cluster.new_client()
         self.fast_commits = 0
@@ -65,17 +73,32 @@ class CurpSessionStore:
 
     # -- write path -------------------------------------------------------------
     def commit(self, s: SessionState) -> None:
-        """Durably commit a session snapshot (1 RTT on the fast path)."""
-        op = self.client.op_set(
-            self._key(s.session_id),
-            json.dumps({"tokens": s.tokens, "done": s.done}),
-        )
-        out = self.cluster.update(self.client, op)
-        self._commits_by_shard[self.shard_of(s.session_id)] += 1
-        if out.fast_path:
-            self.fast_commits += 1
-        else:
-            self.slow_commits += 1
+        """Durably commit a session snapshot (1 RTT on the fast path): a
+        batch of one, so both paths share op construction and accounting."""
+        self.commit_batch([s])
+
+    def commit_batch(self, states: Sequence[SessionState]) -> None:
+        """Durably commit a whole decode step's sessions in one batched CURP
+        round: ops grouped per shard, each shard's witnesses record the batch
+        in a single invocation (one kernel dispatch on the device backend),
+        per-session fast/slow accounting preserved.  Distinct sessions have
+        distinct keys, so a multi-session batch stays on the 1-RTT path."""
+        if not states:
+            return
+        ops = [
+            self.client.op_set(
+                self._key(s.session_id),
+                json.dumps({"tokens": s.tokens, "done": s.done}),
+            )
+            for s in states
+        ]
+        outs = self.cluster.update_batch(self.client, ops)
+        for s, out in zip(states, outs):
+            self._commits_by_shard[self.shard_of(s.session_id)] += 1
+            if out.fast_path:
+                self.fast_commits += 1
+            else:
+                self.slow_commits += 1
 
     # -- read path ----------------------------------------------------------------
     def load(self, session_id: str) -> Optional[SessionState]:

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import WitnessGeometry
 from repro.models.config import ModelConfig
 from repro.models.transformer import decode_step, init_decode_cache, init_params
 
@@ -32,6 +33,11 @@ class ServeConfig:
     f: int = 3
     sync_batch: int = 50
     n_shards: int = 1          # session partitions (one master group each)
+    # Witness table shape (S x W), threaded down to the Pallas kernels.
+    witness_geometry: WitnessGeometry = field(default_factory=WitnessGeometry)
+    # "python" (protocol-reference slot walk) or "device" (set-parallel
+    # kernel; one dispatch per commit batch).
+    witness_backend: str = "python"
 
 
 class CurpServeDriver:
@@ -44,7 +50,9 @@ class CurpServeDriver:
             cfg, jax.random.PRNGKey(seed)
         )
         self.store = CurpSessionStore(f=serve.f, sync_batch=serve.sync_batch,
-                                      n_shards=serve.n_shards)
+                                      n_shards=serve.n_shards,
+                                      geometry=serve.witness_geometry,
+                                      witness_backend=serve.witness_backend)
         self.sessions: Dict[str, SessionState] = {}
         self._decode = jax.jit(
             lambda p, b, c: decode_step(cfg, p, b, c)
@@ -102,6 +110,7 @@ class CurpServeDriver:
         )
         out: Dict[str, int] = {}
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        to_commit: List[SessionState] = []
         for i, sid in live:
             tok = int(nxt[i])
             s = self.sessions[sid]
@@ -109,7 +118,10 @@ class CurpServeDriver:
             out[sid] = tok
             self.tokens_served += 1
             if len(s.tokens) % self.serve.commit_every == 0:
-                self.store.commit(s)
+                to_commit.append(s)
+        # One batched CURP round for the whole decode step: distinct session
+        # keys commute, so the batch completes via each shard's 1-RTT path.
+        self.store.commit_batch(to_commit)
         return out
 
     def generate(self, n_tokens: int) -> None:

@@ -5,10 +5,12 @@ for the napkin math); protocol logic is repro.core, unchanged.  Sharded
 scenarios (multi-master, per-shard witnesses) run via run_sharded_scenario.
 """
 from .curp_sim import (
+    BatchedRunResult,
     ScenarioResult,
     ShardedScenarioResult,
     ShardedSimCluster,
     SimCluster,
+    run_batched_throughput,
     run_scenario,
     run_sharded_scenario,
 )
@@ -16,6 +18,7 @@ from .linearizability import check_linearizable
 from .network import Network, Node, Sim
 from .params import DEFAULT, SimParams
 from .workload import (
+    BatchedWorkload,
     ShardSkewedWorkload,
     UniformWriteWorkload,
     YcsbWorkload,
@@ -23,10 +26,11 @@ from .workload import (
 )
 
 __all__ = [
-    "ScenarioResult", "ShardedScenarioResult", "ShardedSimCluster",
-    "SimCluster", "run_scenario", "run_sharded_scenario",
+    "BatchedRunResult", "ScenarioResult", "ShardedScenarioResult",
+    "ShardedSimCluster", "SimCluster", "run_batched_throughput",
+    "run_scenario", "run_sharded_scenario",
     "check_linearizable",
     "Network", "Node", "Sim", "DEFAULT", "SimParams",
-    "ShardSkewedWorkload", "UniformWriteWorkload", "YcsbWorkload",
-    "ZipfianGenerator",
+    "BatchedWorkload", "ShardSkewedWorkload", "UniformWriteWorkload",
+    "YcsbWorkload", "ZipfianGenerator",
 ]

@@ -859,6 +859,87 @@ class ShardedScenarioResult:
     sim_time_us: float
 
 
+@dataclass
+class BatchedRunResult:
+    """Result of a wall-clock batched-client run (see run_batched_throughput).
+
+    Unlike ScenarioResult this is NOT simulated time: it measures the real
+    host/device cost of driving the protocol through the batched client path
+    (the quantity the fast-path refactor optimizes)."""
+    n_shards: int
+    batch_size: int
+    n_batches: int
+    ops: int
+    wall_s: float
+    ops_per_sec: float
+    fast_fraction: float
+    witness_accepts: int
+
+
+def run_batched_throughput(
+    n_shards: int = 2,
+    batch_size: int = 64,
+    n_batches: int = 10,
+    f: int = 3,
+    seed: int = 0,
+    conflict_frac: float = 0.0,
+    witness_backend: str = "python",
+    geometry=None,
+    workload=None,
+) -> BatchedRunResult:
+    """Drive a real ShardedCluster through the batched client path
+    (update_batch) with a BatchedWorkload and measure wall-clock throughput
+    + fast-path ratio.  With ``witness_backend="device"`` each shard's
+    witnesses resolve every batch in one set-parallel kernel dispatch.
+
+    ``workload`` must follow the BatchedWorkload interface — a ``batch(
+    session) -> list[Op]`` method and a ``batch_size`` attribute.  The
+    per-op workloads (UniformWriteWorkload etc.) are callables, not batch
+    generators, and are rejected up front.
+    """
+    import time as _time
+
+    from repro.core import ShardedCluster
+
+    from .workload import BatchedWorkload
+
+    cluster = ShardedCluster(
+        n_shards=n_shards, f=f, seed=seed, witness_backend=witness_backend,
+        geometry=geometry,
+    )
+    session = cluster.new_client()
+    wl = workload or BatchedWorkload(
+        batch_size=batch_size, conflict_frac=conflict_frac, seed=seed
+    )
+    if not callable(getattr(wl, "batch", None)) or \
+            not hasattr(wl, "batch_size"):
+        raise TypeError(
+            "workload must expose batch(session) and batch_size "
+            "(BatchedWorkload interface); per-op workloads are not batched"
+        )
+    # Warm one batch outside the timed window (jit compiles on the device
+    # backend; Python path warms caches).
+    cluster.update_batch(session, wl.batch(session))
+    fast = slow = accepts = 0
+    t0 = _time.perf_counter()
+    for _ in range(n_batches):
+        outs = cluster.update_batch(session, wl.batch(session))
+        for o in outs:
+            if o.fast_path:
+                fast += 1
+            else:
+                slow += 1
+            accepts += o.witness_accepts
+    wall = _time.perf_counter() - t0
+    ops = n_batches * wl.batch_size
+    return BatchedRunResult(
+        n_shards=n_shards, batch_size=wl.batch_size, n_batches=n_batches,
+        ops=ops, wall_s=wall, ops_per_sec=ops / wall if wall > 0 else 0.0,
+        fast_fraction=fast / max(1, fast + slow),
+        witness_accepts=accepts,
+    )
+
+
 def run_sharded_scenario(
     n_shards: int = 4,
     mode: str = "curp",

@@ -91,6 +91,40 @@ class UniformWriteWorkload:
 
 
 @dataclass
+class BatchedWorkload:
+    """Batches of single-key writes for the batched client path
+    (ShardedCluster.update_batch / CurpSessionStore.commit_batch).
+
+    Each call to ``batch`` yields ``batch_size`` ops drawn from a uniform
+    keyspace; ``conflict_frac`` of them re-touch a small hot keyset so a
+    tunable share of the batch exercises the witness conflict path (the
+    adversarial case for set-parallel records).  Ops are created through the
+    session's routing constructors, so each op carries an rpc_id from its
+    owning shard's RIFL space.
+    """
+    batch_size: int = 64
+    n_items: int = 2_000_000
+    conflict_frac: float = 0.0
+    hot_items: int = 8
+    seed: int = 0
+    value_size: int = 100
+
+    def __post_init__(self) -> None:
+        self.rng = random.Random(self.seed)
+        self._value = "x" * self.value_size
+
+    def batch(self, session) -> list:
+        ops = []
+        for _ in range(self.batch_size):
+            if self.conflict_frac > 0 and self.rng.random() < self.conflict_frac:
+                key = f"hot{self.rng.randrange(self.hot_items)}"
+            else:
+                key = f"k{self.rng.randrange(self.n_items)}"
+            ops.append(session.op_set(key, self._value))
+        return ops
+
+
+@dataclass
 class ShardSkewedWorkload:
     """Writes whose *shard* distribution is skewed: ``hot_frac`` of ops land
     on ``hot_shard``, the rest spread uniformly over the other shards.

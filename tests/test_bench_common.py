@@ -1,0 +1,49 @@
+"""Unit tests for benchmark helpers (benchmarks/common.py)."""
+import pytest
+
+from benchmarks.common import pct, summarize
+
+
+class TestPct:
+    def test_nearest_rank_basic(self):
+        xs = list(range(1, 11))          # 1..10
+        assert pct(xs, 0.50) == 5        # ceil(5) -> 5th value
+        assert pct(xs, 0.90) == 9        # ceil(9) -> 9th, NOT the max
+        assert pct(xs, 0.99) == 10       # ceil(9.9) -> 10th
+        assert pct(xs, 1.00) == 10
+
+    def test_small_sample_not_biased_high(self):
+        # The old int(p * len) indexing returned the MAX for p90 of 10
+        # samples; nearest-rank must return the 9th value.
+        xs = [1.0] * 9 + [100.0]
+        assert pct(xs, 0.90) == 1.0
+        assert pct(xs, 0.91) == 100.0
+
+    def test_single_element_and_bounds(self):
+        assert pct([7.0], 0.5) == 7.0
+        assert pct([7.0], 0.999) == 7.0
+        assert pct([3.0, 1.0], 0.0) == 1.0   # p<=0 -> min
+        assert pct([3.0, 1.0], 1.0) == 3.0
+
+    def test_unsorted_input(self):
+        assert pct([5.0, 1.0, 9.0, 3.0], 0.5) == 3.0  # ceil(2) -> 2nd sorted
+
+    def test_empty_raises(self):
+        with pytest.raises(ValueError):
+            pct([], 0.5)
+
+    def test_p999_needs_thousand_samples(self):
+        xs = list(range(1000))           # 0..999
+        assert pct(xs, 0.999) == 998     # ceil(999) -> 999th value
+        assert pct(xs, 0.9995) == 999
+
+
+class TestSummarize:
+    def test_keys_and_consistency(self):
+        xs = [float(i) for i in range(1, 101)]
+        s = summarize(xs)
+        assert set(s) == {"median", "mean", "p90", "p99", "p999"}
+        assert s["median"] == 50.5
+        assert s["p90"] == 90.0          # nearest rank of 100 samples
+        assert s["p99"] == 99.0
+        assert s["p90"] <= s["p99"] <= s["p999"]
