@@ -1,4 +1,4 @@
-.PHONY: check test bench-scaling bench-fastpath
+.PHONY: check test bench-scaling bench-fastpath bench-txn
 
 check:
 	bash scripts/check.sh
@@ -11,3 +11,6 @@ bench-scaling:
 
 bench-fastpath:
 	PYTHONPATH=src python -m benchmarks.fig_fastpath
+
+bench-txn:
+	PYTHONPATH=src python -m benchmarks.fig_txn

@@ -27,20 +27,34 @@ def write_bench_json(results, path: pathlib.Path = BENCH_JSON) -> None:
     Schema: {"schema": 1, "unix_time": ..., "figures": {name:
     {"us_per_call": ..., "derived": {...}}}} — stable keys so a driver can
     diff BENCH_curp.json between PRs.
+
+    MERGES into an existing file instead of overwriting it: figures run now
+    replace their own entries, figures not in ``results`` keep their prior
+    numbers — so a partial run (or a PR that adds a new figure) never drops
+    the rest of the perf trajectory.
     """
+    figures = {}
+    if path.exists():
+        try:
+            prior = json.loads(path.read_text())
+            figures = dict(prior.get("figures", {}))
+        except (json.JSONDecodeError, OSError):
+            figures = {}
+    figures.update({
+        name: {
+            "us_per_call": dt,
+            "derived": {k: _jsonable(v) for k, v in derived.items()},
+        }
+        for name, dt, derived in results
+    })
     payload = {
         "schema": 1,
         "unix_time": time.time(),
-        "figures": {
-            name: {
-                "us_per_call": dt,
-                "derived": {k: _jsonable(v) for k, v in derived.items()},
-            }
-            for name, dt, derived in results
-        },
+        "figures": figures,
     }
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
-    print(f"wrote {path}")
+    print(f"wrote {path} ({len(results)} updated, "
+          f"{len(figures) - len(results)} preserved)")
 
 
 def main() -> None:
@@ -54,6 +68,7 @@ def main() -> None:
         fig12_batchsize,
         fig_fastpath,
         fig_scaling,
+        fig_txn,
         roofline_table,
     )
 
@@ -67,6 +82,7 @@ def main() -> None:
         ("fig12_batchsize", fig12_batchsize.main),
         ("fig_scaling", fig_scaling.main),
         ("fig_fastpath", fig_fastpath.main),
+        ("fig_txn", fig_txn.main),
         ("roofline_table", roofline_table.main),
     ]
     results = []

@@ -4,10 +4,12 @@
 #   scripts/check.sh            # full tier-1 tests + benchmark smokes
 #   scripts/check.sh -m 'not slow'   # extra pytest args pass through
 #
-# The smoke runs use tiny op counts: they validate that the sharded and
-# fused-fast-path benchmarks still run end-to-end (fig_scaling stays
-# monotonic; fig_fastpath keeps its bit-exact parity assertion and its
-# 1-dispatch-per-batch invariant), not the measured numbers.
+# The smoke runs use tiny op counts: they validate that the sharded,
+# fused-fast-path, and transaction benchmarks still run end-to-end
+# (fig_scaling stays monotonic; fig_fastpath keeps its bit-exact parity
+# assertion and its 1-dispatch-per-batch invariant; fig_txn keeps its
+# crash-atomicity, 1-dispatch transactional-probe, and single-shard
+# fast-path assertions), not the measured numbers.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -15,4 +17,5 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
 python -m benchmarks.fig_scaling --smoke
 python -m benchmarks.fig_fastpath --smoke
+python -m benchmarks.fig_txn --smoke
 echo "check.sh: all green"

@@ -4,10 +4,20 @@ Faithful implementation of Park & Ousterhout, "Exploiting Commutativity For
 Practical Fast Replication": witnesses (durability without ordering),
 speculative masters with commutativity-bounded unsynced windows, batched
 backup syncs, RIFL exactly-once semantics, crash recovery, reconfiguration,
-and the §A.1 (backup reads) / §A.2 (consensus) extensions.
+and the §A.1 (backup reads) / §A.2 (consensus) extensions — plus the
+cross-shard mini-transaction subsystem (repro.core.txn): a RIFL-identified
+2PC over the per-shard fast paths, Sinfonia-style, with single-shard
+transactions short-circuiting to the 1-RTT path.
 """
 from .backup import Backup, LogEntry
-from .client import ClientSession, Decision, combine_decisions, decide, decide_multi
+from .client import (
+    ClientSession,
+    Decision,
+    combine_decisions,
+    decide,
+    decide_commit,
+    decide_multi,
+)
 from .config import ConfigManager, WitnessGeometry
 from .consensus import ConsensusCluster, replay_threshold, superquorum
 from .device_witness import DeviceWitness
@@ -24,6 +34,17 @@ from .shard import (
     mix2x32,
 )
 from .store import KVStore
+from .txn import (
+    CoordinatorCrash,
+    TxnCoordinator,
+    TxnOutcome,
+    TxnPart,
+    TxnPending,
+    TxnSpec,
+    TxnStatus,
+    resolve_pending,
+    resolve_txn,
+)
 from .types import (
     ClusterConfig,
     ExecResult,
@@ -39,13 +60,15 @@ from .witness import Witness
 
 __all__ = [
     "Backup", "LogEntry", "ClientSession", "Decision", "decide",
-    "decide_multi", "combine_decisions",
+    "decide_multi", "decide_commit", "combine_decisions",
     "ConfigManager", "WitnessGeometry", "DeviceWitness",
     "ConsensusCluster", "replay_threshold", "superquorum",
     "LocalCluster", "OpOutcome", "Master", "FAST", "SYNCED", "DUP", "ERROR",
     "RecoveryReport", "recover_master", "RiflTable", "KVStore",
     "ClusterRecoveryReport", "KeyRouter", "ShardedClientSession",
     "ShardedCluster", "ShardGroup", "mix2x32",
+    "CoordinatorCrash", "TxnCoordinator", "TxnOutcome", "TxnPart",
+    "TxnPending", "TxnSpec", "TxnStatus", "resolve_pending", "resolve_txn",
     "ClusterConfig", "ExecResult", "Op", "OpType", "RecordStatus", "RpcId",
     "WitnessMode", "keyhash", "splitmix64", "Witness",
 ]

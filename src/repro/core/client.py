@@ -69,6 +69,17 @@ def combine_decisions(decisions) -> Decision:
     return Decision.NEED_SYNC
 
 
+def decide_commit(votes, n_parts: int) -> bool:
+    """Coordinator-side 2PC decision rule (repro.core.txn): COMMIT iff every
+    participant leg voted yes — a vote is granted only once that leg's
+    prepare is durable (all-witness accept or synced), so this is the same
+    completion discipline as ``decide``, lifted to transaction legs.  A
+    short vote set (coordinator died mid-prepare-round) can never commit.
+    """
+    votes = list(votes)
+    return len(votes) == n_parts and all(v.granted for v in votes)
+
+
 @dataclass
 class ClientSession:
     """Per-client RIFL identity: rpc_id allocation + ack tracking."""

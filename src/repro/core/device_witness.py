@@ -22,11 +22,16 @@ Set placement differs from the Python witness (keyhash2x32-mixed low lane
 masked by S-1, vs ``kh % n_sets`` on the raw 64-bit hash), so occupancy
 patterns differ between backends; accept/reject *semantics* do not.
 
-Multi-key ops take an all-or-nothing path: the op's distinct keys run as one
-kernel batch; a key whose kernel probe rejects against this op's OWN prior
-record (same rpc_id) is an idempotent hit, and if any key rejects against
-someone else's record (or capacity), the accepted prefix is rolled back with
-a gc call (second dispatch on the reject path only).
+Multi-key ops take an all-or-nothing path through the transactional probe
+kernel (repro.kernels.txn_probe): the op's distinct keys resolve in ONE
+dispatch whether the op accepts or rejects — the kernel computes every key's
+conflict/capacity verdict against the pre-op table and only writes when the
+whole op accepted, so there is never an accepted prefix to roll back.  Keys
+already held under the op's own rpc_id are passed as ``own`` bits (resolved
+from the host mirror) and count as placed, not as conflicts.  The
+pre-refactor record-then-rollback scheme (2 dispatches on the reject path)
+is kept as ``_record_keys_rollback`` for benchmarks/fig_txn.py's old-vs-new
+comparison.
 """
 from __future__ import annotations
 
@@ -168,20 +173,57 @@ class DeviceWitness:
 
     def _record_keys(self, key_hashes: Tuple[int, ...], rpc_id: RpcId,
                      request: Op) -> RecordStatus:
-        from repro.kernels import fastpath_batch, witness_gc
+        """All-or-nothing multi-key record via the transactional probe
+        kernel: ONE dispatch whether the op accepts or rejects (the kernel
+        leaves the table bit-identical on reject, so no rollback gc)."""
+        from repro.kernels import txn_probe
 
         # A key repeated within ONE op occupies one slot and trivially
         # commutes with itself (Python Witness semantics): probe each
         # distinct key once, in first-occurrence order.
         khs = list(dict.fromkeys(key_hashes))
         hi, lo = _lanes(khs)
+        # Host mirror resolves RIFL-retry idempotence BEFORE the dispatch: a
+        # key already held under this exact rpc_id is an expected hit
+        # (§3.2.2 duplicate record), not a conflict.
+        own = np.fromiter(
+            (1 if (h := self._held.get(kh)) is not None
+             and h.rpc_id == rpc_id else 0 for kh in khs),
+            np.int32, len(khs),
+        )
+        res = txn_probe(self._table, hi, lo, own)
+        self._table = res.table
+        self.stats["kernel_batches"] += 1
+        if res.accepted:
+            for kh, o in zip(khs, own):
+                if o:
+                    self._held[kh].gc_age = 0
+                else:
+                    self._held[kh] = _Held(rpc_id, request)
+            self.stats["accepts"] += 1
+            return RecordStatus.ACCEPTED
+        if any(
+            (h := self._held.get(kh)) is not None and h.rpc_id != rpc_id
+            for kh in khs
+        ):
+            self.stats["rejects_conflict"] += 1
+        else:
+            self.stats["rejects_full"] += 1
+        return RecordStatus.REJECTED
+
+    def _record_keys_rollback(self, key_hashes: Tuple[int, ...], rpc_id: RpcId,
+                              request: Op) -> RecordStatus:
+        """Pre-refactor record-then-rollback scheme, kept only for the
+        old-vs-new dispatch comparison in benchmarks/fig_txn.py: the batch
+        record dispatch is followed by a gc dispatch whenever a partial
+        accept must be rolled back (2 dispatches on the reject path)."""
+        from repro.kernels import fastpath_batch, witness_gc
+
+        khs = list(dict.fromkeys(key_hashes))
+        hi, lo = _lanes(khs)
         res = fastpath_batch(self._table, hi, lo)
         acc = np.asarray(res.accepted)
         self.stats["kernel_batches"] += 1
-        # A kernel reject is idempotent iff that key is already held under
-        # this exact rpc_id (client retry, §3.2.2) — then the slot content is
-        # already right.  The op succeeds iff every key either inserted fresh
-        # or hit its own prior record.
         ok = all(
             bool(a)
             or ((h := self._held.get(kh)) is not None and h.rpc_id == rpc_id)
@@ -196,8 +238,7 @@ class DeviceWitness:
                     self._held[kh].gc_age = 0
             self.stats["accepts"] += 1
             return RecordStatus.ACCEPTED
-        # All-or-nothing: roll back any accepted prefix (gc of just-inserted
-        # mixed lanes; a dispatch only on the reject path).
+        # Roll back any accepted prefix (the second dispatch on reject).
         table = res.table
         if any(bool(a) for a in acc):
             keep = acc.astype(bool)

@@ -18,7 +18,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from .backup import LogEntry
 from .rifl import RiflTable
 from .store import KVStore
-from .types import BackupSyncReq, ExecResult, Op, RpcId
+from .types import TXN_OPS, BackupSyncReq, ExecResult, Op, OpType, RpcId
 
 # Verdicts for an incoming update.
 FAST = "fast"            # executed, reply immediately (1 RTT path)
@@ -65,6 +65,8 @@ class Master:
         self.stats = {
             "fast": 0, "conflict_syncs": 0, "dups": 0, "batch_syncs": 0,
             "reads_fast": 0, "reads_blocked": 0, "hot_key_syncs": 0,
+            "txn_prepares": 0, "txn_commits": 0, "txn_aborts": 0,
+            "txn_vote_no": 0,
         }
 
     # ------------------------------------------------------------------ utils
@@ -110,6 +112,18 @@ class Master:
             self.stats["dups"] += 1
             return DUP, ExecResult(dup.result, synced=dup.synced)
 
+        if op.op_type in TXN_OPS:
+            return self._handle_txn(op, now)
+        # Keys under an undecided transaction intent cannot be executed:
+        # syncing doesn't resolve the intent, so this is not the §3.2.3
+        # conflict path — the caller must resolve the transaction (or wait
+        # for its coordinator) and retry.  ExecResult.value carries the
+        # blocking TxnSpec for exactly that.
+        blocking = self.store.txn_lock_conflict(op.keys)
+        if blocking is not None:
+            return ERROR, ExecResult(blocking, synced=False, ok=False,
+                                     error="TXN_PENDING")
+
         commutes = self._commutes(op)
         # §4.4 hot-key heuristic: was any touched key updated "recently"
         # (within hot_key_window) before this op?  If so it will likely be
@@ -144,12 +158,77 @@ class Master:
             self.want_sync = True
         return FAST, ExecResult(result, synced=False)
 
+    # --------------------------------------------------- transactions (txn.py)
+    def _log_txn(self, op: Op, result) -> None:
+        """Shared tail of the txn-op paths: RIFL completion + log entry +
+        unsynced-window refcounts (symmetric with complete_sync's walk)."""
+        self.rifl.record_completion(op.rpc_id, result, synced=False)
+        self.log.append(LogEntry(op, result))
+        for kh in op.key_hashes():
+            self._unsynced_keyhash[kh] = self._unsynced_keyhash.get(kh, 0) + 1
+
+    def _handle_txn(self, op: Op, now: float) -> Tuple[str, ExecResult]:
+        """PREPARE / COMMIT / ABORT legs of the 2PC (repro.core.txn).
+
+        PREPARE follows the regular speculative-update rules (commutativity
+        vs the unsynced window decides fast vs synced) plus two vote-NO
+        gates: a foreign intent lock on any key, or an existing decision
+        tombstone under this leg's decide_rpc (installed by crash
+        resolution — refusing the straggler prepare closes the classic 2PC
+        prepare/resolve race).  COMMIT/ABORT apply immediately and reply
+        FAST without witness records or a pre-reply sync: the decision is a
+        deterministic function of durable prepare state, so recovery
+        re-derives it instead of needing it pre-logged.
+        """
+        if op.op_type is OpType.TXN_PREPARE:
+            spec, shard_id = op.args
+            part = spec.part_on(shard_id)
+            dec = self.rifl.check_duplicate(part.decide_rpc)
+            if dec is not None:
+                self.stats["txn_vote_no"] += 1
+                return ERROR, ExecResult(dec.result, synced=False, ok=False,
+                                         error="TXN_DECIDED")
+            blocking = self.store.txn_lock_conflict(op.keys, spec.txn_id)
+            if blocking is not None:
+                self.stats["txn_vote_no"] += 1
+                return ERROR, ExecResult(blocking, synced=False, ok=False,
+                                         error="TXN_LOCKED")
+            commutes = self._commutes(op)
+            result = self.store.execute(op, now)
+            self._log_txn(op, result)
+            self.stats["txn_prepares"] += 1
+            if not commutes:
+                self.stats["conflict_syncs"] += 1
+                self.want_sync = True
+                return SYNCED, ExecResult(result, synced=True)
+            self.stats["fast"] += 1
+            if self.unsynced_count >= self.sync_batch:
+                self.want_sync = True
+            return FAST, ExecResult(result, synced=False)
+
+        result = self.store.execute(op, now)
+        self._log_txn(op, result)
+        if op.op_type is OpType.TXN_COMMIT:
+            self.stats["txn_commits"] += 1
+        else:
+            self.stats["txn_aborts"] += 1
+        # Keep decision windows short: the intent's witness records stay
+        # live until the prepare syncs, so nudge the batched sync along.
+        self.want_sync = True
+        return FAST, ExecResult(result, synced=False)
+
     # ----------------------------------------------------------------- reads
     def handle_read(self, op: Op, now: float = 0.0) -> Tuple[str, ExecResult]:
         """Reads of unsynced values must sync first (§3.2.3 / §A.1)."""
         if not self.owns(op):
             return ERROR, ExecResult(None, synced=False, ok=False,
                                      error="NOT_OWNER")
+        blocking = self.store.txn_lock_conflict(op.keys)
+        if blocking is not None:
+            # An undecided intent covers this key: the read cannot be
+            # ordered until the transaction resolves (same rule as updates).
+            return ERROR, ExecResult(blocking, synced=False, ok=False,
+                                     error="TXN_PENDING")
         value = self.store.execute(op, now)
         if self._commutes(op):
             self.stats["reads_fast"] += 1

@@ -6,6 +6,12 @@ getRecoveryData, replay all held requests in any order (they are mutually
 commutative by construction; RIFL filters those already on backups), sync the
 result to backups, and hand out fresh witnesses under a bumped epoch +
 WitnessListVersion.
+
+Transaction intents (repro.core.txn) ride both steps for free: TXN_PREPARE
+ops in the backup log and in witness data re-install their intents when
+executed, so the recovered master re-surfaces every prepared-but-undecided
+transaction; the enclosing cluster then resolves them (Sinfonia recovery
+rule) so no intent outlives recovery undecided.
 """
 from __future__ import annotations
 
@@ -26,6 +32,13 @@ class RecoveryReport:
     new_epoch: int
     new_witness_list_version: int
     shard_id: int = 0        # which shard failed over (per-shard epochs)
+    # Mini-transaction recovery (repro.core.txn): intents the recovered
+    # master re-surfaced from its backup log + witness replay, and how the
+    # post-recovery cluster-wide resolution sweep decided them.
+    txn_intents: int = 0     # undecided intents present right after replay
+    txn_resolved: int = 0
+    txn_committed: int = 0
+    txn_aborted: int = 0
 
 
 def recover_master(
@@ -77,4 +90,8 @@ def recover_master(
         new_epoch=cfg.epoch,
         new_witness_list_version=cfg.witness_list_version,
         shard_id=shard_id,
+        # Prepared-but-undecided intents survive into the new master (via
+        # log restore and witness replay); the enclosing cluster resolves
+        # them (repro.core.txn.resolve_pending) right after this returns.
+        txn_intents=len(new_master.store.txn_intents()),
     )

@@ -34,7 +34,19 @@ from .client import ClientSession, Decision, combine_decisions, decide
 from .config import ConfigManager, WitnessGeometry
 from .master import DUP, ERROR, FAST, SYNCED, Master
 from .recovery import RecoveryReport, recover_master
-from .types import ClusterConfig, ExecResult, Op, RecordStatus, keyhash
+from .txn import (
+    CoordinatorCrash,
+    TxnCoordinator,
+    TxnOutcome,
+    TxnPart,
+    TxnPending,
+    TxnSpec,
+    TxnStatus,
+    TxnVote,
+    resolve_pending,
+    resolve_txn,
+)
+from .types import ClusterConfig, ExecResult, Op, OpType, RecordStatus, keyhash
 from .witness import Witness
 
 _M32 = 0xFFFFFFFF
@@ -199,6 +211,11 @@ class ShardGroup:
             )
             if verdict != ERROR:
                 return verdict, result, cfg
+            if result.error == "TXN_PENDING":
+                # Blocked by an undecided transaction intent: retrying at
+                # the master is useless — the caller must resolve the
+                # transaction (the blocking spec rides in result.value).
+                raise TxnPending(result.value)
         raise RuntimeError("update retries exhausted")
 
     @staticmethod
@@ -306,6 +323,8 @@ class ShardGroup:
         from .local import OpOutcome
 
         verdict, result = self.master.handle_read(op, now)
+        if verdict == ERROR and result.error == "TXN_PENDING":
+            raise TxnPending(result.value)
         if verdict == SYNCED:
             self._drain_syncs()
         self.record(op, result.value, session.client_id)
@@ -333,6 +352,71 @@ class ShardGroup:
             return view.get(op.keys[0]), True
         out = self.read(session, op)
         return out.value, False
+
+    # ---------------------------------------------- 2PC participant (txn.py)
+    def txn_prepare(self, session: ClientSession, op: Op,
+                    now: float = 0.0) -> TxnVote:
+        """One PREPARE leg: speculative intent install at the master +
+        parallel witness records of the leg's keys (the tombstoned intents
+        that keep commutativity checks sound during the window).
+
+        The leg is durably prepared on return: 1 RTT when the master was
+        fast AND every witness accepted, otherwise via an explicit backup
+        sync (2 RTTs for this leg only).  A vote NO (foreign intent lock or
+        an existing decision tombstone) installs nothing.
+        """
+        for _attempt in range(4):
+            cfg = self.config.fetch(self.shard_id)
+            verdict, result = self.master.handle_update(
+                op, cfg.witness_list_version, session.acks(), now
+            )
+            if verdict != ERROR or result.error != "WRONG_WITNESS_VERSION":
+                break
+        if verdict == ERROR:
+            return TxnVote(granted=False, error=result.error)
+        statuses: List[RecordStatus] = []
+        for i, w in enumerate(self.witnesses):
+            if i in self._dropped_witnesses:
+                statuses.append(RecordStatus.REJECTED)
+            else:
+                statuses.append(
+                    w.record(cfg.master_id, op.key_hashes(), op.rpc_id, op)
+                )
+        decision, rtts, fast = self._classify(verdict, result, statuses)
+        if verdict == SYNCED or decision is Decision.NEED_SYNC:
+            # Slow path: the intent reaches the backups before the vote is
+            # externalized, so the prepare is durable either way.
+            self._drain_syncs()
+        session.mark_completed(op.rpc_id)
+        if result.value is None:
+            # RIFL already acked this leg away (a retry of a transaction
+            # that fully completed): the vote stands, the read values were
+            # externalized on the original run.
+            reads = ()
+        else:
+            _status, reads = result.value
+        return TxnVote(granted=True, fast=fast, rtts=rtts, read_values=reads)
+
+    def txn_decide(self, op: Op,
+                   session: Optional[ClientSession] = None) -> str:
+        """Apply one COMMIT/ABORT leg.  No witness records and no pre-reply
+        sync — the decision re-derives from durable prepare state on crash
+        (see repro.core.txn).  ``session=None`` is the recovery-resolution
+        path (the coordinator is gone; no acks, no completion marking)."""
+        acks = session.acks() if session is not None else ()
+        for _attempt in range(4):
+            cfg = self.config.fetch(self.shard_id)
+            verdict, result = self.master.handle_update(
+                op, cfg.witness_list_version, acks, 0.0
+            )
+            if verdict != ERROR:
+                break
+        assert verdict != ERROR, f"decide leg failed: {result.error}"
+        if session is not None:
+            session.mark_completed(op.rpc_id)
+        if self.auto_sync and self.master.want_sync:
+            self._drain_syncs()
+        return result.value
 
     # ------------------------------------------------------------------ syncs
     def _drain_syncs(self) -> None:
@@ -427,6 +511,7 @@ class ShardedClientSession:
         self.client_id = client_id
         self.router = router
         self._subs: Dict[int, ClientSession] = {}
+        self._txn_seq = 0
 
     def session_for(self, shard_id: int) -> ClientSession:
         s = self._subs.get(shard_id)
@@ -453,23 +538,71 @@ class ShardedClientSession:
     def op_del(self, key) -> Op:
         return self._sub(key).op_del(key)
 
-    def mset_parts(self, kvs) -> Dict[int, Op]:
+    def mset_parts(self, kvs,
+                   prev: Optional[Dict[int, Op]] = None) -> Dict[int, Op]:
         """Split a multi-key set into per-shard MSET sub-ops, each carrying an
-        rpc_id from that shard's RIFL space."""
+        rpc_id from that shard's RIFL space.
+
+        ``prev`` is the part map of an earlier attempt of the SAME mset: a
+        retry after a partial failure must reuse the original per-shard
+        rpc_ids so already-applied legs RIFL-dedup instead of re-executing
+        under fresh identities (which would double-apply and double-record).
+        """
         kvs = list(kvs)
         parts = self.router.split_keys([k for k, _ in kvs])
         out: Dict[int, Op] = {}
         for shard_id, idxs in parts.items():
-            out[shard_id] = self.session_for(shard_id).op_mset(
-                [kvs[i] for i in idxs]
-            )
+            sub_kvs = [kvs[i] for i in idxs]
+            if prev is not None and shard_id in prev:
+                keys = tuple(k for k, _ in sub_kvs)
+                vals = tuple(v for _, v in sub_kvs)
+                assert prev[shard_id].keys == keys, \
+                    "mset retry must carry the same key set"
+                out[shard_id] = Op(OpType.MSET, keys, vals,
+                                   prev[shard_id].rpc_id)
+            else:
+                out[shard_id] = self.session_for(shard_id).op_mset(sub_kvs)
         return out
+
+    def txn_spec(self, writes, reads=()) -> TxnSpec:
+        """Build a transaction spec: split read/write sets by the router and
+        fix every leg's RIFL identities (prepare_rpc + decide_rpc, both from
+        the owning shard's space) up front, so any retry of any leg — by
+        this client or by crash resolution — is a RIFL-dedup'd replay."""
+        writes = list(writes)
+        reads = list(reads)
+        by_shard: Dict[int, Tuple[List, List]] = {}
+        for k, v in writes:
+            by_shard.setdefault(self.router.shard_of(k), ([], []))[0].append(
+                (k, v)
+            )
+        for k in reads:
+            by_shard.setdefault(self.router.shard_of(k), ([], []))[1].append(k)
+        self._txn_seq += 1
+        parts = tuple(
+            TxnPart(
+                shard_id=sid,
+                prepare_rpc=self.session_for(sid).next_rpc_id(),
+                decide_rpc=self.session_for(sid).next_rpc_id(),
+                write_kvs=tuple(w),
+                read_keys=tuple(r),
+            )
+            for sid, (w, r) in sorted(by_shard.items())
+        )
+        return TxnSpec(txn_id=(self.client_id, self._txn_seq), parts=parts)
 
 
 @dataclass
 class ClusterRecoveryReport:
-    """Aggregate of per-shard RecoveryReports (serving-level crash)."""
+    """Aggregate of per-shard RecoveryReports (serving-level crash).
+
+    The txn_* counts are CLUSTER-level: the post-recovery resolution sweep
+    decides orphaned transactions whose intents may span several shards, so
+    they are reported here rather than attributed to any one shard."""
     per_shard: Tuple[RecoveryReport, ...]
+    txn_resolved: int = 0
+    txn_committed: int = 0
+    txn_aborted: int = 0
 
     @property
     def replayed(self) -> int:
@@ -552,11 +685,32 @@ class ShardedCluster:
 
     def update(self, session: ShardedClientSession, op: Op, now: float = 0.0):
         group = self._group_for(op)
-        return group.update(session.session_for(group.shard_id), op, now)
+        return self._with_txn_resolution(
+            lambda: group.update(session.session_for(group.shard_id), op, now)
+        )
 
     def read(self, session: ShardedClientSession, op: Op, now: float = 0.0):
         group = self._group_for(op)
-        return group.read(session.session_for(group.shard_id), op, now)
+        return self._with_txn_resolution(
+            lambda: group.read(session.session_for(group.shard_id), op, now)
+        )
+
+    def _with_txn_resolution(self, fn):
+        """Run a protocol call; whenever it hits keys locked by an undecided
+        transaction intent (an orphaned 2PC — its coordinator crashed),
+        resolve that transaction from participant state and retry.  Each
+        distinct orphan is resolved at most once (an op spanning several
+        orphans' locks resolves them all); a repeat of the same txn_id
+        re-raises instead of looping."""
+        seen: set = set()
+        while True:
+            try:
+                return fn()
+            except TxnPending as pend:
+                if pend.spec.txn_id in seen:
+                    raise
+                seen.add(pend.spec.txn_id)
+                resolve_txn(self, pend.spec)
 
     def update_batch(self, session: ShardedClientSession, ops: Sequence[Op],
                      now: float = 0.0) -> List["OpOutcome"]:
@@ -570,19 +724,40 @@ class ShardedCluster:
         out: List[Optional["OpOutcome"]] = [None] * len(ops)
         for shard_id, idxs in groups.items():
             sub = session.session_for(shard_id)
-            res = self.shards[shard_id].update_batch(
-                sub, [ops[i] for i in idxs], now
+            res = self._with_txn_resolution(
+                lambda shard_id=shard_id, sub=sub, idxs=idxs:
+                self.shards[shard_id].update_batch(
+                    sub, [ops[i] for i in idxs], now
+                )
             )
             for i, outcome in zip(idxs, res):
                 out[i] = outcome
         return out  # type: ignore[return-value]
 
-    def mset(self, session: ShardedClientSession, kvs, now: float = 0.0):
+    def mset(self, session: ShardedClientSession, kvs, now: float = 0.0,
+             parts: Optional[Dict[int, Op]] = None):
         """Cross-shard multi-key set: per-shard 1-RTT fast path when every
-        shard's sub-op is accepted, per-shard sync fallback otherwise."""
+        shard's sub-op is accepted, per-shard sync fallback otherwise.
+
+        Durability is per shard, atomicity is per KEY only — a client crash
+        mid-mset can leave a torn cross-shard write (use ``txn``/
+        ``mset_atomic`` for all-or-nothing semantics).  ``parts`` replays an
+        earlier attempt's per-shard sub-ops (same rpc_ids), so a retry after
+        a partial failure RIFL-dedups instead of double-applying.
+        """
         from .local import OpOutcome
 
-        parts = session.mset_parts(kvs)
+        parts = session.mset_parts(kvs, prev=parts)
+        # A leg blocked by an orphaned transaction intent resolves + retries
+        # the whole mset; the fixed per-shard rpc_ids make that idempotent.
+        return self._with_txn_resolution(
+            lambda: self._mset_once(session, parts, now)
+        )
+
+    def _mset_once(self, session: ShardedClientSession,
+                   parts: Dict[int, Op], now: float):
+        from .local import OpOutcome
+
         # Round 1 (parallel in a real deployment): speculative execute + record
         # at every touched shard.
         attempts: Dict[int, Tuple[str, ExecResult, List[RecordStatus]]] = {}
@@ -634,6 +809,79 @@ class ShardedCluster:
             witness_accepts=accepts,
         )
 
+    # ----------------------------------------------- transactions (core.txn)
+    def txn(
+        self,
+        session: ShardedClientSession,
+        writes,
+        reads=(),
+        now: float = 0.0,
+        on_message=None,
+        spec: Optional[TxnSpec] = None,
+    ) -> TxnOutcome:
+        """Atomic cross-shard mini-transaction (RIFL-identified 2PC over the
+        per-shard fast paths; see repro.core.txn).
+
+        Single-shard transactions short-circuit to one 1-RTT op.  ``spec``
+        replays an earlier attempt (same RIFL identities — idempotent);
+        ``on_message(stage, shard_id, idx)`` is the crash-injection hook
+        (raise CoordinatorCrash to kill the coordinator at that message).
+        """
+        if spec is None:
+            spec = session.txn_spec(writes, reads)
+        coord = TxnCoordinator(self, session)
+        window = self._record.next_window()
+        try:
+            out = self._with_txn_resolution(
+                lambda: coord.run(spec, now=now, on_message=on_message)
+            )
+        except CoordinatorCrash:
+            # The coordinator died mid-2PC: its effects may or may not land
+            # (resolution decides later) — a "maybe" op for the checker.
+            self.history.append({
+                "op": self._txn_history_op(spec), "value": None,
+                "client": session.client_id,
+                "invoke": window[0], "complete": window[1], "failed": True,
+            })
+            raise
+        if out.status is TxnStatus.COMMITTED and len(spec.parts) > 1:
+            # Multi-shard commits record ONE whole-transaction entry here.
+            # The single-shard short-circuit already recorded its (only)
+            # entry inside ShardGroup.update — recording again would put
+            # two must-linearize points for one atomic op into the history
+            # and make the strict checker reject correct executions.
+            reads_in_spec_order = tuple(
+                out.reads.get(k) for k in spec.read_keys
+            ) if out.reads is not None else ()
+            self._record(
+                self._txn_history_op(spec),
+                ("COMMITTED", reads_in_spec_order),
+                session.client_id, window=window,
+            )
+        return out
+
+    @staticmethod
+    def _txn_history_op(spec: TxnSpec) -> Op:
+        """One history entry for the WHOLE transaction (every shard's leg),
+        so the strict linearizability checker treats it atomically."""
+        keys = tuple(k for k, _ in spec.write_kvs) + spec.read_keys
+        return Op(OpType.TXN, keys, (spec,), spec.txn_id)
+
+    def mset_atomic(self, session: ShardedClientSession, kvs,
+                    now: float = 0.0) -> TxnOutcome:
+        """All-or-nothing multi-key set: atomic across shards via the
+        transaction subsystem (unlike ``mset``, which is only per-shard
+        durable).  Single-shard key sets keep the 1-RTT fast path."""
+        return self.txn(session, writes=kvs, now=now)
+
+    def resolve_txn(self, spec: TxnSpec) -> TxnStatus:
+        """Finish one orphaned transaction (Sinfonia recovery rule)."""
+        return resolve_txn(self, spec)
+
+    def resolve_pending_txns(self) -> Dict[str, int]:
+        """Sweep and resolve every undecided intent on every shard."""
+        return resolve_pending(self)
+
     # ------------------------------------------------------------------ admin
     def sync_all(self) -> None:
         for g in self.shards:
@@ -641,12 +889,25 @@ class ShardedCluster:
 
     def crash_master(self, shard_id: int) -> RecoveryReport:
         """Crash exactly one shard's master; only that shard's witnesses are
-        frozen and replayed (per-shard epochs via the ConfigManager)."""
-        return self.shards[shard_id].crash_master()
+        frozen and replayed (per-shard epochs via the ConfigManager).
+        Undecided transaction intents the recovered master re-surfaced (from
+        its backup log and witness replay) are resolved cluster-wide before
+        returning — no intent outlives recovery undecided."""
+        report = self.shards[shard_id].crash_master()
+        resolved = self.resolve_pending_txns()
+        report.txn_resolved = resolved["resolved"]
+        report.txn_committed = resolved["committed"]
+        report.txn_aborted = resolved["aborted"]
+        return report
 
     def crash_all(self) -> ClusterRecoveryReport:
+        reports = tuple(g.crash_master() for g in self.shards)
+        resolved = self.resolve_pending_txns()
         return ClusterRecoveryReport(
-            per_shard=tuple(g.crash_master() for g in self.shards)
+            per_shard=reports,
+            txn_resolved=resolved["resolved"],
+            txn_committed=resolved["committed"],
+            txn_aborted=resolved["aborted"],
         )
 
     def epochs(self) -> Dict[int, int]:

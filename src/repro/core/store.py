@@ -23,14 +23,57 @@ class VersionedValue:
 
 
 class KVStore:
-    """Deterministic key-value state machine."""
+    """Deterministic key-value state machine.
+
+    Mini-transaction state (repro.core.txn) lives INSIDE the store: prepared
+    intents and their key locks are installed/dropped by executing the
+    TXN_PREPARE / TXN_COMMIT / TXN_ABORT ops, so backup-log restore and
+    witness replay rebuild them for free — a recovered master re-surfaces
+    every undecided intent without any side-channel state.
+    """
 
     def __init__(self) -> None:
         self._data: Dict[Any, VersionedValue] = {}
+        # txn_id -> (TxnSpec, TxnPart): this store's prepared intents.
+        self._intents: Dict[Tuple[int, int], Tuple[Any, Any]] = {}
+        # key -> txn_id holding the intent lock on it.
+        self._locks: Dict[Any, Tuple[int, int]] = {}
 
     # -- mutation -----------------------------------------------------------
     def execute(self, op: Op, now: float = 0.0) -> Any:
         t = op.op_type
+        if t == OpType.TXN:
+            # Single-shard atomic read-set + write-set: reads are taken
+            # BEFORE the writes land (mini-transaction compare/read rule).
+            spec, shard_id = op.args
+            part = spec.part_on(shard_id)
+            reads = tuple(self.get(k) for k in part.read_keys)
+            for key, value in part.write_kvs:
+                self._set(key, value, now)
+            return ("COMMITTED", reads)
+        if t == OpType.TXN_PREPARE:
+            spec, shard_id = op.args
+            part = spec.part_on(shard_id)
+            self._intents[spec.txn_id] = (spec, part)
+            for k in part.keys:
+                self._locks[k] = spec.txn_id
+            # Read values are stable until the decision: the locks block
+            # every overlapping writer, so a prepare retry re-reads the
+            # same values.
+            reads = tuple(self.get(k) for k in part.read_keys)
+            return ("PREPARED", reads)
+        if t == OpType.TXN_COMMIT:
+            spec, shard_id = op.args
+            part = spec.part_on(shard_id)
+            self._drop_intent(spec.txn_id, part)
+            for key, value in part.write_kvs:
+                self._set(key, value, now)
+            return "COMMITTED"
+        if t == OpType.TXN_ABORT:
+            spec, shard_id = op.args
+            part = spec.part_on(shard_id)
+            self._drop_intent(spec.txn_id, part)
+            return "ABORTED"
         if t == OpType.SET:
             (key,) = op.keys
             (value,) = op.args
@@ -78,6 +121,29 @@ class KVStore:
             cur.value = value
             cur.version += 1
             cur.last_update = now
+
+    # -- transaction intents (repro.core.txn) --------------------------------
+    def _drop_intent(self, txn_id: Tuple[int, int], part) -> None:
+        self._intents.pop(txn_id, None)
+        for k in part.keys:
+            if self._locks.get(k) == txn_id:
+                del self._locks[k]
+
+    def txn_intent(self, txn_id: Tuple[int, int]):
+        """The (spec, part) of a prepared-but-undecided intent, or None."""
+        return self._intents.get(txn_id)
+
+    def txn_intents(self) -> Dict[Tuple[int, int], Tuple[Any, Any]]:
+        return dict(self._intents)
+
+    def txn_lock_conflict(self, keys, txn_id=None):
+        """The spec of a FOREIGN transaction holding an intent lock on any of
+        these keys (None if unlocked or locked only by ``txn_id``)."""
+        for k in keys:
+            owner = self._locks.get(k)
+            if owner is not None and owner != txn_id:
+                return self._intents[owner][0]
+        return None
 
     # -- introspection ------------------------------------------------------
     def get(self, key: Any) -> Any:

@@ -49,10 +49,22 @@ class OpType(enum.Enum):
     MSET = "MSET"         # multi-key atomic set (exercises multi-key witness path)
     DEL = "DEL"
     NOOP = "NOOP"
+    # Mini-transaction subsystem (repro.core.txn): single-shard atomic
+    # read+write op, and the per-shard legs of the RIFL-identified 2PC.
+    TXN = "TXN"                   # single-shard read-set + write-set, 1 RTT
+    TXN_PREPARE = "TXN_PREPARE"   # participant: install intent + lock keys
+    TXN_COMMIT = "TXN_COMMIT"     # participant: apply write-set, drop intent
+    TXN_ABORT = "TXN_ABORT"       # participant: drop intent (or tombstone)
 
 
 # Which ops are updates (need durability) vs reads.
-UPDATE_OPS = {OpType.SET, OpType.INCR, OpType.HMSET, OpType.MSET, OpType.DEL}
+UPDATE_OPS = {OpType.SET, OpType.INCR, OpType.HMSET, OpType.MSET, OpType.DEL,
+              OpType.TXN, OpType.TXN_PREPARE, OpType.TXN_COMMIT,
+              OpType.TXN_ABORT}
+
+# The 2PC leg ops (never issued by clients directly; the coordinator in
+# repro.core.txn drives them).
+TXN_OPS = {OpType.TXN_PREPARE, OpType.TXN_COMMIT, OpType.TXN_ABORT}
 
 
 @dataclass(frozen=True)

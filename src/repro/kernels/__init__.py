@@ -9,6 +9,9 @@ keyhash        — 2x32-lane key hashing (TPU adaptation of the 64-bit hash)
 fastpath_batch — the fused pipeline: keyhash2x32 -> shard_route ->
                  witness_record -> conflict_scan as ONE device dispatch per
                  update batch (vs 3-4 dispatches per op on the per-op path)
+txn_probe      — all-or-nothing transactional probe: ONE op's multi-key
+                 record resolved in ONE dispatch on accept AND reject (the
+                 record-then-rollback scheme paid a second gc dispatch)
 
 Fast-path pipeline docs (set-parallel layout, VMEM budget, and the buffer
 donation/aliasing contract) live in witness_record.py's module docstring and
@@ -18,6 +21,7 @@ Pallas so the dry-run roofline reflects real XLA numbers (DESIGN.md §4).
 """
 from .ops import (
     FastPathResult,
+    TxnProbeResult,
     WitnessTable,
     conflict_scan,
     dispatch_count,
@@ -27,17 +31,19 @@ from .ops import (
     ref_keyhash2x32,
     ref_witness_gc,
     ref_witness_record,
+    ref_witness_record_txn,
     reset_dispatch_count,
     shard_route,
+    txn_probe,
     witness_gc,
     witness_record,
     witness_record_seq,
 )
 
 __all__ = [
-    "FastPathResult", "WitnessTable", "conflict_scan", "keyhash2x32",
-    "shard_route", "witness_gc", "witness_record", "witness_record_seq",
-    "fastpath_batch", "dispatch_count", "reset_dispatch_count",
-    "ref_conflict_scan", "ref_keyhash2x32", "ref_witness_gc",
-    "ref_witness_record",
+    "FastPathResult", "TxnProbeResult", "WitnessTable", "conflict_scan",
+    "keyhash2x32", "shard_route", "witness_gc", "witness_record",
+    "witness_record_seq", "fastpath_batch", "txn_probe", "dispatch_count",
+    "reset_dispatch_count", "ref_conflict_scan", "ref_keyhash2x32",
+    "ref_witness_gc", "ref_witness_record", "ref_witness_record_txn",
 ]

@@ -43,6 +43,7 @@ from .ref import (
     ref_keyhash2x32,
     ref_witness_gc,
     ref_witness_record,
+    ref_witness_record_txn,
 )
 from .witness_record import (
     DEFAULT_TILE_SETS,
@@ -50,6 +51,7 @@ from .witness_record import (
     witness_gc_pallas,
     witness_record_seq_pallas,
     witness_record_setpar_pallas,
+    witness_record_txn_pallas,
 )
 
 # ---------------------------------------------------------------------------
@@ -379,10 +381,60 @@ def fastpath_batch(
     )
 
 
+# ---------------------------------------------------------------------------
+# Transactional probe: all-or-nothing multi-key record in ONE dispatch
+# ---------------------------------------------------------------------------
+class TxnProbeResult(NamedTuple):
+    """Result of one all-or-nothing multi-key record (ONE dispatch)."""
+    accepted: bool           # the whole op accepted (all keys placed/hit)
+    hit: jnp.ndarray         # [K] same-key table hit per key (caller order)
+    q_hi: jnp.ndarray        # mixed keyhash lanes of the op's keys — callers
+    q_lo: jnp.ndarray        # gc with these, extend windows on accept
+    table: WitnessTable      # updated iff accepted; bit-identical otherwise
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _txn_probe_impl(table, k_hi, k_lo, own, valid, interpret: bool):
+    qh, ql = ref_keyhash2x32(k_hi, k_lo)    # fuses with the probe's jit
+    acc, hit, new_table = witness_record_txn_pallas(
+        table, qh, ql, own, valid, interpret=interpret
+    )
+    return acc, hit, qh, ql, new_table
+
+
+def txn_probe(table: WitnessTable, key_hi, key_lo, own=None,
+              *, interpret: bool | None = None) -> TxnProbeResult:
+    """All-or-nothing record of ONE multi-key op — a single device dispatch
+    on BOTH the accept and the reject path (the record-then-rollback scheme
+    this replaces paid a second gc dispatch on reject).
+
+    ``key_hi``/``key_lo`` are the RAW 64-bit keyhash lanes of the op's
+    (deduplicated) keys; ``own[k] = 1`` marks keys the caller knows are
+    already held under this op's rpc_id (idempotent retry), resolved from
+    the host mirror.  The kernel leaves the table bit-identical when the op
+    rejects, so callers can rebind ``result.table`` unconditionally.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    _count_dispatch()
+    key_hi = np.asarray(key_hi, np.uint32)
+    key_lo = np.asarray(key_lo, np.uint32)
+    (K,) = key_hi.shape
+    own_arr = (np.zeros((K,), np.int32) if own is None
+               else np.asarray(own, np.int32))
+    key_hi, key_lo, own_arr, valid = _pad_valid(K, key_hi, key_lo, own_arr)
+    acc, hit, qh, ql, new_table = _txn_probe_impl(
+        table, key_hi, key_lo, own_arr, valid, interpret
+    )
+    return TxnProbeResult(
+        bool(np.asarray(acc)[0]), hit[:K], qh[:K], ql[:K], new_table
+    )
+
+
 __all__ = [
-    "WitnessTable", "FastPathResult", "keyhash2x32", "shard_route",
-    "witness_record", "witness_record_seq", "witness_gc", "conflict_scan",
-    "fastpath_batch", "dispatch_count", "reset_dispatch_count",
-    "ref_keyhash2x32", "ref_witness_record", "ref_witness_gc",
-    "ref_conflict_scan",
+    "WitnessTable", "FastPathResult", "TxnProbeResult", "keyhash2x32",
+    "shard_route", "witness_record", "witness_record_seq", "witness_gc",
+    "conflict_scan", "fastpath_batch", "txn_probe", "dispatch_count",
+    "reset_dispatch_count", "ref_keyhash2x32", "ref_witness_record",
+    "ref_witness_gc", "ref_conflict_scan", "ref_witness_record_txn",
 ]

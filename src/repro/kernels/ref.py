@@ -123,6 +123,68 @@ def ref_witness_gc(
     )
 
 
+def ref_witness_record_txn(
+    table: WitnessTable, q_hi: jnp.ndarray, q_lo: jnp.ndarray,
+    own: jnp.ndarray, valid: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, WitnessTable]:
+    """All-or-nothing transactional probe oracle: the K keys of ONE op.
+
+    Placement follows the Python ``Witness.record`` semantics exactly —
+    every key's conflict/way decision is made against the PRE-op table, and
+    on accept the writes land sequentially in key order (so two same-set
+    keys that both picked the same pre-state free way resolve last-wins,
+    matching the reference's placement-then-write loop).
+
+    ``own[k] = 1`` marks a key already held under this op's rpc_id (client
+    retry, resolved host-side from the mirror): its table hit counts as
+    placed, not as a conflict.  ``valid[k] = 0`` marks padding lanes.
+
+    Returns (accepted [1] int32, hit [K] int32, new table); the table is
+    untouched unless the whole op accepted.
+    """
+    S, W = table.occ.shape
+    set_mask = jnp.uint32(S - 1)
+    q_hi = q_hi.astype(U32)
+    q_lo = q_lo.astype(U32)
+    own = own.astype(jnp.int32)
+    valid = valid.astype(jnp.int32)
+    sets = (q_lo & set_mask).astype(jnp.int32)                 # [K]
+    row_hi = table.keys_hi[sets]                               # [K, W]
+    row_lo = table.keys_lo[sets]
+    row_occ = table.occ[sets]
+    hit = jnp.any(
+        (row_occ == 1) & (row_hi == q_hi[:, None]) & (row_lo == q_lo[:, None]),
+        axis=1,
+    )
+    free = row_occ == 0
+    has_free = jnp.any(free, axis=1)
+    way = jnp.argmax(free, axis=1)                             # first free way
+    ok = jnp.where(own == 1, hit | has_free, ~hit & has_free)
+    accepted = jnp.all(ok | (valid == 0))
+    # Keys already present (hit) keep their slot; everything else inserts at
+    # its pre-state first-free way — own keys included, should the table
+    # have lost them (keeps table and host mirror convergent).
+    write = accepted & (valid == 1) & ~hit
+
+    def body(k, carry):
+        khi, klo, occ = carry
+        sel = (jnp.arange(W) == way[k]) & write[k]
+        s = sets[k]
+        khi = khi.at[s].set(jnp.where(sel, q_hi[k], khi[s]))
+        klo = klo.at[s].set(jnp.where(sel, q_lo[k], klo[s]))
+        occ = occ.at[s].set(jnp.where(sel, 1, occ[s]))
+        return khi, klo, occ
+
+    khi, klo, occ = jax.lax.fori_loop(
+        0, q_hi.shape[0], body, (table.keys_hi, table.keys_lo, table.occ)
+    )
+    return (
+        accepted.astype(jnp.int32).reshape((1,)),
+        (hit & (valid == 1)).astype(jnp.int32),
+        WitnessTable(khi, klo, occ),
+    )
+
+
 def ref_conflict_scan(
     w_hi: jnp.ndarray, w_lo: jnp.ndarray, w_valid: jnp.ndarray,
     q_hi: jnp.ndarray, q_lo: jnp.ndarray,

@@ -364,6 +364,106 @@ def witness_record_seq_pallas(
 
 
 # ---------------------------------------------------------------------------
+# Transactional probe: all-or-nothing multi-key record, ONE dispatch
+# ---------------------------------------------------------------------------
+def _record_txn_kernel(qhi_ref, qlo_ref, own_ref, valid_ref,
+                       khi_in, klo_in, occ_in,
+                       acc_ref, hit_ref, khi_ref, klo_ref, occ_ref):
+    """All K keys of one op accept together or none do (§4.2 multi-object
+    updates, without the record-then-rollback second dispatch).
+
+    Decision pass (vectorized over K): every key probes the PRE-op table —
+    conflict (same-key hit under a foreign rpc, i.e. ``own == 0``) or a
+    capacity-full set anywhere vetoes the whole op.  Write pass (tiny
+    fori_loop over K, predicated on the op-level accept bit): non-hit keys
+    insert at their pre-state first-free way, sequential in key order so
+    same-set placement collisions resolve exactly like the Python
+    reference's placement-then-write loop.
+    """
+    S, W = khi_in.shape
+    set_mask = jnp.uint32(S - 1)
+    qhi = qhi_ref[...]
+    qlo = qlo_ref[...]
+    own = own_ref[...]
+    valid = valid_ref[...]
+    khi0 = khi_in[...]
+    klo0 = klo_in[...]
+    occ0 = occ_in[...]
+    sets = (qlo & set_mask).astype(jnp.int32)                  # [K]
+    row_hi = khi0[sets]                                        # [K, W]
+    row_lo = klo0[sets]
+    row_occ = occ0[sets]
+    hit = jnp.any(
+        (row_occ == 1) & (row_hi == qhi[:, None]) & (row_lo == qlo[:, None]),
+        axis=1,
+    )
+    free = row_occ == 0
+    has_free = jnp.any(free, axis=1)
+    way = jnp.argmax(free, axis=1)                             # first free way
+    ok = jnp.where(own == 1, hit | has_free, ~hit & has_free)
+    accepted = jnp.all(ok | (valid == 0))
+    write = accepted & (valid == 1) & ~hit
+    acc_ref[...] = accepted.astype(jnp.int32).reshape((1,))
+    hit_ref[...] = (hit & (valid == 1)).astype(jnp.int32)
+    way_iota = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+
+    khi_ref[...] = khi0
+    klo_ref[...] = klo0
+    occ_ref[...] = occ0
+
+    def body(k, _):
+        s = sets[k]
+        sel = (way_iota == way[k]) & write[k]                  # [1, W]
+        row_hi_k = pl.load(khi_ref, (pl.ds(s, 1), slice(None)))
+        row_lo_k = pl.load(klo_ref, (pl.ds(s, 1), slice(None)))
+        row_occ_k = pl.load(occ_ref, (pl.ds(s, 1), slice(None)))
+        pl.store(khi_ref, (pl.ds(s, 1), slice(None)),
+                 jnp.where(sel, qhi[k], row_hi_k))
+        pl.store(klo_ref, (pl.ds(s, 1), slice(None)),
+                 jnp.where(sel, qlo[k], row_lo_k))
+        pl.store(occ_ref, (pl.ds(s, 1), slice(None)),
+                 jnp.where(sel, 1, row_occ_k))
+        return 0
+
+    jax.lax.fori_loop(0, qhi.shape[0], body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def witness_record_txn_pallas(
+    table: WitnessTable,
+    q_hi: jnp.ndarray, q_lo: jnp.ndarray,
+    own: jnp.ndarray, valid: jnp.ndarray,
+    *, interpret: bool = True,
+):
+    """One-dispatch all-or-nothing record of one op's K (mixed-lane) keys.
+
+    Returns (accepted [1], hit [K], new table): the table outputs alias the
+    inputs (same donation contract as the other record kernels) and are
+    bit-identical to the inputs when the op rejects — no rollback dispatch
+    ever needed.  ``own`` marks keys held under this op's own rpc_id
+    (idempotent retry hits, resolved host-side); ``valid`` masks padding.
+    """
+    S, W = table.occ.shape
+    (K,) = q_hi.shape
+    out = pl.pallas_call(
+        _record_txn_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((K,), jnp.int32),
+            jax.ShapeDtypeStruct((S, W), U32),
+            jax.ShapeDtypeStruct((S, W), U32),
+            jax.ShapeDtypeStruct((S, W), jnp.int32),
+        ],
+        input_output_aliases={4: 2, 5: 3, 6: 4},
+        interpret=interpret,
+    )(q_hi.astype(U32), q_lo.astype(U32),
+      own.astype(jnp.int32), valid.astype(jnp.int32),
+      table.keys_hi, table.keys_lo, table.occ)
+    acc, hit, khi, klo, occ = out
+    return acc, hit, WitnessTable(khi, klo, occ)
+
+
+# ---------------------------------------------------------------------------
 # GC kernel (order-independent), with the same donation contract
 # ---------------------------------------------------------------------------
 def _gc_kernel(ghi_ref, glo_ref, khi_in, klo_in, occ_in, occ_ref):

@@ -23,6 +23,8 @@ from repro.core import (
     ClusterRecoveryReport,
     ShardedClientSession,
     ShardedCluster,
+    TxnOutcome,
+    TxnStatus,
     WitnessGeometry,
 )
 
@@ -99,6 +101,33 @@ class CurpSessionStore:
                 self.fast_commits += 1
             else:
                 self.slow_commits += 1
+
+    def txn(self, states: Sequence[SessionState]) -> TxnOutcome:
+        """Atomically commit a GROUP of sessions (all-or-nothing across
+        shards) via the mini-transaction subsystem (repro.core.txn).
+
+        ``commit_batch`` gives per-session durability — a crash mid-batch
+        can persist some sessions of a linked group and not others.  This
+        path makes the group atomic: sessions on one shard short-circuit to
+        the same 1-RTT fast path as ``commit``; a cross-shard group pays
+        one RIFL-identified 2PC (prepare round + decide round).
+        """
+        if not states:
+            return TxnOutcome(status=TxnStatus.COMMITTED, reads={},
+                              rtts=0, fast_path=True, n_shards=0)
+        writes = [
+            (self._key(s.session_id),
+             json.dumps({"tokens": s.tokens, "done": s.done}))
+            for s in states
+        ]
+        out = self.cluster.txn(self.client, writes)
+        for s in states:
+            self._commits_by_shard[self.shard_of(s.session_id)] += 1
+            if out.fast_path:
+                self.fast_commits += 1
+            else:
+                self.slow_commits += 1
+        return out
 
     # -- read path ----------------------------------------------------------------
     def load(self, session_id: str) -> Optional[SessionState]:

@@ -38,6 +38,10 @@ class ServeConfig:
     # "python" (protocol-reference slot walk) or "device" (set-parallel
     # kernel; one dispatch per commit batch).
     witness_backend: str = "python"
+    # Commit each decode step's sessions as ONE atomic cross-shard
+    # mini-transaction (CurpSessionStore.txn) instead of the per-session
+    # durable batch: a crash can never persist half a step's sessions.
+    atomic_step_commit: bool = False
 
 
 class CurpServeDriver:
@@ -121,7 +125,13 @@ class CurpServeDriver:
                 to_commit.append(s)
         # One batched CURP round for the whole decode step: distinct session
         # keys commute, so the batch completes via each shard's 1-RTT path.
-        self.store.commit_batch(to_commit)
+        # With atomic_step_commit the step commits as ONE mini-transaction
+        # instead (all-or-nothing across shards; single-shard steps keep the
+        # 1-RTT short-circuit).
+        if self.serve.atomic_step_commit:
+            self.store.txn(to_commit)
+        else:
+            self.store.commit_batch(to_commit)
         return out
 
     def generate(self, n_tokens: int) -> None:

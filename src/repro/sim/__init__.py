@@ -5,21 +5,25 @@ for the napkin math); protocol logic is repro.core, unchanged.  Sharded
 scenarios (multi-master, per-shard witnesses) run via run_sharded_scenario.
 """
 from .curp_sim import (
+    TXN_CRASH_STAGES,
     BatchedRunResult,
     ScenarioResult,
     ShardedScenarioResult,
     ShardedSimCluster,
     SimCluster,
+    TxnScenarioResult,
     run_batched_throughput,
     run_scenario,
     run_sharded_scenario,
+    run_txn_crash_scenario,
 )
-from .linearizability import check_linearizable
+from .linearizability import check_linearizable, check_linearizable_strict
 from .network import Network, Node, Sim
 from .params import DEFAULT, SimParams
 from .workload import (
     BatchedWorkload,
     ShardSkewedWorkload,
+    TxnWorkload,
     UniformWriteWorkload,
     YcsbWorkload,
     ZipfianGenerator,
@@ -29,8 +33,9 @@ __all__ = [
     "BatchedRunResult", "ScenarioResult", "ShardedScenarioResult",
     "ShardedSimCluster", "SimCluster", "run_batched_throughput",
     "run_scenario", "run_sharded_scenario",
-    "check_linearizable",
+    "TXN_CRASH_STAGES", "TxnScenarioResult", "run_txn_crash_scenario",
+    "check_linearizable", "check_linearizable_strict",
     "Network", "Node", "Sim", "DEFAULT", "SimParams",
-    "BatchedWorkload", "ShardSkewedWorkload", "UniformWriteWorkload",
-    "YcsbWorkload", "ZipfianGenerator",
+    "BatchedWorkload", "ShardSkewedWorkload", "TxnWorkload",
+    "UniformWriteWorkload", "YcsbWorkload", "ZipfianGenerator",
 ]

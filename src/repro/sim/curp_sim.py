@@ -30,6 +30,7 @@ from repro.core.shard import KeyRouter
 from repro.core.types import ExecResult, Op, OpType, RecordStatus
 from repro.core.witness import Witness
 
+from .linearizability import check_linearizable_strict
 from .network import Network, Node, Sim
 from .params import DEFAULT, SimParams
 
@@ -937,6 +938,155 @@ def run_batched_throughput(
         ops=ops, wall_s=wall, ops_per_sec=ops / wall if wall > 0 else 0.0,
         fast_fraction=fast / max(1, fast + slow),
         witness_accepts=accepts,
+    )
+
+
+# --------------------------------------------------------------------------
+# Mini-transaction crash scenarios (repro.core.txn)
+# --------------------------------------------------------------------------
+# Message-level coordinator crash points, one per 2PC stage: the coordinator
+# dies with the named message (and everything after it) unsent.
+#   prepare-sent : first PREPARE sent, the rest never leave the coordinator
+#   prepared     : every PREPARE sent and voted, no decision message sent
+#   commit-sent  : first COMMIT sent, the rest never leave the coordinator
+TXN_CRASH_STAGES = ("prepare-sent", "prepared", "commit-sent")
+
+_STAGE_TO_HOOK = {
+    "prepare-sent": ("prepare", 1),
+    "prepared": ("decide", 0),
+    "commit-sent": ("decide", 1),
+}
+
+
+@dataclass
+class TxnScenarioResult:
+    """Result of one crash-injected transaction run (instant transport —
+    the protocol steps are the real ones; repro.sim timing is orthogonal)."""
+    stage: str
+    n_txns: int
+    committed: int
+    aborted: int
+    crashed_decision: Optional[str]    # how resolution decided the orphan
+    intents_after: int                 # undecided intents left anywhere (0!)
+    history_ok: bool                   # strict multi-key checker verdict
+    offending_key: Optional[str]
+    fast_single: float                 # 1-RTT fraction of single-shard txns
+    fast_multi: float                  # all-legs-fast fraction of 2PC txns
+    final_reads: dict                  # key -> value after recovery
+
+
+def run_txn_crash_scenario(
+    stage: str = "prepared",
+    n_shards: int = 3,
+    n_txns: int = 20,
+    crash_txn: Optional[int] = None,
+    participant_crash: bool = False,
+    seed: int = 0,
+    witness_backend: str = "python",
+    workload=None,
+) -> TxnScenarioResult:
+    """Drive cross-shard transactions through a real ShardedCluster with a
+    coordinator crash injected at a 2PC message boundary, then recover and
+    validate atomicity.
+
+    One transaction (``crash_txn``, default: the middle one) crashes its
+    coordinator at ``stage`` (see TXN_CRASH_STAGES).  If
+    ``participant_crash``, a participant master holding the orphaned intent
+    is then crashed and recovered (backup restore + witness replay
+    re-surface the intent; recovery resolves it).  Otherwise the orphan is
+    resolved lazily — the next conflicting read trips TXN_PENDING and the
+    cluster applies the Sinfonia recovery rule.  Every key the workload
+    touched is read back at the end, and the STRICT multi-key checker runs
+    over the full history: a torn transaction write fails it.
+    """
+    from repro.core import CoordinatorCrash, ShardedCluster, TxnStatus
+
+    from .workload import TxnWorkload
+
+    assert stage in TXN_CRASH_STAGES, stage
+    cluster = ShardedCluster(n_shards=n_shards, f=3, seed=seed,
+                             witness_backend=witness_backend)
+    session = cluster.new_client()
+    wl = workload or TxnWorkload(n_shards=n_shards, cross_shard_frac=0.7,
+                                 seed=seed)
+    crash_txn = n_txns // 2 if crash_txn is None else crash_txn
+    hook_stage, hook_idx = _STAGE_TO_HOOK[stage]
+
+    def crash_hook(s, shard_id, idx):
+        if s == hook_stage and idx == hook_idx:
+            raise CoordinatorCrash()
+
+    committed = aborted = 0
+    fast = {"single": [0, 0], "multi": [0, 0]}   # [fast, total]
+    touched: set = set()
+    crashed_spec = None
+    for i in range(n_txns):
+        writes, reads = wl.next_txn()
+        touched.update(k for k, _ in writes)
+        touched.update(reads)
+        spec = session.txn_spec(writes, reads)
+        is_multi = len(spec.parts) > 1
+        # Crash the first MULTI-shard txn at/after the target index (only a
+        # 2PC has message boundaries to crash at).
+        if crashed_spec is None and i >= crash_txn and is_multi:
+            try:
+                cluster.txn(session, writes, reads, spec=spec,
+                            on_message=crash_hook)
+                raise AssertionError("crash hook did not fire")
+            except CoordinatorCrash:
+                crashed_spec = spec
+            continue
+        out = cluster.txn(session, writes, reads, spec=spec)
+        if out.status is TxnStatus.COMMITTED:
+            committed += 1
+            bucket = fast["multi" if is_multi else "single"]
+            bucket[0] += int(out.fast_path)
+            bucket[1] += 1
+        else:
+            aborted += 1
+
+    crashed_decision = None
+    if participant_crash and crashed_spec is not None:
+        # Kill a participant master that holds the orphaned intent; its
+        # recovery re-surfaces the intent and resolves it cluster-wide.
+        victim = next(
+            (p.shard_id for p in crashed_spec.parts
+             if cluster.shards[p.shard_id].master.store.txn_intent(
+                 crashed_spec.txn_id) is not None),
+            crashed_spec.parts[0].shard_id,
+        )
+        rep = cluster.crash_master(victim)
+        if rep.txn_resolved:
+            crashed_decision = ("COMMITTED" if rep.txn_committed
+                                else "ABORTED")
+    # Final reads of every touched key: lazy resolution (TXN_PENDING ->
+    # resolve -> retry) finishes any remaining orphan on first contact.
+    final_reads = {}
+    for k in sorted(touched):
+        final_reads[k] = cluster.read(session, session.op_get(k)).value
+    if crashed_spec is not None and crashed_decision is None:
+        from repro.core.txn import participant_state
+
+        states = {
+            p.shard_id: participant_state(
+                cluster.shards[p.shard_id].master, crashed_spec, p)
+            for p in crashed_spec.parts
+        }
+        if any(s in ("committed", "decided") for s in states.values()):
+            crashed_decision = "COMMITTED"
+        elif any(s == "aborted" for s in states.values()):
+            crashed_decision = "ABORTED"
+    intents_after = sum(
+        len(g.master.store.txn_intents()) for g in cluster.shards
+    )
+    ok, key = check_linearizable_strict(cluster.history)
+    return TxnScenarioResult(
+        stage=stage, n_txns=n_txns, committed=committed, aborted=aborted,
+        crashed_decision=crashed_decision, intents_after=intents_after,
+        history_ok=ok, offending_key=key,
+        fast_single=fast["single"][0] / max(1, fast["single"][1]),
+        fast_multi=fast["multi"][0] / max(1, fast["multi"][1]),
+        final_reads=final_reads,
     )
 
 

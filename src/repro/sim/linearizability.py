@@ -1,23 +1,44 @@
-"""Per-key linearizability checker (Wing & Gong search with memoization).
+"""Linearizability checkers (Wing & Gong search with memoization).
 
 CURP's guarantee (§3.4) is linearizability of single-/multi-key NoSQL ops.
-Our histories come from the simulator: each entry has invoke/complete times,
-the op, and the externalized value.  Ops whose completion was never
-externalized (client crashed / gave up / sim ended) are "maybe" ops: a valid
-linearization may either include them at any legal point or exclude them.
+Our histories come from the simulator and the in-process harnesses: each
+entry has invoke/complete times, the op, and the externalized value.  Ops
+whose completion was never externalized (client crashed / gave up / sim
+ended) are "maybe" ops: a valid linearization may either include them at any
+legal point or exclude them.
 
-For single-key histories (our workloads write through SET/INCR and read
-through GET) linearizability decomposes per key, which keeps the NP-hard
-search tractable; MSET ops are checked by projecting onto each touched key
-(sound for our value-unique test workloads, where every SET value is unique).
+Two checkers live here:
+
+* ``check_linearizable`` — the per-key projection.  Single-key histories
+  decompose per key, which keeps the NP-hard search tractable; multi-key
+  ops (MSET / TXN) are projected onto each touched key.  **This projection
+  is blind to torn multi-key writes**: a "maybe" MSET's per-key legs are
+  dropped or kept INDEPENDENTLY per key, so a client crash that applied the
+  write on shard A but not shard B still passes — each key's sub-history is
+  individually fine.
+* ``check_linearizable_strict`` — strict multi-key atomicity.  A GLOBAL
+  Wing & Gong search over whole ops and a whole-store state: every
+  multi-key op (MSET / TXN) linearizes at ONE point that all of its keys
+  share, and a maybe op is included at some single point or excluded
+  entirely.  Per-key decomposition fundamentally cannot express this —
+  each key's sub-search may place the same op at a different point, which
+  is exactly how a torn write hides — so the strict checker does not
+  decompose.  It is what catches a torn cross-shard ``mset`` and what the
+  transaction subsystem (repro.core.txn) must pass under crash injection.
+  Cost: exponential in true concurrency; our harness histories are
+  near-sequential (disjoint logical windows), so the memoized search stays
+  effectively linear.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import lru_cache
 from typing import Any, Dict, FrozenSet, List, Optional, Tuple
 
 from repro.core.types import Op, OpType
+
+# Op types the checkers model.
+_SINGLE = (OpType.SET, OpType.GET, OpType.INCR, OpType.DEL)
+_MULTI = (OpType.MSET, OpType.TXN)
 
 
 @dataclass(frozen=True)
@@ -30,15 +51,43 @@ class HEvent:
     value: Any                  # externalized result (GET value, INCR result)
 
 
+def _txn_legs(op: Op, value: Any):
+    """(write_kvs, read_kvs) of a TXN history entry: writes from the spec,
+    read values from the externalized result (None when never completed)."""
+    spec = op.args[0]
+    write_kvs = tuple(spec.write_kvs)
+    read_kvs: Tuple[Tuple[Any, Any], ...] = ()
+    if isinstance(value, tuple) and len(value) == 2 and value[0] == "COMMITTED":
+        read_kvs = tuple(zip(spec.read_keys, value[1]))
+    return write_kvs, read_kvs
+
+
 def _project(history: List[dict]) -> Dict[Any, List[HEvent]]:
+    """Per-key projection (the fast, torn-write-blind decomposition)."""
     per_key: Dict[Any, List[HEvent]] = {}
     idx = 0
+
+    def add(key, invoke, complete, op_type, arg, value):
+        nonlocal idx
+        per_key.setdefault(key, []).append(HEvent(
+            idx=idx, invoke=invoke, complete=complete, op_type=op_type,
+            arg=arg, value=value,
+        ))
+        idx += 1
+
     for h in history:
         op: Op = h["op"]
-        if op.op_type not in (OpType.SET, OpType.GET, OpType.INCR, OpType.MSET,
-                              OpType.DEL):
+        if op.op_type not in _SINGLE + _MULTI:
             continue
         complete = h["complete"] if not h.get("failed") else None
+        if op.op_type is OpType.TXN:
+            write_kvs, read_kvs = _txn_legs(op, h["value"])
+            for k, v in write_kvs:
+                add(k, h["invoke"], complete, OpType.SET, v, h["value"])
+            for k, v in read_kvs:
+                # Read legs externalize only with a committed result.
+                add(k, h["invoke"], complete, OpType.GET, None, v)
+            continue
         for ki, key in enumerate(op.keys):
             if op.op_type == OpType.MSET:
                 arg = op.args[ki]
@@ -48,12 +97,9 @@ def _project(history: List[dict]) -> Dict[Any, List[HEvent]]:
                 arg = op.args[0] if op.args else 1
             else:
                 arg = None
-            per_key.setdefault(key, []).append(HEvent(
-                idx=idx, invoke=h["invoke"], complete=complete,
-                op_type=(OpType.SET if op.op_type == OpType.MSET else op.op_type),
-                arg=arg, value=h["value"],
-            ))
-            idx += 1
+            add(key, h["invoke"], complete,
+                (OpType.SET if op.op_type == OpType.MSET else op.op_type),
+                arg, h["value"])
     return per_key
 
 
@@ -101,7 +147,6 @@ def _check_key(events: List[HEvent]) -> bool:
             (ev[i].complete for i in remaining if ev[i].complete is not None),
             default=float("inf"),
         )
-        progressed = False
         for i in remaining:
             e = ev[i]
             if e.invoke > min_complete:
@@ -109,7 +154,6 @@ def _check_key(events: List[HEvent]) -> bool:
             nxt = apply(state, e)
             if nxt is not None and search(remaining - {i}, nxt):
                 return True
-            progressed = True
             # Maybe-ops can also be dropped entirely (they never took effect).
             if e.complete is None and search(remaining - {i}, state):
                 return True
@@ -121,10 +165,150 @@ def _check_key(events: List[HEvent]) -> bool:
     return search(all_ids, ("V", None))
 
 
-def check_linearizable(history: List[dict]) -> Tuple[bool, Optional[Any]]:
-    """Returns (ok, offending_key)."""
-    per_key = _project(history)
+def _check_projection(per_key) -> Tuple[bool, Optional[Any]]:
     for key, events in per_key.items():
         if not _check_key(events):
             return False, key
     return True, None
+
+
+def check_linearizable(history: List[dict]) -> Tuple[bool, Optional[Any]]:
+    """Per-key projection checker.  Returns (ok, offending_key).  Sound for
+    single-key ops; CANNOT detect torn multi-key writes (see module
+    docstring) — use ``check_linearizable_strict`` for those."""
+    return _check_projection(_project(history))
+
+
+# ---------------------------------------------------------------------------
+# Strict multi-key atomicity: a single global linearization order
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class _GEvent:
+    """One whole op (all keys) for the global search."""
+    idx: int
+    invoke: float
+    complete: Optional[float]
+    # Effects: ((key, new_value) writes, (key, incr_delta) incrs,
+    #           (key, expected) reads-with-externalized-values,
+    #           (key,) unchecked reads) — reads check only when completed.
+    writes: Tuple[Tuple[Any, Any], ...]
+    incrs: Tuple[Tuple[Any, int], ...]
+    reads: Tuple[Tuple[Any, Any], ...]
+    incr_expect: Any = None      # externalized INCR result (None: unchecked)
+
+
+def _global_events(history: List[dict]) -> List[_GEvent]:
+    events: List[_GEvent] = []
+    for h in history:
+        op: Op = h["op"]
+        if op.op_type not in _SINGLE + _MULTI:
+            continue
+        complete = h["complete"] if not h.get("failed") else None
+        value = h["value"]
+        writes: Tuple = ()
+        incrs: Tuple = ()
+        reads: Tuple = ()
+        incr_expect = None
+        if op.op_type is OpType.SET:
+            writes = ((op.keys[0], op.args[0]),)
+        elif op.op_type is OpType.DEL:
+            writes = ((op.keys[0], None),)
+        elif op.op_type is OpType.INCR:
+            incrs = ((op.keys[0], op.args[0] if op.args else 1),)
+            if complete is not None:
+                incr_expect = value
+        elif op.op_type is OpType.GET:
+            if complete is not None:
+                reads = ((op.keys[0], value),)
+        elif op.op_type is OpType.MSET:
+            writes = tuple(zip(op.keys, op.args))
+        elif op.op_type is OpType.TXN:
+            write_kvs, read_kvs = _txn_legs(op, value)
+            writes = tuple(write_kvs)
+            if complete is not None:
+                reads = tuple(read_kvs)
+        events.append(_GEvent(
+            idx=len(events), invoke=h["invoke"], complete=complete,
+            writes=writes, incrs=incrs, reads=reads,
+            incr_expect=incr_expect,
+        ))
+    return events
+
+
+def check_linearizable_strict(
+    history: List[dict],
+) -> Tuple[bool, Optional[Any]]:
+    """Strict multi-key linearizability: ONE global linearization order over
+    whole ops and a whole-store state.
+
+    A multi-key op takes effect at a single point for ALL of its keys (the
+    per-key projection lets each key's sub-search place the same op at a
+    different point — the loophole a torn write hides in), and a maybe op
+    is included at one point or excluded entirely.  Returns (ok,
+    offending_key) where the key is taken from the op that could not be
+    linearized (diagnostic).  Worst-case exponential in true concurrency;
+    near-linear on our harness histories (disjoint logical windows).
+    """
+    events = _global_events(history)
+    n = len(events)
+    if n == 0:
+        return True, None
+    ev = {e.idx: e for e in events}
+    all_ids = frozenset(ev)
+
+    def apply(state: Tuple[Tuple[Any, Any], ...], e: _GEvent):
+        d = dict(state)
+        for k, expect in e.reads:
+            if d.get(k) != expect:
+                return None
+        for k, delta in e.incrs:
+            base = d.get(k)
+            new = (base if isinstance(base, int) else 0) + delta
+            if e.incr_expect is not None and e.incr_expect != new:
+                return None
+            d[k] = new
+        for k, v in e.writes:
+            d[k] = v
+        return tuple(sorted(d.items(), key=lambda kv: repr(kv[0])))
+
+    import sys
+    sys.setrecursionlimit(100_000)
+    seen = set()
+    blamed: List[_GEvent] = []
+
+    def search(remaining: FrozenSet[int], state) -> bool:
+        if not remaining:
+            return True
+        key = (remaining, state)
+        if key in seen:
+            return False
+        min_complete = min(
+            (ev[i].complete for i in remaining if ev[i].complete is not None),
+            default=float("inf"),
+        )
+        for i in remaining:
+            e = ev[i]
+            if e.invoke > min_complete:
+                continue
+            nxt = apply(state, e)
+            if nxt is not None and search(remaining - {i}, nxt):
+                return True
+            if nxt is None and not blamed:
+                blamed.append(e)
+            # Maybe-ops may be excluded entirely (they never took effect —
+            # ATOMICALLY: this drops every key's effect at once).
+            if e.complete is None and search(remaining - {i}, state):
+                return True
+        seen.add(key)
+        return False
+
+    if search(all_ids, ()):
+        return True, None
+    offender = None
+    if blamed:
+        e = blamed[0]
+        for group in (e.reads, e.writes, e.incrs):
+            if group:
+                offender = group[0][0]
+                break
+    return False, offender

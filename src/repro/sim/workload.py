@@ -125,6 +125,78 @@ class BatchedWorkload:
 
 
 @dataclass
+class TxnWorkload:
+    """Mini-transaction generator for the txn subsystem (repro.core.txn).
+
+    Each ``next_txn`` yields a (writes, reads) pair whose keys are drawn
+    from per-shard pools (pre-bucketed by the protocol's own KeyRouter, like
+    ShardSkewedWorkload): with probability ``cross_shard_frac`` the write
+    set spans ``span_shards`` distinct shards (a true 2PC), otherwise every
+    key stays on one shard (the 1-RTT short-circuit).  ``hot_frac`` of keys
+    come from a tiny hot pool, so contention — and with it intent-lock
+    conflicts and transaction aborts — is tunable.
+    """
+    n_shards: int
+    cross_shard_frac: float = 0.5
+    span_shards: int = 2
+    keys_per_txn: int = 2
+    reads_per_txn: int = 0
+    n_items: int = 10_000
+    hot_frac: float = 0.0
+    hot_items: int = 4
+    seed: int = 0
+    value_size: int = 32
+
+    def __post_init__(self) -> None:
+        from repro.core.shard import KeyRouter
+
+        router = KeyRouter(self.n_shards)
+        self.rng = random.Random(self.seed)
+        self._value = "x" * self.value_size
+        self._pools: list = [[] for _ in range(self.n_shards)]
+        for i in range(self.n_items):
+            key = f"t{i}"
+            self._pools[router.shard_of(key)].append(key)
+        assert all(self._pools), "n_items too small to cover every shard"
+        # Hot pool: the first hot_items keys of every shard's pool.
+        self._hot = [pool[:self.hot_items] for pool in self._pools]
+        self._seq = 0
+
+    def _key(self, shard: int) -> str:
+        if self.hot_frac > 0 and self.rng.random() < self.hot_frac:
+            pool = self._hot[shard]
+        else:
+            pool = self._pools[shard]
+        return pool[self.rng.randrange(len(pool))]
+
+    def next_txn(self):
+        """Returns (writes, reads): write values are unique per txn, so
+        torn writes are observable by the strict checker."""
+        self._seq += 1
+        if self.n_shards > 1 and self.rng.random() < self.cross_shard_frac:
+            shards = self.rng.sample(
+                range(self.n_shards), min(self.span_shards, self.n_shards)
+            )
+        else:
+            shards = [self.rng.randrange(self.n_shards)]
+        keys: list = []
+        seen = set()
+        for i in range(self.keys_per_txn):
+            k = self._key(shards[i % len(shards)])
+            if k not in seen:
+                seen.add(k)
+                keys.append(k)
+        writes = [(k, f"v{self._seq}_{k}_{self._value[:4]}") for k in keys]
+        reads = []
+        for i in range(self.reads_per_txn):
+            k = self._key(shards[i % len(shards)])
+            if k not in seen:
+                seen.add(k)
+                reads.append(k)
+        return writes, reads
+
+
+@dataclass
 class ShardSkewedWorkload:
     """Writes whose *shard* distribution is skewed: ``hot_frac`` of ops land
     on ``hot_shard``, the rest spread uniformly over the other shards.

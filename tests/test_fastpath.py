@@ -253,6 +253,138 @@ class TestFusedFastPath:
             np.array([router.shard_of(k) for k in keys]))
 
 
+class TestTxnProbe:
+    """All-or-nothing multi-key record: one dispatch on accept AND reject."""
+
+    def _oracle(self, table, hi, lo, own=None):
+        from repro.kernels import ref_witness_record_txn
+        from repro.kernels.ops import _pad_valid
+
+        (K,) = np.asarray(hi).shape
+        qh, ql = ref_keyhash2x32(jnp.asarray(hi, jnp.uint32),
+                                 jnp.asarray(lo, jnp.uint32))
+        own = np.zeros(K, np.int32) if own is None else np.asarray(own)
+        qhp, qlp, ownp, valid = _pad_valid(K, np.asarray(qh), np.asarray(ql),
+                                           own)
+        return ref_witness_record_txn(
+            table, jnp.asarray(qhp), jnp.asarray(qlp), jnp.asarray(ownp),
+            jnp.asarray(valid))
+
+    def test_accept_and_reject_single_dispatch(self):
+        from repro.kernels import txn_probe
+
+        t = WitnessTable.empty(16, 2)
+        hi = np.array([1, 2, 3], np.uint32)
+        lo = np.array([1, 2, 3], np.uint32)
+        txn_probe(t, hi, lo)            # warm the jit cache
+        reset_dispatch_count()
+        res = txn_probe(t, hi, lo)
+        assert res.accepted and dispatch_count() == 1
+        reset_dispatch_count()
+        # Conflict: same keys again (different op) — rejects, still 1 call.
+        res2 = txn_probe(res.table, hi, lo)
+        assert not res2.accepted and dispatch_count() == 1
+        reset_dispatch_count()
+
+    def test_reject_leaves_table_bit_identical(self):
+        from repro.kernels import txn_probe
+
+        r = rng(4)
+        t = WitnessTable.empty(16, 2)
+        res = txn_probe(t, np.array([7], np.uint32), np.array([7], np.uint32))
+        t = res.table
+        # Op with one fresh key and one conflicting key: must reject and
+        # leave the table untouched (no partial insert, no rollback).
+        res2 = txn_probe(t, np.array([5, 7], np.uint32),
+                         np.array([5, 7], np.uint32))
+        assert not res2.accepted
+        assert_tables_equal(res2.table, t)
+
+    @pytest.mark.parametrize("sets,ways,kspan", [
+        (8, 2, 4), (16, 4, 6), (64, 4, 3),
+    ])
+    def test_matches_oracle_collision_heavy(self, sets, ways, kspan):
+        from repro.kernels import txn_probe
+
+        r = rng(sets + ways)
+        table = WitnessTable.empty(sets, ways)
+        oracle = WitnessTable.empty(sets, ways)
+        for i in range(80):
+            K = int(r.integers(1, 7))
+            hi = r.integers(0, kspan, K).astype(np.uint32)
+            lo = r.integers(0, kspan, K).astype(np.uint32)
+            res = txn_probe(table, hi, lo)
+            acc_r, hit_r, oracle = self._oracle(oracle, hi, lo)
+            assert res.accepted == bool(np.asarray(acc_r)[0]), i
+            np.testing.assert_array_equal(np.asarray(res.hit),
+                                          np.asarray(hit_r)[:K])
+            table = res.table
+            assert_tables_equal(table, oracle)
+
+    def test_own_bit_makes_retry_idempotent(self):
+        from repro.kernels import txn_probe
+
+        t = WitnessTable.empty(16, 4)
+        hi = np.array([3, 4], np.uint32)
+        lo = np.array([3, 4], np.uint32)
+        res = txn_probe(t, hi, lo)
+        assert res.accepted
+        # Same op retried without own bits: same-key hits -> conflict.
+        res2 = txn_probe(res.table, hi, lo)
+        assert not res2.accepted
+        # With own bits (the caller knows these are its keys): accepted,
+        # table unchanged (keys already placed).
+        res3 = txn_probe(res.table, hi, lo, own=np.array([1, 1], np.int32))
+        assert res3.accepted
+        assert np.asarray(res3.hit).tolist() == [1, 1]
+        assert_tables_equal(res3.table, res.table)
+
+    def test_capacity_reject_all_or_nothing(self):
+        from repro.kernels import txn_probe
+
+        t = WitnessTable.empty(1, 2)    # one set, two ways
+        # Fill both ways with two separate single-key ops (keys of ONE op
+        # compute placement against the pre-op state — Python Witness
+        # semantics — so one 2-key op would land in a single way).
+        for k in (1, 2):
+            res = txn_probe(t, np.array([k], np.uint32),
+                            np.array([k], np.uint32))
+            assert res.accepted
+            t = res.table
+        assert int(np.asarray(t.occ).sum()) == 2
+        res2 = txn_probe(t, np.array([9, 10], np.uint32),
+                         np.array([9, 10], np.uint32))
+        assert not res2.accepted        # capacity: whole op rejected
+        assert_tables_equal(res2.table, t)
+
+    def test_device_witness_multikey_one_dispatch_no_rollback(self):
+        """DeviceWitness multi-key records go through the probe: 1 kernel
+        dispatch whether the op accepts or rejects (the old path paid 2 on
+        reject), with statuses identical to the rollback implementation."""
+        from repro.core import DeviceWitness
+        from repro.core.types import Op, OpType
+
+        def fresh():
+            w = DeviceWitness(64, 4)
+            w.start(1)
+            w.record(1, (7,), (1, 1), Op(OpType.SET, ("x",), (0,), (1, 1)))
+            return w
+
+        reject_op = Op(OpType.MSET, ("a", "b"), (1, 2), (2, 1))
+        w = fresh()
+        reset_dispatch_count()
+        st = w._record_keys((5, 7), reject_op.rpc_id, reject_op)
+        assert dispatch_count() == 1
+        w2 = fresh()
+        reset_dispatch_count()
+        st2 = w2._record_keys_rollback((5, 7), reject_op.rpc_id, reject_op)
+        assert dispatch_count() == 2
+        assert st == st2
+        # Mirror and stats agree with the Python reference on the reject.
+        assert w.stats["rejects_conflict"] == 1
+        assert w.occupancy == w2.occupancy == 1
+
+
 class TestDeviceWitness:
     def test_matches_python_witness_semantics(self):
         from repro.core.client import ClientSession

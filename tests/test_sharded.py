@@ -225,6 +225,51 @@ class TestCrossShardMset:
         ok, key = check_linearizable(c.history)
         assert ok, f"violation on {key}"
 
+    def test_mset_crash_retry_reuses_rpc_ids_no_double_apply(self):
+        """Satellite regression: a client retrying an mset after a partial
+        failure must reuse the original per-shard rpc_ids.  The already-
+        applied leg RIFL-dedups (no double-apply, no new log entry); only
+        the never-delivered legs execute."""
+        c = ShardedCluster(n_shards=N_SHARDS, f=3)
+        cl = c.new_client()
+        kvs = [(key_on_shard(c.router, s, tag=f"r{s}_"), f"v{s}")
+               for s in range(N_SHARDS)]
+        parts = cl.mset_parts(kvs)
+        # The client "crashes" after delivering only shard 0's leg.
+        first_shard = min(parts)
+        sub = cl.session_for(first_shard)
+        c.shards[first_shard].update(sub, parts[first_shard])
+        log_len = {s: len(c.shards[s].master.log) for s in range(N_SHARDS)}
+        dups0 = c.shards[first_shard].master.stats["dups"]
+
+        # Retry the WHOLE mset with the original parts: shard 0 dedups.
+        out = c.mset(cl, kvs, parts=parts)
+        assert out.value == "OK"
+        assert c.shards[first_shard].master.stats["dups"] == dups0 + 1
+        assert len(c.shards[first_shard].master.log) == log_len[first_shard]
+        for s in range(N_SHARDS):
+            if s != first_shard:
+                assert len(c.shards[s].master.log) == log_len[s] + 1
+        for k, v in kvs:
+            assert c.read(cl, cl.op_get(k)).value == v
+        # A second full retry double-applies NOTHING anywhere.
+        lens = {s: len(c.shards[s].master.log) for s in range(N_SHARDS)}
+        c.mset(cl, kvs, parts=parts)
+        assert {s: len(c.shards[s].master.log)
+                for s in range(N_SHARDS)} == lens
+
+    def test_mset_parts_without_prev_allocates_fresh_ids(self):
+        """Without ``prev`` each call is a NEW mset (fresh rpc_ids) — the
+        pre-fix behavior, still correct for non-retry use."""
+        c = ShardedCluster(n_shards=2, f=3)
+        cl = c.new_client()
+        kvs = [(key_on_shard(c.router, s), s) for s in range(2)]
+        p1 = cl.mset_parts(kvs)
+        p2 = cl.mset_parts(kvs)
+        assert all(p1[s].rpc_id != p2[s].rpc_id for s in p1)
+        p3 = cl.mset_parts(kvs, prev=p1)
+        assert all(p3[s].rpc_id == p1[s].rpc_id for s in p1)
+
     def test_decide_multi_rules(self):
         acc = [RecordStatus.ACCEPTED] * 3
         rej = [RecordStatus.ACCEPTED, RecordStatus.REJECTED,

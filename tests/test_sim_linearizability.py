@@ -15,6 +15,7 @@ from repro.sim import (
     UniformWriteWorkload,
     YcsbWorkload,
     check_linearizable,
+    check_linearizable_strict,
     run_scenario,
     run_sharded_scenario,
 )
@@ -152,6 +153,85 @@ class TestShardedLinearizability:
         )
         ok, key = check_linearizable(r.history)
         assert ok, f"violation on {key}"
+
+
+def _torn_mset_history():
+    """A deliberately TORN cross-shard write: a client crashed mid-MSET
+    (maybe-op), k1 ended up with the new value, k2 with the old one — and
+    both final states are pinned by completed reads AFTER a common point."""
+    mset = Op(OpType.MSET, ("k1", "k2"), ("new1", "new2"), (1, 1))
+    r1 = Op(OpType.GET, ("k1",), (), (2, 1))
+    r2 = Op(OpType.GET, ("k2",), (), (2, 2))
+    return [
+        # the crashed (never-completed) multi-key write
+        {"op": mset, "invoke": 0.0, "complete": None, "value": None,
+         "failed": True, "client": 1},
+        # final reads, both strictly after the mset window
+        {"op": r1, "invoke": 10.0, "complete": 11.0, "value": "new1",
+         "failed": False, "client": 2},
+        {"op": r2, "invoke": 12.0, "complete": 13.0, "value": None,
+         "failed": False, "client": 2},
+    ]
+
+
+class TestStrictMultiKeyChecker:
+    """Satellite regression: the per-key projection cannot see torn
+    cross-shard writes (it drops a maybe-MSET's legs independently per
+    key); the strict checker forces one include/exclude decision per op."""
+
+    def test_projection_misses_torn_write(self):
+        ok, _ = check_linearizable(_torn_mset_history())
+        assert ok, "per-key projection is (by design) blind to torn writes"
+
+    def test_strict_catches_torn_write(self):
+        ok, key = check_linearizable_strict(_torn_mset_history())
+        assert not ok
+        assert key in ("k1", "k2")
+
+    def test_strict_accepts_atomic_maybe_applied(self):
+        """Crashed mset whose effects landed on BOTH keys: including it
+        atomically explains the reads — no violation."""
+        h = _torn_mset_history()
+        h[2]["value"] = "new2"      # k2 also shows the new value
+        ok, _ = check_linearizable_strict(h)
+        assert ok
+
+    def test_strict_accepts_atomic_maybe_dropped(self):
+        """Crashed mset whose effects landed NOWHERE: excluding it
+        atomically explains the reads — no violation."""
+        h = _torn_mset_history()
+        h[1]["value"] = None        # k1 shows the old value too
+        ok, _ = check_linearizable_strict(h)
+        assert ok
+
+    def test_strict_matches_plain_checker_on_single_key_histories(self):
+        r = run_scenario(mode="curp", f=3, n_clients=4, n_ops=120,
+                         op_factory=UniformWriteWorkload(seed=2, n_items=40),
+                         seed=9, crash_at_us=1200.0)
+        ok_plain, _ = check_linearizable(r.history)
+        ok_strict, _ = check_linearizable_strict(r.history)
+        assert ok_plain and ok_strict
+
+    def test_strict_point_consistency_across_keys(self):
+        """The subtle torn case: reads ORDERED in real time (r1 then r2)
+        observe k1=new but k2=old.  Per-key projection places the maybe-mset
+        at a different point for each key and passes; a single global
+        linearization point cannot satisfy both (before r1 AND after r2)."""
+        mset = Op(OpType.MSET, ("k1", "k2"), ("n1", "n2"), (1, 1))
+        r1 = Op(OpType.GET, ("k1",), (), (2, 1))
+        r2 = Op(OpType.GET, ("k2",), (), (2, 2))
+        h = [
+            {"op": mset, "invoke": 0.0, "complete": None, "value": None,
+             "failed": True, "client": 1},
+            {"op": r1, "invoke": 10.0, "complete": 11.0, "value": "n1",
+             "failed": False, "client": 2},
+            {"op": r2, "invoke": 12.0, "complete": 13.0, "value": None,
+             "failed": False, "client": 2},
+        ]
+        ok_plain, _ = check_linearizable(h)
+        assert ok_plain            # blind
+        ok_strict, _ = check_linearizable_strict(h)
+        assert not ok_strict       # caught
 
 
 class TestWitnessChecker:
