@@ -1,4 +1,4 @@
-.PHONY: check test bench-scaling bench-fastpath bench-txn
+.PHONY: check test bench-scaling bench-fastpath bench-txn bench-migration
 
 check:
 	bash scripts/check.sh
@@ -14,3 +14,6 @@ bench-fastpath:
 
 bench-txn:
 	PYTHONPATH=src python -m benchmarks.fig_txn
+
+bench-migration:
+	PYTHONPATH=src python -m benchmarks.fig_migration

@@ -207,53 +207,139 @@ def check_probe_parity(n_ops: int = 60, seed: int = 7) -> int:
 
 
 # ---------------------------------------------------------------------------
-# 4. abort rate vs contention (interleaved coordinators)
+# 4. abort rate vs contention (interleaved coordinators), per conflict policy
 # ---------------------------------------------------------------------------
+def _interleaved_round(cluster, pairs, policy: str) -> int:
+    """Run N coordinators' transactions with prepare legs INTERLEAVED
+    leg-by-leg (leg 0 of every txn, then leg 1, ...), under one of two
+    intent-conflict policies:
+
+      * ``vote-no``    — any foreign intent refuses the prepare outright
+                         (the pre-policy behavior): the txn aborts.
+      * ``wound-wait`` — deterministic ordering by txn_id (repro.core.txn):
+                         an OLDER (lower-id) txn wounds the younger holder
+                         via the safe resolve primitive and retries; a
+                         YOUNGER txn parks the leg and retries it after the
+                         older holders decide (wait-by-retry).
+
+    Decides in txn_id order (lower first — the deterministic winner), then
+    retries parked legs.  Returns the number of aborted transactions.
+    """
+    from repro.core.txn import resolve_txn
+
+    txns = [
+        {"spec": spec, "sess": sess, "votes": {}, "parked": [],
+         "dead": False}
+        for spec, sess in pairs
+    ]
+    max_legs = max(len(t["spec"].parts) for t in txns)
+    for leg in range(max_legs):
+        for t in txns:
+            if t["dead"] or leg >= len(t["spec"].parts):
+                continue
+            part = t["spec"].parts[leg]
+            vote = cluster.shards[part.shard_id].txn_prepare(
+                t["sess"].session_for(part.shard_id),
+                prepare_op(t["spec"], part))
+            if vote.granted:
+                t["votes"][part.shard_id] = vote
+            elif policy == "wound-wait" and vote.error == "TXN_LOCKED" \
+                    and vote.blocking is not None:
+                if t["spec"].txn_id < vote.blocking.txn_id:
+                    # Older: wound the younger holder, retry immediately.
+                    resolve_txn(cluster, vote.blocking)
+                    vote = cluster.shards[part.shard_id].txn_prepare(
+                        t["sess"].session_for(part.shard_id),
+                        prepare_op(t["spec"], part))
+                    if vote.granted:
+                        t["votes"][part.shard_id] = vote
+                    else:
+                        t["dead"] = True
+                else:
+                    # Younger: wait-by-retry after the older txns decide.
+                    t["parked"].append(part)
+            else:
+                t["dead"] = True
+    aborted = 0
+    for t in sorted(txns, key=lambda t: t["spec"].txn_id):
+        spec, sess = t["spec"], t["sess"]
+        for part in t["parked"]:         # the blockers have decided by now
+            vote = cluster.shards[part.shard_id].txn_prepare(
+                sess.session_for(part.shard_id), prepare_op(spec, part))
+            if vote.granted:
+                t["votes"][part.shard_id] = vote
+            else:
+                t["dead"] = True
+        commit = (not t["dead"]
+                  and len(t["votes"]) == len(spec.parts)
+                  and all(v.granted for v in t["votes"].values()))
+        for p in spec.parts:
+            op = commit_op(spec, p) if commit else abort_op(spec, p)
+            cluster.shards[p.shard_id].txn_decide(
+                op, sess.session_for(p.shard_id))
+        if not commit:
+            aborted += 1
+    return aborted
+
+
 def abort_sweep(n_rounds: int = 40, n_shards: int = 4,
                 hot_fracs=(0.0, 0.5, 0.9)) -> tuple:
-    """Two coordinators per round prepare INTERLEAVED (A's legs, then B's
-    while A is still undecided): B aborts whenever it hits A's intent
-    locks.  The hotter the keyset, the higher the abort rate."""
+    """Two coordinators per round with leg-interleaved prepares, swept over
+    keyset hotness AND conflict policy: the wound/wait ordering (lower
+    txn_id wins, higher waits-by-retry) must cut the abort rate vs the old
+    vote-NO-on-any-foreign-intent behavior (ROADMAP follow-on)."""
     rows = []
-    rates = {}
+    rates = {"vote-no": {}, "wound-wait": {}}
     for hot in hot_fracs:
-        cluster = ShardedCluster(n_shards=n_shards, f=3, seed=2)
-        sa = cluster.new_client()
-        sb = cluster.new_client()
-        wl = TxnWorkload(n_shards=n_shards, cross_shard_frac=1.0,
-                         keys_per_txn=2, hot_frac=hot, hot_items=2, seed=3)
-        aborted = 0
-        for _ in range(n_rounds):
-            wa, _ = wl.next_txn()
-            wb, _ = wl.next_txn()
-            spec_a = sa.txn_spec(wa)
-            spec_b = sb.txn_spec(wb)
-            votes_a = [
-                cluster.shards[p.shard_id].txn_prepare(
-                    sa.session_for(p.shard_id), prepare_op(spec_a, p))
-                for p in spec_a.parts
-            ]
-            votes_b = [
-                cluster.shards[p.shard_id].txn_prepare(
-                    sb.session_for(p.shard_id), prepare_op(spec_b, p))
-                for p in spec_b.parts
-            ]
-            for spec, votes, sess in ((spec_a, votes_a, sa),
-                                      (spec_b, votes_b, sb)):
-                commit = all(v.granted for v in votes)
-                for p in spec.parts:
-                    op = commit_op(spec, p) if commit else abort_op(spec, p)
-                    cluster.shards[p.shard_id].txn_decide(
-                        op, sess.session_for(p.shard_id))
-                if not commit:
-                    aborted += 1
-        assert not any(g.master.store.txn_intents() for g in cluster.shards)
-        rate = aborted / (2 * n_rounds)
-        rates[hot] = rate
-        rows.append({"hot_frac": hot, "rounds": n_rounds,
-                     "abort_rate": rate})
-    emit(rows, "fig_txn: abort rate vs contention (interleaved 2PCs)")
+        for policy in ("vote-no", "wound-wait"):
+            cluster = ShardedCluster(n_shards=n_shards, f=3, seed=2)
+            sa = cluster.new_client()
+            sb = cluster.new_client()
+            wl = TxnWorkload(n_shards=n_shards, cross_shard_frac=1.0,
+                             keys_per_txn=2, hot_frac=hot, hot_items=2,
+                             seed=3)
+            aborted = 0
+            for _ in range(n_rounds):
+                wa, _ = wl.next_txn()
+                wb, _ = wl.next_txn()
+                aborted += _interleaved_round(
+                    cluster,
+                    [(sa.txn_spec(wa), sa), (sb.txn_spec(wb), sb)],
+                    policy,
+                )
+            assert not any(g.master.store.txn_intents()
+                           for g in cluster.shards)
+            rate = aborted / (2 * n_rounds)
+            rates[policy][hot] = rate
+            rows.append({"policy": policy, "hot_frac": hot,
+                         "rounds": n_rounds, "abort_rate": rate})
+    emit(rows, "fig_txn: abort rate vs contention (interleaved 2PCs, "
+               "vote-no vs wound-wait)")
     return rows, rates
+
+
+# ---------------------------------------------------------------------------
+# 5. timed 2PC: concurrent prepare fan-out vs sequential vs per-shard mset
+# ---------------------------------------------------------------------------
+def timed_rounds(n_txns: int = 60, span: int = 3) -> dict:
+    """True 2-round latency in the discrete-event transport: the fan-out
+    coordinator (prepare legs concurrent) must beat the sequential baseline
+    and cost ~one extra round over the non-atomic per-shard mset."""
+    from repro.sim import run_timed_txn_scenario
+
+    out = {}
+    rows = []
+    for mode in ("mset", "fanout", "sequential"):
+        t = run_timed_txn_scenario(mode=mode, n_shards=4, span=span,
+                                   n_txns=n_txns, n_clients=2, seed=6)
+        rows.append({"mode": mode, "span": span, "mean_us": t.mean_us,
+                     "p50_us": t.p50_us, "p99_us": t.p99_us,
+                     "committed": t.committed, "aborted": t.aborted})
+        out[f"timed_{mode}_us"] = t.mean_us
+    emit(rows, "fig_txn: timed 2PC latency (fan-out vs sequential vs mset)")
+    out["fanout_speedup_vs_seq"] = (out["timed_sequential_us"]
+                                    / max(1e-9, out["timed_fanout_us"]))
+    return out
 
 
 def main(smoke: bool = False) -> dict:
@@ -271,16 +357,32 @@ def main(smoke: bool = False) -> dict:
     assert thr["single_mean_rounds"] <= 1.05, thr
     assert thr["cross_mean_rounds"] >= 2.0, thr
 
+    timed = timed_rounds(n_txns=20 if smoke else 60)
+    # The fan-out coordinator's prepare round is concurrent: a 3-leg txn
+    # must be well under the sequential per-leg baseline.
+    assert timed["timed_fanout_us"] < timed["timed_sequential_us"], timed
+
     _rows, rates = abort_sweep(n_rounds=12 if smoke else 40)
-    hots = sorted(rates)
+    hots = sorted(rates["vote-no"])
+    hottest = hots[-1]
+    # Wound/wait must not abort MORE at any contention level, and must
+    # strictly cut aborts at the hottest setting.
+    for h in hots:
+        assert rates["wound-wait"][h] <= rates["vote-no"][h], rates
+    assert rates["wound-wait"][hottest] < rates["vote-no"][hottest], rates
     derived = {
         "crash_cases": crash_cases,
         "parity_cases": parity_cases,
         "probe_dispatches_reject": disp["probe_dispatches_reject"],
         "rollback_dispatches_reject": disp["rollback_dispatches_reject"],
         **thr,
-        **{f"abort_rate_hot{h}": rates[h] for h in hots},
-        "abort_monotone": int(rates[hots[0]] <= rates[hots[-1]]),
+        **timed,
+        **{f"abort_rate_hot{h}": rates["vote-no"][h] for h in hots},
+        **{f"ww_abort_rate_hot{h}": rates["wound-wait"][h] for h in hots},
+        "abort_monotone": int(rates["vote-no"][hots[0]]
+                              <= rates["vote-no"][hottest]),
+        "ww_abort_cut": (rates["vote-no"][hottest]
+                         - rates["wound-wait"][hottest]),
     }
     print("derived:", derived)
     return derived

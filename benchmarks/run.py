@@ -67,6 +67,7 @@ def main() -> None:
         fig11_witness_capacity,
         fig12_batchsize,
         fig_fastpath,
+        fig_migration,
         fig_scaling,
         fig_txn,
         roofline_table,
@@ -83,6 +84,7 @@ def main() -> None:
         ("fig_scaling", fig_scaling.main),
         ("fig_fastpath", fig_fastpath.main),
         ("fig_txn", fig_txn.main),
+        ("fig_migration", fig_migration.main),
         ("roofline_table", roofline_table.main),
     ]
     results = []

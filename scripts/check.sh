@@ -5,11 +5,14 @@
 #   scripts/check.sh -m 'not slow'   # extra pytest args pass through
 #
 # The smoke runs use tiny op counts: they validate that the sharded,
-# fused-fast-path, and transaction benchmarks still run end-to-end
-# (fig_scaling stays monotonic; fig_fastpath keeps its bit-exact parity
-# assertion and its 1-dispatch-per-batch invariant; fig_txn keeps its
-# crash-atomicity, 1-dispatch transactional-probe, and single-shard
-# fast-path assertions), not the measured numbers.
+# fused-fast-path, transaction, and live-migration benchmarks still run
+# end-to-end (fig_scaling stays monotonic; fig_fastpath keeps its bit-exact
+# parity assertion and its 1-dispatch-per-batch invariant; fig_txn keeps its
+# crash-atomicity, 1-dispatch transactional-probe, single-shard fast-path,
+# fan-out-beats-sequential, and wound/wait-cuts-aborts assertions;
+# fig_migration keeps its zero-lost-writes, strict-linearizability,
+# untouched-slot fast-ratio, slot-route parity, and rebalance-beats-static
+# assertions), not the measured numbers.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -18,4 +21,5 @@ python -m pytest -x -q "$@"
 python -m benchmarks.fig_scaling --smoke
 python -m benchmarks.fig_fastpath --smoke
 python -m benchmarks.fig_txn --smoke
+python -m benchmarks.fig_migration --smoke
 echo "check.sh: all green"

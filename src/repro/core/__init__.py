@@ -23,14 +23,23 @@ from .consensus import ConsensusCluster, replay_threshold, superquorum
 from .device_witness import DeviceWitness
 from .local import LocalCluster, OpOutcome
 from .master import DUP, ERROR, FAST, SYNCED, Master
+from .migration import (
+    MigrationManager,
+    MigrationReport,
+    SlotMigration,
+    SlotMoving,
+    plan_rebalance,
+)
 from .recovery import RecoveryReport, recover_master
 from .rifl import RiflTable
 from .shard import (
+    N_SLOTS,
     ClusterRecoveryReport,
     KeyRouter,
     ShardedClientSession,
     ShardedCluster,
     ShardGroup,
+    SlotRouter,
     mix2x32,
 )
 from .store import KVStore
@@ -65,8 +74,10 @@ __all__ = [
     "ConsensusCluster", "replay_threshold", "superquorum",
     "LocalCluster", "OpOutcome", "Master", "FAST", "SYNCED", "DUP", "ERROR",
     "RecoveryReport", "recover_master", "RiflTable", "KVStore",
-    "ClusterRecoveryReport", "KeyRouter", "ShardedClientSession",
-    "ShardedCluster", "ShardGroup", "mix2x32",
+    "ClusterRecoveryReport", "KeyRouter", "SlotRouter", "N_SLOTS",
+    "ShardedClientSession", "ShardedCluster", "ShardGroup", "mix2x32",
+    "MigrationManager", "MigrationReport", "SlotMigration", "SlotMoving",
+    "plan_rebalance",
     "CoordinatorCrash", "TxnCoordinator", "TxnOutcome", "TxnPart",
     "TxnPending", "TxnSpec", "TxnStatus", "resolve_pending", "resolve_txn",
     "ClusterConfig", "ExecResult", "Op", "OpType", "RecordStatus", "RpcId",

@@ -97,6 +97,16 @@ class ClientSession:
             self._completed.discard(self.first_incomplete)
             self.first_incomplete += 1
 
+    def abandon(self, rpc_id: RpcId) -> None:
+        """Release an allocated identity that was NEVER transmitted to any
+        master or witness (e.g. the op drew a SlotMoving redirect at the
+        routing stage).  Without this the ack frontier would stall at the
+        abandoned seq forever, pinning every later completion record at
+        every master.  MUST NOT be called for an op that may have reached a
+        master: advancing the frontier past a live op's seq would let its
+        completion record be deleted before the client saw the result."""
+        self.mark_completed(rpc_id)
+
     def acks(self) -> Tuple[Tuple[int, int], ...]:
         """Piggybacked RIFL ack: 'I have seen results for all seq < N'."""
         return ((self.client_id, self.first_incomplete),)

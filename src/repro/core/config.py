@@ -80,6 +80,24 @@ class ConfigManager:
         self._configs[shard_id] = cfg
         return cfg
 
+    def migration_fence(self, shard_id: int) -> ClusterConfig:
+        """§3.6 slot handover: bump epoch AND WitnessListVersion on one side
+        of a migration.  The WitnessListVersion bump fences in-flight records
+        — an update that recorded at the old witness set before the handover
+        is refused by the master (WRONG_WITNESS_VERSION) and the client
+        refetches, re-routing to the new owner; the epoch bump fences any
+        zombie pre-handover master at the backups.  Callers must push the
+        new epoch/version into the live master and its backups (the
+        MigrationManager drives that handshake)."""
+        cfg = self._configs[shard_id]
+        cfg = replace(
+            cfg,
+            epoch=cfg.epoch + 1,
+            witness_list_version=cfg.witness_list_version + 1,
+        )
+        self._configs[shard_id] = cfg
+        return cfg
+
     def fail_over(
         self,
         shard_id: int,

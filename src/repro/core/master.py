@@ -62,11 +62,18 @@ class Master:
         self.sync_in_progress: Optional[PendingSync] = None
         self.want_sync: bool = False          # sync requested (batch full / conflict)
         self.owned_partition = None           # optional key filter (migration §3.6)
+        # RIFL completion records that arrived WITH migrated data (§3.6 slot
+        # handover, RAMCloud-style per-object RIFL): keyed by (rpc_id,
+        # key_hashes) so a moved op's retry dedups here while this master's
+        # native records stay untouched.  Not truncated by client acks (the
+        # ack sweep only walks the native table); bounded by what handovers
+        # carry — ack-driven gc of this overlay is a ROADMAP follow-on.
+        self.migrated_rifl: Dict[Tuple[RpcId, Tuple[int, ...]], Any] = {}
         self.stats = {
             "fast": 0, "conflict_syncs": 0, "dups": 0, "batch_syncs": 0,
             "reads_fast": 0, "reads_blocked": 0, "hot_key_syncs": 0,
             "txn_prepares": 0, "txn_commits": 0, "txn_aborts": 0,
-            "txn_vote_no": 0,
+            "txn_vote_no": 0, "migrated_in_keys": 0, "migrated_out_keys": 0,
         }
 
     # ------------------------------------------------------------------ utils
@@ -78,6 +85,11 @@ class Master:
         return not any(kh in self._unsynced_keyhash for kh in op.key_hashes())
 
     def owns(self, op: Op) -> bool:
+        if op.op_type is OpType.MIGRATE_IN:
+            # The handover mechanism itself: absorbs keys the routing table
+            # does not map here YET (the map flips only after the transfer
+            # is durable), so it must bypass the ownership filter.
+            return True
         if self.owned_partition is None:
             return True
         return all(self.owned_partition(k) for k in op.keys)
@@ -107,6 +119,16 @@ class Master:
                                      error="NOT_OWNER")
 
         self.rifl.apply_client_acks(client_acks)
+        # §3.6 slot handover: a retry of an op that completed on the DONOR
+        # before its slot moved here dedups against the migrated completion
+        # records (checked first and key-scoped: this master's own records
+        # can never be confused with a moved op's).  Membership test, not a
+        # get-vs-None: already-ACKED ops migrate with result None (the
+        # ignore-as-duplicate marker) and must still dedup, never re-execute.
+        mig_key = (op.rpc_id, op.key_hashes())
+        if mig_key in self.migrated_rifl:
+            self.stats["dups"] += 1
+            return DUP, ExecResult(self.migrated_rifl[mig_key], synced=True)
         dup = self.rifl.check_duplicate(op.rpc_id)
         if dup is not None:
             self.stats["dups"] += 1
@@ -114,6 +136,16 @@ class Master:
 
         if op.op_type in TXN_OPS:
             return self._handle_txn(op, now)
+        if op.op_type is OpType.MIGRATE_IN:
+            # Receiver side of a slot handover: absorb the moved snapshot +
+            # completion records as ONE ordinary log entry, so backup syncs
+            # make the transfer durable and a post-crash restore replays it.
+            result = self.store.execute(op, now)
+            self._install_migrated(op)
+            self._log_txn(op, result)
+            self.stats["migrated_in_keys"] += len(op.keys)
+            self.want_sync = True
+            return FAST, ExecResult(result, synced=False)
         # Keys under an undecided transaction intent cannot be executed:
         # syncing doesn't resolve the intent, so this is not the §3.2.3
         # conflict path — the caller must resolve the transaction (or wait
@@ -141,6 +173,8 @@ class Master:
         self.log.append(LogEntry(op, result))
         for kh in op.key_hashes():
             self._unsynced_keyhash[kh] = self._unsynced_keyhash.get(kh, 0) + 1
+        if op.op_type is OpType.MIGRATE_OUT:
+            self.stats["migrated_out_keys"] += len(op.keys)
 
         if not commutes:
             # §3.2.3: must sync (through this op) before externalizing result.
@@ -157,6 +191,14 @@ class Master:
             self.stats["hot_key_syncs"] += 1
             self.want_sync = True
         return FAST, ExecResult(result, synced=False)
+
+    # ----------------------------------------------- migration (migration.py)
+    def _install_migrated(self, op: Op) -> None:
+        """Install the RIFL completion records riding a MIGRATE_IN op (the
+        moved ops' exactly-once identities; see handle_update's dedup)."""
+        _kvs, records = op.args
+        for rpc_id, key_hashes, result in records:
+            self.migrated_rifl[(rpc_id, tuple(key_hashes))] = result
 
     # --------------------------------------------------- transactions (txn.py)
     def _log_txn(self, op: Op, result) -> None:
@@ -315,6 +357,11 @@ class Master:
         """New master: rebuild state machine + RIFL from a backup's log."""
         for e in entries:
             self.store.execute(e.op, 0.0)
+            if e.op.op_type is OpType.MIGRATE_IN:
+                # Moved-in completion records are log-resident (they rode the
+                # transfer op): re-surface them so cross-move retries still
+                # dedup after this failover.
+                self._install_migrated(e.op)
             self.rifl.record_completion(e.op.rpc_id, e.result, synced=True)
         self.log = list(entries)
         self.synced_index = len(self.log)

@@ -7,21 +7,37 @@ replays that shard's witnesses.
 
 Three pieces live here:
 
-  * ``KeyRouter`` — hash-based placement.  The mix is the pure-Python mirror
-    of the Pallas ``keyhash2x32`` kernel (repro.kernels.keyhash): the 64-bit
-    splitmix key hash is split into (hi, lo) uint32 lanes, pushed through the
-    murmur3 fmix32 chain, and the low output lane mod ``n_shards`` picks the
-    shard.  ``repro.kernels.ops.shard_route`` computes the same placement
-    batched on-device; Python and Pallas must agree bit-for-bit.
+  * ``SlotRouter`` — slot-table placement.  The mix is the pure-Python
+    mirror of the Pallas ``keyhash2x32`` kernel (repro.kernels.keyhash): the
+    64-bit splitmix key hash is split into (hi, lo) uint32 lanes, pushed
+    through the murmur3 fmix32 chain, and the low output lane mod
+    ``n_slots`` picks a SLOT; a slot -> shard table names the owner.  Live
+    reconfiguration (repro.core.migration) moves slots between shards by
+    editing the table — the hash never changes.  ``repro.kernels.ops.
+    shard_route`` computes the same placement batched on-device (table
+    gather); Python and Pallas must agree bit-for-bit on ANY slot map.
+    ``KeyRouter`` survives as the mod-N compatibility constructor (the
+    round-robin default map).
   * ``ShardGroup`` — one master + its witness group + its backups, with the
     full protocol drive loop (speculative update, witness records, batched
     syncs + gc, crash recovery, witness reconfiguration).  This is the unit
     ``LocalCluster`` wraps exactly once and ``ShardedCluster`` wraps N times.
-  * ``ShardedCluster`` — a set of shards behind a ``KeyRouter``, with
-    per-shard RPC-id spaces (``ShardedClientSession``) and cross-shard
-    multi-key ops (``mset``): each shard's sub-op takes the per-shard 1-RTT
-    fast path; if any shard's witnesses reject, only that shard falls back to
-    an explicit sync (2 RTTs overall).
+  * ``ShardedCluster`` — a set of shards behind a ``SlotRouter``, with
+    cross-shard multi-key ops (``mset``): each shard's sub-op takes the
+    per-shard 1-RTT fast path; if any shard's witnesses reject, only that
+    shard falls back to an explicit sync (2 RTTs overall).  The cluster also
+    owns the live-reconfiguration control plane (``migrate_slots`` /
+    ``add_shard`` / ``remove_shard`` / ``rebalance``), per-slot op counters
+    feeding the hot-shard auto-split policy, and the retryable-redirect
+    check for mid-handover slots.
+
+Client identity (``ShardedClientSession``) is ONE RIFL space per client,
+shared across shards: (client_id, seq) pairs are globally unique, which is
+what lets a completion record MIGRATE with its key's slot and still dedup a
+retry at the new owner without ever colliding with the receiver's own
+records.  (The earlier per-shard sequence spaces reused (client_id, seq)
+across shards — safe while placement was static, fatally ambiguous once
+records can move.)
 """
 from __future__ import annotations
 
@@ -71,23 +87,58 @@ def mix2x32(hi: int, lo: int) -> Tuple[int, int]:
     return h2, h3
 
 
-class KeyRouter:
+# Default slot-table size.  Must match repro.kernels.ops.DEFAULT_N_SLOTS —
+# the Pallas shard_route gather and this router share the table layout.
+N_SLOTS = 256
+
+
+class SlotRouter:
     """Deterministic key -> shard placement shared by Python and Pallas.
 
-    Input is the canonical 64-bit key hash (types.keyhash) split into uint32
-    lanes; the shard is the keyhash2x32-mixed low lane mod ``n_shards``.
+    Two-stage: the canonical 64-bit key hash (types.keyhash) is split into
+    uint32 lanes and keyhash2x32-mixed; the low lane mod ``n_slots`` picks a
+    SLOT, and ``slot_map[slot]`` names the owning shard.  The slot is the
+    unit of live migration (repro.core.migration): a handover edits the
+    table (``assign``) and bumps ``version`` so cached placements (e.g. the
+    serving store's session cache) know to refetch.  ``repro.kernels.ops.
+    shard_route`` computes the same placement batched on-device from the
+    same table.
     """
 
-    def __init__(self, n_shards: int) -> None:
+    def __init__(self, slot_map: Sequence[int],
+                 n_shards: Optional[int] = None) -> None:
+        self.slot_map = list(slot_map)
+        self.n_slots = len(self.slot_map)
+        assert self.n_slots >= 1
+        self.n_shards = (max(self.slot_map) + 1) if n_shards is None \
+            else n_shards
+        self.version = 0
+
+    @classmethod
+    def uniform(cls, n_shards: int, n_slots: int = N_SLOTS) -> "SlotRouter":
+        """The round-robin default map (slot i -> shard i % N).  For
+        power-of-two shard counts dividing ``n_slots`` this is bit-identical
+        to the pre-slot-map mod-N placement."""
         assert n_shards >= 1
-        self.n_shards = n_shards
+        return cls([i % n_shards for i in range(n_slots)], n_shards=n_shards)
+
+    # ------------------------------------------------------------ placement
+    def slot_of_hash(self, kh64: int) -> int:
+        _, h3 = mix2x32((kh64 >> 32) & _M32, kh64 & _M32)
+        return h3 % self.n_slots
+
+    def slot_of(self, key: Any) -> int:
+        return self.slot_of_hash(keyhash(key))
 
     def shard_of_hash(self, kh64: int) -> int:
-        _, h3 = mix2x32((kh64 >> 32) & _M32, kh64 & _M32)
-        return h3 % self.n_shards
+        return self.slot_map[self.slot_of_hash(kh64)]
 
     def shard_of(self, key: Any) -> int:
-        return self.shard_of_hash(keyhash(key))
+        return self.slot_map[self.slot_of(key)]
+
+    def slots_of_shard(self, shard_id: int) -> List[int]:
+        return [s for s, owner in enumerate(self.slot_map)
+                if owner == shard_id]
 
     def split_keys(self, keys: Sequence[Any]) -> Dict[int, List[int]]:
         """Group key *positions* by owning shard (stable within a shard)."""
@@ -95,6 +146,22 @@ class KeyRouter:
         for i, k in enumerate(keys):
             parts.setdefault(self.shard_of(k), []).append(i)
         return parts
+
+    # ------------------------------------------------------ reconfiguration
+    def assign(self, slots: Sequence[int], shard_id: int) -> None:
+        """Flip slots to a new owner (a handover's commit point) and bump
+        the map version so cached placements refetch."""
+        for s in slots:
+            self.slot_map[s] = shard_id
+        self.version += 1
+
+
+class KeyRouter(SlotRouter):
+    """Mod-N compatibility constructor: a SlotRouter over the uniform map."""
+
+    def __init__(self, n_shards: int, n_slots: int = N_SLOTS) -> None:
+        super().__init__([i % n_shards for i in range(n_slots)],
+                         n_shards=n_shards)
 
 
 class HistoryRecorder:
@@ -180,6 +247,15 @@ class ShardGroup:
             witness_list_version=0,
         ))
         self._dropped_witnesses: set[int] = set()
+        # Live-reconfiguration state (repro.core.migration): per-slot op
+        # counters feeding the hot-shard rebalance policy (kept on the group
+        # so they survive master failovers), the ownership filter re-applied
+        # to every recovered master (§3.6: replayed ops for migrated slots
+        # are ignored), and the retired flag a drained-and-removed shard
+        # carries.
+        self.slot_ops: Dict[int, int] = {}
+        self.owned_filter: Optional[Callable[[Any], bool]] = None
+        self.retired = False
 
     def _new_witness(self):
         """Build one witness at this group's geometry: the protocol-reference
@@ -262,7 +338,11 @@ class ShardGroup:
             self._drain_syncs()
 
         session.mark_completed(op.rpc_id)
-        self.record(op, result.value, session.client_id)
+        if verdict != DUP:
+            # A RIFL-duplicate retry re-externalizes the ORIGINAL completion;
+            # the op already has its one history entry — recording again
+            # would demand two linearization points for one invocation.
+            self.record(op, result.value, session.client_id)
         return OpOutcome(
             value=result.value,
             rtts=rtts,
@@ -305,7 +385,8 @@ class ShardGroup:
             if verdict == SYNCED or decision is Decision.NEED_SYNC:
                 need_drain = True
             session.mark_completed(op.rpc_id)
-            self.record(op, result.value, session.client_id)
+            if verdict != DUP:   # see update(): dups re-externalize, once
+                self.record(op, result.value, session.client_id)
             outcomes.append(OpOutcome(
                 value=result.value,
                 rtts=rtts,
@@ -373,7 +454,13 @@ class ShardGroup:
             if verdict != ERROR or result.error != "WRONG_WITNESS_VERSION":
                 break
         if verdict == ERROR:
-            return TxnVote(granted=False, error=result.error)
+            # TXN_LOCKED carries the blocking spec: the coordinator's
+            # wound/wait policy (repro.core.txn) needs the holder's txn_id.
+            return TxnVote(
+                granted=False, error=result.error,
+                blocking=result.value if result.error == "TXN_LOCKED"
+                else None,
+            )
         statuses: List[RecordStatus] = []
         for i, w in enumerate(self.witnesses):
             if i in self._dropped_witnesses:
@@ -459,6 +546,9 @@ class ShardGroup:
             sync_batch=self.master.sync_batch,
             hot_key_window=self.master.hot_key_window,
         )
+        # Re-apply the cluster's ownership filter BEFORE witness replay:
+        # §3.6 — replayed requests for slots migrated away are ignored.
+        new_master.owned_partition = self.owned_filter
         live = [i for i in range(self.f) if i not in self._dropped_witnesses]
         assert live, "no witness reachable: recovery must wait (§3.3)"
         recovery_witness = self.witnesses[live[0]]
@@ -497,29 +587,46 @@ class ShardGroup:
 
 
 # ---------------------------------------------------------------------------
-# Client sessions with per-shard RPC-id spaces
+# Client sessions: one RIFL identity space per client, shared across shards
 # ---------------------------------------------------------------------------
 class ShardedClientSession:
-    """One logical client talking to N shards.
+    """One logical client talking to N shards through ONE RIFL space.
 
-    Each shard's master has its own RIFL table, so the client keeps an
-    independent (client_id, seq) space per shard — acks to shard k can never
-    delete completion records held by shard j's master.
+    (client_id, seq) pairs are allocated from a single per-client sequence,
+    so every rpc_id is globally unique across shards.  That is the property
+    live migration needs: a completion record can move with its key's slot
+    (Master.migrated_rifl) and still dedup a cross-move retry without ever
+    being confusable with the new owner's native records.  Acks stay safe to
+    apply at any master: completion is tracked globally, so ``seq < N`` in
+    an ack means the op completed wherever it ran — a master deleting its
+    own records below N deletes only completed ops.
     """
 
-    def __init__(self, client_id: int, router: KeyRouter) -> None:
+    def __init__(self, client_id: int, router: SlotRouter) -> None:
         self.client_id = client_id
         self.router = router
-        self._subs: Dict[int, ClientSession] = {}
+        self._ids = ClientSession(client_id=client_id)
         self._txn_seq = 0
 
     def session_for(self, shard_id: int) -> ClientSession:
-        s = self._subs.get(shard_id)
-        if s is None:
-            s = self._subs[shard_id] = ClientSession(client_id=self.client_id)
-        return s
+        """The identity space used when talking to ``shard_id`` — the SAME
+        shared space for every shard (see class docstring)."""
+        return self._ids
 
-    # convenience constructors (route, then allocate from that shard's space)
+    def acks(self) -> Tuple[Tuple[int, int], ...]:
+        return self._ids.acks()
+
+    def mark_completed(self, rpc_id) -> None:
+        self._ids.mark_completed(rpc_id)
+
+    def abandon(self, rpc_id) -> None:
+        """Release a never-transmitted identity (see ClientSession.abandon):
+        callers that created an op and then drew a SlotMoving redirect call
+        this before re-issuing fresh, so the ack frontier keeps moving."""
+        self._ids.abandon(rpc_id)
+
+    # convenience constructors (the route only decides WHERE the op goes;
+    # the identity comes from the shared space)
     def _sub(self, key) -> ClientSession:
         return self.session_for(self.router.shard_of(key))
 
@@ -540,35 +647,53 @@ class ShardedClientSession:
 
     def mset_parts(self, kvs,
                    prev: Optional[Dict[int, Op]] = None) -> Dict[int, Op]:
-        """Split a multi-key set into per-shard MSET sub-ops, each carrying an
-        rpc_id from that shard's RIFL space.
+        """Split a multi-key set into per-shard MSET sub-ops, each carrying
+        its own rpc_id from the client's (shared, globally-unique) space.
 
         ``prev`` is the part map of an earlier attempt of the SAME mset: a
-        retry after a partial failure must reuse the original per-shard
-        rpc_ids so already-applied legs RIFL-dedup instead of re-executing
-        under fresh identities (which would double-apply and double-record).
+        retry after a partial failure must reuse the original sub-ops so
+        already-applied legs RIFL-dedup instead of re-executing under fresh
+        identities (which would double-apply and double-record).  The retry
+        re-routes each ORIGINAL leg to its key set's CURRENT owner — a leg
+        whose slots migrated whole between attempts still dedups at the new
+        owner (its completion record moved with the slots).  A migration
+        that SPLITS a leg's keys across shards (or folds two legs onto one
+        shard) makes the original identities unreplayable; that raises a
+        descriptive error rather than double-applying.
         """
         kvs = list(kvs)
+        if prev is not None:
+            want = {k: v for k, v in kvs}
+            got = {k: v for sub in prev.values()
+                   for k, v in zip(sub.keys, sub.args)}
+            assert want == got, "mset retry must carry the same kvs"
+            for sub in prev.values():
+                owners = {self.router.shard_of(k) for k in sub.keys}
+                if len(owners) != 1:
+                    raise ValueError(
+                        "mset retry invalidated by a live migration: leg "
+                        f"{sub.rpc_id} now spans shards {sorted(owners)}; "
+                        "use ShardedCluster.txn for atomic retries, or "
+                        "re-issue fresh only if no leg ever reached a master"
+                    )
+            # The keys of the returned map are LEG ids (the shard ids at
+            # allocation time) — the executor re-resolves each leg's current
+            # owner, so several original legs may legally land on one shard
+            # after a migration.
+            return dict(prev)
         parts = self.router.split_keys([k for k, _ in kvs])
-        out: Dict[int, Op] = {}
-        for shard_id, idxs in parts.items():
-            sub_kvs = [kvs[i] for i in idxs]
-            if prev is not None and shard_id in prev:
-                keys = tuple(k for k, _ in sub_kvs)
-                vals = tuple(v for _, v in sub_kvs)
-                assert prev[shard_id].keys == keys, \
-                    "mset retry must carry the same key set"
-                out[shard_id] = Op(OpType.MSET, keys, vals,
-                                   prev[shard_id].rpc_id)
-            else:
-                out[shard_id] = self.session_for(shard_id).op_mset(sub_kvs)
-        return out
+        return {
+            shard_id: self.session_for(shard_id).op_mset(
+                [kvs[i] for i in idxs]
+            )
+            for shard_id, idxs in parts.items()
+        }
 
     def txn_spec(self, writes, reads=()) -> TxnSpec:
         """Build a transaction spec: split read/write sets by the router and
-        fix every leg's RIFL identities (prepare_rpc + decide_rpc, both from
-        the owning shard's space) up front, so any retry of any leg — by
-        this client or by crash resolution — is a RIFL-dedup'd replay."""
+        fix every leg's RIFL identities (prepare_rpc + decide_rpc) up front,
+        so any retry of any leg — by this client or by crash resolution —
+        is a RIFL-dedup'd replay."""
         writes = list(writes)
         reads = list(reads)
         by_shard: Dict[int, Tuple[List, List]] = {}
@@ -641,12 +766,15 @@ class ShardedCluster:
         auto_sync: bool = True,
         geometry: Optional[WitnessGeometry] = None,
         witness_backend: str = "python",
+        n_slots: int = N_SLOTS,
     ) -> None:
+        from .migration import MigrationManager
+
         self.n_shards = n_shards
         self.f = f
         self.rng = random.Random(seed)
         self.config = ConfigManager()
-        self.router = KeyRouter(n_shards)
+        self.router = SlotRouter.uniform(n_shards, n_slots)
         self._record = HistoryRecorder()
         self.history = self._record.history   # linearizability-checkable log
         self._next_node_id = 0
@@ -654,19 +782,38 @@ class ShardedCluster:
             geometry = WitnessGeometry(witness_sets, witness_ways)
         self.geometry = geometry
         self.witness_backend = witness_backend
+        # Kept for add_shard: a grown shard is built like the seed shards.
+        self._group_kwargs = dict(
+            f=f, sync_batch=sync_batch, hot_key_window=hot_key_window,
+            auto_sync=auto_sync,
+        )
         self.shards = [
             ShardGroup(
                 shard_id=i, config=self.config, alloc_id=self._node_id,
-                f=f, sync_batch=sync_batch, hot_key_window=hot_key_window,
-                auto_sync=auto_sync, record=self._record, geometry=geometry,
-                witness_backend=witness_backend,
+                record=self._record, geometry=geometry,
+                witness_backend=witness_backend, **self._group_kwargs,
             )
             for i in range(n_shards)
         ]
+        self.migration = MigrationManager(self)
+        self._apply_ownership()
 
     def _node_id(self) -> int:
         self._next_node_id += 1
         return self._next_node_id
+
+    def _apply_ownership(self) -> None:
+        """Install the router-backed ownership filter on every live master
+        (§3.6: a master ignores replayed/incoming ops for slots it no longer
+        owns).  The filter closes over the LIVE router, so a slot-map flip
+        changes every master's view at once."""
+        for g in self.shards:
+            if g.retired:
+                continue
+            flt = (lambda key, sid=g.shard_id:
+                   self.router.shard_of(key) == sid)
+            g.owned_filter = flt
+            g.master.owned_partition = flt
 
     # ----------------------------------------------------------------- client
     def new_client(self) -> ShardedClientSession:
@@ -675,13 +822,23 @@ class ShardedCluster:
     def shard_of(self, key: Any) -> int:
         return self.router.shard_of(key)
 
+    def slot_of(self, key: Any) -> int:
+        return self.router.slot_of(key)
+
     def _group_for(self, op: Op) -> ShardGroup:
-        sids = {self.router.shard_of(k) for k in op.keys}
+        """Route an op: redirect if any touched slot is mid-handover, feed
+        the per-slot load counters, and require a single owning shard."""
+        slots = {self.router.slot_of(k) for k in op.keys}
+        self.migration.check_slots(slots)
+        sids = {self.router.slot_map[s] for s in slots}
         if len(sids) != 1:
             raise ValueError(
                 f"op spans shards {sorted(sids)}; use ShardedCluster.mset"
             )
-        return self.shards[sids.pop()]
+        group = self.shards[sids.pop()]
+        for s in slots:
+            group.slot_ops[s] = group.slot_ops.get(s, 0) + 1
+        return group
 
     def update(self, session: ShardedClientSession, op: Op, now: float = 0.0):
         group = self._group_for(op)
@@ -746,8 +903,24 @@ class ShardedCluster:
         a partial failure RIFL-dedups instead of double-applying.
         """
         from .local import OpOutcome
+        from .migration import SlotMoving
 
+        fresh = parts is None
         parts = session.mset_parts(kvs, prev=parts)
+        # Redirect before ANY leg is attempted: a mid-handover slot fails the
+        # whole mset client-side (nothing recorded anywhere), so the caller
+        # can re-issue fresh once the map settles.  Identities this call
+        # just allocated are released (never transmitted) so the ack
+        # frontier keeps moving; replayed ``parts`` identities are live and
+        # stay reserved.
+        try:
+            self.migration.check_keys(k for sub in parts.values()
+                                      for k in sub.keys)
+        except SlotMoving:
+            if fresh:
+                for sub in parts.values():
+                    session.abandon(sub.rpc_id)
+            raise
         # A leg blocked by an orphaned transaction intent resolves + retries
         # the whole mset; the fixed per-shard rpc_ids make that idempotent.
         return self._with_txn_resolution(
@@ -758,34 +931,43 @@ class ShardedCluster:
                    parts: Dict[int, Op], now: float):
         from .local import OpOutcome
 
+        # Resolve each leg's CURRENT owner (a retried leg may have migrated
+        # since allocation — its dict key is the historical leg id, not
+        # necessarily today's shard; see mset_parts).
+        owners: Dict[int, ShardGroup] = {}
+        for leg_id, sub_op in parts.items():
+            sids = {self.router.shard_of(k) for k in sub_op.keys}
+            assert len(sids) == 1, "validated in mset_parts"
+            owners[leg_id] = self.shards[sids.pop()]
         # Round 1 (parallel in a real deployment): speculative execute + record
         # at every touched shard.
         attempts: Dict[int, Tuple[str, ExecResult, List[RecordStatus]]] = {}
         decisions: Dict[int, Decision] = {}
-        for shard_id, sub_op in parts.items():
-            sub_session = session.session_for(shard_id)
-            attempt = self.shards[shard_id].attempt_update(
-                sub_op, sub_session.acks(), now
-            )
-            attempts[shard_id] = attempt
-            decisions[shard_id] = decide(attempt[1], attempt[2])
+        for leg_id, sub_op in parts.items():
+            group = owners[leg_id]
+            for k in sub_op.keys:
+                s = self.router.slot_of(k)
+                group.slot_ops[s] = group.slot_ops.get(s, 0) + 1
+            attempt = group.attempt_update(sub_op, session.acks(), now)
+            attempts[leg_id] = attempt
+            decisions[leg_id] = decide(attempt[1], attempt[2])
         # A SYNCED verdict means that master must finish its sync before the
         # reply is externalized; the harness performs the master's sync here.
-        for shard_id, (verdict, _res, _sts) in attempts.items():
+        for leg_id, (verdict, _res, _sts) in attempts.items():
             if verdict == SYNCED:
-                self.shards[shard_id]._drain_syncs()
+                owners[leg_id]._drain_syncs()
         # Client completion rule across shards (§3.2.1, same fold as
         # decide_multi): if not COMPLETE, round 2 sends explicit syncs to the
         # NEED_SYNC shards only.
         overall = combine_decisions(decisions.values())
         if overall is Decision.NEED_SYNC:
-            for shard_id, d in decisions.items():
+            for leg_id, d in decisions.items():
                 if d is Decision.NEED_SYNC:
-                    self.shards[shard_id]._drain_syncs()
+                    owners[leg_id]._drain_syncs()
         # 1 RTT only if every shard was fast AND fully witness-accepted.
         all_fast = all(
-            attempts[sid][0] == FAST and d is Decision.COMPLETE
-            for sid, d in decisions.items()
+            attempts[lid][0] == FAST and d is Decision.COMPLETE
+            for lid, d in decisions.items()
         )
         accepts = sum(
             1 for (_v, _r, statuses) in attempts.values()
@@ -793,14 +975,14 @@ class ShardedCluster:
         )
         any_synced = any(v == SYNCED for (v, _r, _s) in attempts.values())
         window = self._record.next_window()
-        for shard_id, sub_op in parts.items():
-            sub_session = session.session_for(shard_id)
-            sub_session.mark_completed(sub_op.rpc_id)
-            group = self.shards[shard_id]
+        for leg_id, sub_op in parts.items():
+            session.mark_completed(sub_op.rpc_id)
+            group = owners[leg_id]
             if group.auto_sync and group.master.want_sync:
                 group._drain_syncs()
-            self._record(sub_op, attempts[shard_id][1].value,
-                         session.client_id, window=window)
+            if attempts[leg_id][0] != DUP:   # dup legs already recorded
+                self._record(sub_op, attempts[leg_id][1].value,
+                             session.client_id, window=window)
         return OpOutcome(
             value="OK",
             rtts=1 if all_fast else 2,
@@ -818,6 +1000,7 @@ class ShardedCluster:
         now: float = 0.0,
         on_message=None,
         spec: Optional[TxnSpec] = None,
+        wound_wait: bool = True,
     ) -> TxnOutcome:
         """Atomic cross-shard mini-transaction (RIFL-identified 2PC over the
         per-shard fast paths; see repro.core.txn).
@@ -826,10 +1009,30 @@ class ShardedCluster:
         replays an earlier attempt (same RIFL identities — idempotent);
         ``on_message(stage, shard_id, idx)`` is the crash-injection hook
         (raise CoordinatorCrash to kill the coordinator at that message).
+        ``wound_wait`` enables the deterministic intent-conflict policy
+        (lower txn_id wins; see TxnCoordinator) — pass False for the
+        pre-policy vote-NO-on-any-foreign-intent behavior.
         """
+        from .migration import SlotMoving
+
+        fresh_spec = spec is None
         if spec is None:
             spec = session.txn_spec(writes, reads)
-        coord = TxnCoordinator(self, session)
+        # Redirect before any PREPARE leaves: a leg pinned to a mid-handover
+        # slot would land on the wrong owner after the flip.  A spec this
+        # call just built is released (its identities never left the
+        # client); a replayed spec stays reserved.
+        try:
+            self.migration.check_keys(
+                k for part in spec.parts for k in part.keys
+            )
+        except SlotMoving:
+            if fresh_spec:
+                for part in spec.parts:
+                    session.abandon(part.prepare_rpc)
+                    session.abandon(part.decide_rpc)
+            raise
+        coord = TxnCoordinator(self, session, wound_wait=wound_wait)
         window = self._record.next_window()
         try:
             out = self._with_txn_resolution(
@@ -882,10 +1085,93 @@ class ShardedCluster:
         """Sweep and resolve every undecided intent on every shard."""
         return resolve_pending(self)
 
+    # ----------------------------------------- live reconfiguration (§3.6)
+    def start_migration(self, slots: Sequence[int], dst_shard: int):
+        """Begin moving ``slots`` to ``dst_shard``; returns SlotMigration
+        handles (one per donor) to drive stepwise — harnesses interleave
+        client traffic between ``step()`` calls.  The slots redirect
+        (SlotMoving) from this call until their handover commits."""
+        return self.migration.start(slots, dst_shard)
+
+    def migrate_slots(self, slots: Sequence[int], dst_shard: int):
+        """Move ``slots`` to ``dst_shard``, running each donor's handover to
+        completion.  Returns the MigrationReports."""
+        return self.migration.migrate(slots, dst_shard)
+
+    def add_shard(self) -> int:
+        """Grow the cluster by one (initially slot-less) shard group; move
+        load onto it with ``migrate_slots``/``rebalance``.  Returns the new
+        shard id."""
+        sid = len(self.shards)
+        group = ShardGroup(
+            shard_id=sid, config=self.config, alloc_id=self._node_id,
+            record=self._record, geometry=self.geometry,
+            witness_backend=self.witness_backend, **self._group_kwargs,
+        )
+        self.shards.append(group)
+        self.n_shards += 1
+        if sid >= self.router.n_shards:
+            self.router.n_shards = sid + 1
+        self._apply_ownership()
+        return sid
+
+    def remove_shard(self, shard_id: int) -> List[Any]:
+        """Drain a shard: live-migrate every slot it owns round-robin onto
+        the remaining shards, then retire the group.  Returns the
+        MigrationReports."""
+        victim = self.shards[shard_id]
+        if victim.retired:
+            raise ValueError(f"shard {shard_id} already retired")
+        targets = [g.shard_id for g in self.shards
+                   if not g.retired and g.shard_id != shard_id]
+        if not targets:
+            raise ValueError("cannot remove the last shard")
+        by_dst: Dict[int, List[int]] = {}
+        for i, slot in enumerate(self.router.slots_of_shard(shard_id)):
+            by_dst.setdefault(targets[i % len(targets)], []).append(slot)
+        reports = []
+        for dst, slots in sorted(by_dst.items()):
+            reports.extend(self.migrate_slots(slots, dst))
+        victim.retired = True
+        victim.owned_filter = lambda key: False
+        victim.master.owned_partition = victim.owned_filter
+        self.n_shards -= 1
+        return reports
+
+    def slot_loads(self) -> List[int]:
+        """Per-slot op counts summed across shard groups (the rebalance
+        policy's input)."""
+        loads = [0] * self.router.n_slots
+        for g in self.shards:
+            for s, c in g.slot_ops.items():
+                loads[s] += c
+        return loads
+
+    def rebalance(self, max_moves: int = 64,
+                  tolerance: float = 1.1) -> Dict[str, Any]:
+        """Hot-shard auto-split: plan moves from the per-slot op counters
+        (plan_rebalance) and execute them as live handovers.  Counters reset
+        afterwards so the next window measures the new placement.  Returns
+        {'moves': {dst: [slots]}, 'reports': [MigrationReport...]}."""
+        from .migration import plan_rebalance
+
+        live = [g.shard_id for g in self.shards if not g.retired]
+        moves = plan_rebalance(
+            self.slot_loads(), self.router.slot_map, live,
+            max_moves=max_moves, tolerance=tolerance,
+        )
+        reports = []
+        for dst, slots in sorted(moves.items()):
+            reports.extend(self.migrate_slots(slots, dst))
+        for g in self.shards:
+            g.slot_ops.clear()
+        return {"moves": moves, "reports": reports}
+
     # ------------------------------------------------------------------ admin
     def sync_all(self) -> None:
         for g in self.shards:
-            g.sync_now()
+            if not g.retired:
+                g.sync_now()
 
     def crash_master(self, shard_id: int) -> RecoveryReport:
         """Crash exactly one shard's master; only that shard's witnesses are
@@ -901,7 +1187,8 @@ class ShardedCluster:
         return report
 
     def crash_all(self) -> ClusterRecoveryReport:
-        reports = tuple(g.crash_master() for g in self.shards)
+        reports = tuple(g.crash_master() for g in self.shards
+                        if not g.retired)
         resolved = self.resolve_pending_txns()
         return ClusterRecoveryReport(
             per_shard=reports,
@@ -917,6 +1204,8 @@ class ShardedCluster:
         """Aggregate master stats across shards (per-shard in .shards[i])."""
         out: Dict[str, int] = {}
         for g in self.shards:
+            if g.retired:
+                continue
             for k, v in g.master.stats.items():
                 out[k] = out.get(k, 0) + v
         return out

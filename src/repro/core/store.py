@@ -74,6 +74,25 @@ class KVStore:
             part = spec.part_on(shard_id)
             self._drop_intent(spec.txn_id, part)
             return "ABORTED"
+        if t == OpType.MIGRATE_IN:
+            # Slot-handover absorb (repro.core.migration): install the moved
+            # key/value snapshot.  args = (kvs, rifl_records); the records
+            # are master-side state (Master._install_migrated), not store
+            # state.  Idempotent — a crash-resumed handover re-sends the
+            # full snapshot.
+            for key, value in op.args[0]:
+                self._set(key, value, now)
+            return "OK"
+        if t == OpType.MIGRATE_OUT:
+            # Donor side of the handover: durably drop the moved keys (the
+            # receiver owns them now; backups replay this on restore so a
+            # recovered donor never resurrects them).
+            n = 0
+            for key in op.keys:
+                if key in self._data:
+                    del self._data[key]
+                    n += 1
+            return n
         if t == OpType.SET:
             (key,) = op.keys
             (value,) = op.args
@@ -146,6 +165,10 @@ class KVStore:
         return None
 
     # -- introspection ------------------------------------------------------
+    def keys(self):
+        """All live keys (migration scans these to find a slot's residents)."""
+        return list(self._data.keys())
+
     def get(self, key: Any) -> Any:
         cur = self._data.get(key)
         return None if cur is None else cur.value

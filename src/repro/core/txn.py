@@ -241,13 +241,29 @@ class TxnCoordinator:
     """Drives one transaction through a ShardedCluster.
 
     The coordinator is client-session state: all RIFL identities come from
-    the session's per-shard spaces, so a re-run with the same spec is a
-    RIFL-dedup'd retry, not a new transaction.
+    the session's space, so a re-run with the same spec is a RIFL-dedup'd
+    retry, not a new transaction.
+
+    Intent-conflict policy (``wound_wait``, default on): instead of voting
+    NO on ANY foreign intent, conflicts order deterministically by txn_id —
+    **lower txn_id wins**.  A prepare that hits a HIGHER-id holder wounds it
+    through the safe resolve primitive (``resolve_txn`` commits the holder
+    iff it was already fully prepared, aborts-with-tombstones otherwise —
+    either way its locks drop) and retries; a prepare that hits a LOWER-id
+    holder waits-by-retry up to ``wait_retries`` times (the older holder
+    decides soon under live interleaving), then falls back to the vote-NO
+    abort.  Deadlock-free: in any conflict cycle the lowest txn wounds its
+    way through, and waits are bounded.
     """
 
-    def __init__(self, cluster, session) -> None:
+    def __init__(self, cluster, session, wound_wait: bool = True,
+                 wait_retries: int = 3) -> None:
         self.cluster = cluster
         self.session = session
+        self.wound_wait = wound_wait
+        self.wait_retries = wait_retries
+        self.wounds = 0          # holders resolved out of the way
+        self.waits = 0           # bounded prepare retries spent waiting
 
     def run(
         self,
@@ -276,6 +292,31 @@ class TxnCoordinator:
             n_shards=1,
         )
 
+    def _prepare_leg(self, spec: TxnSpec, part: TxnPart,
+                     now: float) -> "TxnVote":
+        """One PREPARE leg under the wound/wait policy (class docstring).
+        Retrying re-sends the SAME op (same prepare_rpc): a refused prepare
+        recorded nothing, so the identity is still fresh."""
+        group = self.cluster.shards[part.shard_id]
+        sub = self.session.session_for(part.shard_id)
+        vote = group.txn_prepare(sub, prepare_op(spec, part), now)
+        waited = 0
+        while (self.wound_wait and not vote.granted
+               and vote.error == "TXN_LOCKED" and vote.blocking is not None):
+            if spec.txn_id < vote.blocking.txn_id:
+                # We are older: wound the younger holder (safe — resolve
+                # commits it iff it was already fully prepared).
+                resolve_txn(self.cluster, vote.blocking)
+                self.wounds += 1
+            else:
+                # We are younger: wait-by-retry for the older holder.
+                if waited >= self.wait_retries:
+                    break
+                waited += 1
+                self.waits += 1
+            vote = group.txn_prepare(sub, prepare_op(spec, part), now)
+        return vote
+
     # -- the 2PC proper ------------------------------------------------------
     def _run_2pc(self, spec: TxnSpec, now: float, hook) -> TxnOutcome:
         votes: Dict[int, Any] = {}
@@ -284,10 +325,7 @@ class TxnCoordinator:
         abort_reason = None
         for idx, part in enumerate(spec.parts):
             hook(STAGE_PREPARE, part.shard_id, idx)
-            vote = self.cluster.shards[part.shard_id].txn_prepare(
-                self.session.session_for(part.shard_id),
-                prepare_op(spec, part), now,
-            )
+            vote = self._prepare_leg(spec, part, now)
             votes[part.shard_id] = vote
             if not vote.granted:
                 abort_reason = vote.error
@@ -330,3 +368,6 @@ class TxnVote:
     rtts: int = 1
     read_values: Tuple[Any, ...] = ()
     error: Optional[str] = None
+    # On a TXN_LOCKED refusal: the holder's spec, so the coordinator's
+    # wound/wait policy can order the conflict by txn_id.
+    blocking: Optional["TxnSpec"] = None

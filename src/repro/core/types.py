@@ -55,12 +55,18 @@ class OpType(enum.Enum):
     TXN_PREPARE = "TXN_PREPARE"   # participant: install intent + lock keys
     TXN_COMMIT = "TXN_COMMIT"     # participant: apply write-set, drop intent
     TXN_ABORT = "TXN_ABORT"       # participant: drop intent (or tombstone)
+    # Live reconfiguration (repro.core.migration): slot-handover transfer
+    # legs.  Issued only by the MigrationManager, never by clients; they ride
+    # the masters' ordinary log + backup-sync machinery so a moved slot's
+    # data (and its RIFL completion records) survive either side crashing.
+    MIGRATE_IN = "MIGRATE_IN"     # receiver: absorb (kvs, rifl records)
+    MIGRATE_OUT = "MIGRATE_OUT"   # donor: durably drop the moved keys
 
 
 # Which ops are updates (need durability) vs reads.
 UPDATE_OPS = {OpType.SET, OpType.INCR, OpType.HMSET, OpType.MSET, OpType.DEL,
               OpType.TXN, OpType.TXN_PREPARE, OpType.TXN_COMMIT,
-              OpType.TXN_ABORT}
+              OpType.TXN_ABORT, OpType.MIGRATE_IN, OpType.MIGRATE_OUT}
 
 # The 2PC leg ops (never issued by clients directly; the coordinator in
 # repro.core.txn drives them).

@@ -20,10 +20,12 @@ pure-jnp oracles in ref.py; the model-zoo code deliberately contains no
 Pallas so the dry-run roofline reflects real XLA numbers (DESIGN.md §4).
 """
 from .ops import (
+    DEFAULT_N_SLOTS,
     FastPathResult,
     TxnProbeResult,
     WitnessTable,
     conflict_scan,
+    default_slot_map,
     dispatch_count,
     fastpath_batch,
     keyhash2x32,
@@ -41,6 +43,7 @@ from .ops import (
 )
 
 __all__ = [
+    "DEFAULT_N_SLOTS", "default_slot_map",
     "FastPathResult", "TxnProbeResult", "WitnessTable", "conflict_scan",
     "keyhash2x32", "shard_route", "witness_gc", "witness_record",
     "witness_record_seq", "fastpath_batch", "txn_probe", "dispatch_count",

@@ -87,6 +87,29 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+# ---------------------------------------------------------------------------
+# Slot-table routing (live reconfiguration)
+# ---------------------------------------------------------------------------
+# Default size of the slot table: keys hash to one of DEFAULT_N_SLOTS slots
+# (mixed low lane mod n_slots) and a slot -> shard table names the owner.
+# Migration moves SLOTS between shards by editing the table — the hash never
+# changes, so only the gather array does.  Must match
+# repro.core.shard.N_SLOTS (the pure-Python mirror).
+DEFAULT_N_SLOTS = 256
+
+
+def default_slot_map(n_shards: int, n_slots: int = DEFAULT_N_SLOTS) -> np.ndarray:
+    """Round-robin slot -> shard table: slot i is owned by shard i % N.
+
+    For power-of-two shard counts that divide ``n_slots`` this reproduces
+    the pre-slot-map ``% n_shards`` placement exactly
+    ((h % n_slots) % n == h % n when n | n_slots).
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    return (np.arange(n_slots, dtype=np.int32) % n_shards).astype(np.int32)
+
+
 def _pad_to(x: jnp.ndarray, m: int, fill=0) -> Tuple[jnp.ndarray, int]:
     n = x.shape[0]
     pad = (-n) % m
@@ -209,15 +232,45 @@ def keyhash2x32(hi, lo, *, block: int = 1024, interpret: bool | None = None):
     return oh[:n], ol[:n]
 
 
-def shard_route(hi, lo, n_shards: int, *, block: int = 1024,
+@functools.partial(jax.jit, static_argnames=("n_slots", "block", "interpret"))
+def _shard_route_impl(hi, lo, slot_map, n_slots: int, block: int,
+                      interpret: bool):
+    _oh, ol = keyhash2x32_pallas(hi, lo, block=block, interpret=interpret)
+    slots = (ol % jnp.uint32(n_slots)).astype(jnp.int32)
+    return slot_map[slots]
+
+
+def shard_route(hi, lo, n_shards: int | None = None, *,
+                slot_map=None, n_slots: int = DEFAULT_N_SLOTS,
+                block: int = 1024,
                 interpret: bool | None = None) -> jnp.ndarray:
-    """Batched key -> shard placement: keyhash2x32 mix, low lane mod
-    ``n_shards``.  Must agree bit-for-bit with the pure-Python
-    ``repro.core.shard.KeyRouter`` (same fmix32 chain) so device-side routing
-    and protocol-side placement never disagree.  Returns [N] int32 shard ids.
+    """Batched key -> shard placement by SLOT-TABLE GATHER: keyhash2x32 mix,
+    low lane mod ``n_slots`` picks a slot, ``slot_map[slot]`` names the
+    shard.  Must agree bit-for-bit with the pure-Python
+    ``repro.core.shard.SlotRouter`` (same fmix32 chain, same table) so
+    device-side routing and protocol-side placement never disagree — on any
+    slot map, including mid-migration ones.  Returns [N] int32 shard ids.
+
+    ``slot_map`` is a traced array input, NOT a static arg: editing it (a
+    live slot handover) never recompiles.  With only ``n_shards`` given, the
+    round-robin ``default_slot_map`` is used — the mod-N compatibility
+    placement.
     """
-    _, ol = keyhash2x32(hi, lo, block=block, interpret=interpret)
-    return (ol % jnp.uint32(n_shards)).astype(jnp.int32)
+    if interpret is None:
+        interpret = not _on_tpu()
+    if slot_map is None:
+        if n_shards is None:
+            raise ValueError("shard_route needs n_shards or slot_map")
+        slot_map = default_slot_map(n_shards, n_slots)
+    slot_map = jnp.asarray(np.asarray(slot_map, np.int32))
+    n_slots = int(slot_map.shape[0])
+    _count_dispatch()
+    hi = jnp.asarray(hi, U32)
+    lo = jnp.asarray(lo, U32)
+    hp, n = _pad_to(hi, block)
+    lp, _ = _pad_to(lo, block)
+    out = _shard_route_impl(hp, lp, slot_map, n_slots, block, interpret)
+    return out[:n]
 
 
 def witness_record(table: WitnessTable, q_hi, q_lo,
@@ -304,14 +357,18 @@ class FastPathResult(NamedTuple):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_shards", "interpret", "tile_sets")
+    jax.jit, static_argnames=("n_slots", "interpret", "tile_sets")
 )
 def _fastpath_impl(table, w_hi, w_lo, w_valid, k_hi, k_lo, k_valid,
-                   n_shards: int, interpret: bool, tile_sets: int):
+                   slot_map, n_slots: int, interpret: bool, tile_sets: int):
     # Hash: bit-exact with the keyhash2x32 Pallas kernel (same fmix32 chain);
     # inlined here so XLA fuses it with the sort/segment prep.
     qh, ql = ref_keyhash2x32(k_hi, k_lo)
-    shard_ids = (ql % jnp.uint32(n_shards)).astype(jnp.int32)
+    # Slot-table routing: the gather is plain XLA fused around the single
+    # pallas_call; the map is a traced input, so a live slot handover (table
+    # edit) never recompiles this program.
+    slots = (ql % jnp.uint32(n_slots)).astype(jnp.int32)
+    shard_ids = slot_map[slots]
     S, _W = table.occ.shape
     qhi_f, qlo_f, sets_f, rstart, n_rounds, perm = _setpar_prep(
         S, qh, ql, k_valid
@@ -327,16 +384,19 @@ def _fastpath_impl(table, w_hi, w_lo, w_valid, k_hi, k_lo, k_valid,
 def fastpath_batch(
     table: WitnessTable, key_hi, key_lo,
     *, window_hi=None, window_lo=None, window_valid=None,
-    n_shards: int = 1, interpret: bool | None = None,
+    n_shards: int = 1, slot_map=None, n_slots: int = DEFAULT_N_SLOTS,
+    interpret: bool | None = None,
     tile_sets: int = DEFAULT_TILE_SETS,
 ) -> FastPathResult:
     """One fused device dispatch for a whole update batch.
 
     ``key_hi``/``key_lo`` are the RAW 64-bit keyhash lanes (types.keyhash
     split into uint32 halves); the op mixes them (keyhash2x32), derives shard
-    placement, resolves witness accept/reject via the set-parallel kernel,
-    and checks commutativity against the master's unsynced window — all in a
-    single jitted program containing a single pallas_call.
+    placement by slot-table gather (``slot_map``, or the round-robin default
+    for ``n_shards``; the map is a traced input, so live slot handovers
+    never recompile), resolves witness accept/reject via the set-parallel
+    kernel, and checks commutativity against the master's unsynced window —
+    all in a single jitted program containing a single pallas_call.
 
     The window arguments are MIXED lanes (as previously returned in
     ``FastPathResult.q_hi/q_lo``); omit them for an empty window.  Table
@@ -344,6 +404,10 @@ def fastpath_batch(
     """
     if interpret is None:
         interpret = not _on_tpu()
+    if slot_map is None:
+        slot_map = default_slot_map(n_shards, n_slots)
+    slot_map = np.asarray(slot_map, np.int32)
+    n_slots = int(slot_map.shape[0])
     _count_dispatch()
     key_hi = np.asarray(key_hi, np.uint32)
     key_lo = np.asarray(key_lo, np.uint32)
@@ -374,7 +438,7 @@ def fastpath_batch(
         w_val = np.concatenate([w_val, np.zeros((pad_u,), np.int32)])
     acc, con, shard_ids, qh, ql, new_table = _fastpath_impl(
         table, w_hi, w_lo, w_val, key_hi, key_lo, k_valid,
-        n_shards, interpret, tile_sets,
+        jnp.asarray(slot_map), n_slots, interpret, tile_sets,
     )
     return FastPathResult(
         acc[:B], con[:B], shard_ids[:B], qh[:B], ql[:B], new_table
@@ -433,6 +497,7 @@ def txn_probe(table: WitnessTable, key_hi, key_lo, own=None,
 
 __all__ = [
     "WitnessTable", "FastPathResult", "TxnProbeResult", "keyhash2x32",
+    "DEFAULT_N_SLOTS", "default_slot_map",
     "shard_route", "witness_record", "witness_record_seq", "witness_gc",
     "conflict_scan", "fastpath_batch", "txn_probe", "dispatch_count",
     "reset_dispatch_count", "ref_keyhash2x32", "ref_witness_record",

@@ -40,7 +40,8 @@ class CurpSessionStore:
     def __init__(self, f: int = 3, sync_batch: int = 50, seed: int = 0,
                  n_shards: int = 1,
                  geometry: Optional[WitnessGeometry] = None,
-                 witness_backend: str = "python") -> None:
+                 witness_backend: str = "python",
+                 n_slots: int = 256) -> None:
         # Sessions are hot keys by construction (one update per token), so we
         # enable the paper's §4.4 preemptive-sync heuristic: the master syncs
         # right after responding to an update of a recently-updated key,
@@ -49,29 +50,60 @@ class CurpSessionStore:
         self.cluster = ShardedCluster(
             n_shards=n_shards, f=f, sync_batch=sync_batch, seed=seed,
             hot_key_window=1e12, geometry=geometry,
-            witness_backend=witness_backend,
+            witness_backend=witness_backend, n_slots=n_slots,
         )
         self.client: ShardedClientSession = self.cluster.new_client()
         self.fast_commits = 0
         self.slow_commits = 0
         # Counted store-side so the numbers survive master failovers (the
         # per-shard Master.stats reset when recovery installs a new master).
-        self._commits_by_shard = [0] * n_shards
-        # Session placement is immutable, so memoize it: commit() runs per
-        # generated token and shouldn't re-run the routing hash every time.
-        self._shard_cache: Dict[str, int] = {}
+        self._commits_by_shard: Dict[int, int] = {
+            s: 0 for s in range(n_shards)
+        }
+        # Session placement is slot-map routing; memoize it per ROUTER
+        # VERSION — a live slot migration bumps the version, invalidating
+        # cached placements exactly like a client config refetch (§3.6).
+        self._shard_cache: Dict[str, Tuple[int, int]] = {}
 
     @staticmethod
     def _key(session_id: str) -> str:
         return f"session:{session_id}"
 
     def shard_of(self, session_id: str) -> int:
-        """Which master group owns this session (session-id hash routing)."""
-        shard = self._shard_cache.get(session_id)
-        if shard is None:
-            shard = self.cluster.shard_of(self._key(session_id))
-            self._shard_cache[session_id] = shard
+        """Which master group owns this session (slot-map routing, cached
+        per router version so live migrations invalidate the cache)."""
+        version = self.cluster.router.version
+        hit = self._shard_cache.get(session_id)
+        if hit is not None and hit[0] == version:
+            return hit[1]
+        shard = self.cluster.shard_of(self._key(session_id))
+        self._shard_cache[session_id] = (version, shard)
         return shard
+
+    def _count_commit(self, session_id: str) -> None:
+        shard = self.shard_of(session_id)
+        self._commits_by_shard[shard] = \
+            self._commits_by_shard.get(shard, 0) + 1
+
+    # -- live reconfiguration ---------------------------------------------------
+    def migrate_sessions(self, slots, dst_shard: int):
+        """Live-move the sessions living in ``slots`` to another master
+        group (repro.core.migration): commits keep flowing on untouched
+        slots throughout; the moved sessions' RIFL records travel with
+        them."""
+        return self.cluster.migrate_slots(slots, dst_shard)
+
+    def add_shard(self) -> int:
+        """Grow the serving store by one (initially empty) master group."""
+        sid = self.cluster.add_shard()
+        self.n_shards = self.cluster.n_shards
+        self._commits_by_shard.setdefault(sid, 0)
+        return sid
+
+    def rebalance(self, max_moves: int = 64):
+        """Hot-shard auto-split: shed the hottest sessions' slots off the
+        hottest master group (per-slot op counters -> plan_rebalance)."""
+        return self.cluster.rebalance(max_moves=max_moves)
 
     # -- write path -------------------------------------------------------------
     def commit(self, s: SessionState) -> None:
@@ -96,7 +128,7 @@ class CurpSessionStore:
         ]
         outs = self.cluster.update_batch(self.client, ops)
         for s, out in zip(states, outs):
-            self._commits_by_shard[self.shard_of(s.session_id)] += 1
+            self._count_commit(s.session_id)
             if out.fast_path:
                 self.fast_commits += 1
             else:
@@ -122,7 +154,7 @@ class CurpSessionStore:
         ]
         out = self.cluster.txn(self.client, writes)
         for s in states:
-            self._commits_by_shard[self.shard_of(s.session_id)] += 1
+            self._count_commit(s.session_id)
             if out.fast_path:
                 self.fast_commits += 1
             else:
@@ -152,4 +184,5 @@ class CurpSessionStore:
 
     # -- stats -----------------------------------------------------------------------
     def per_shard_commits(self) -> List[int]:
-        return list(self._commits_by_shard)
+        return [self._commits_by_shard.get(s, 0)
+                for s in range(len(self.cluster.shards))]

@@ -33,6 +33,10 @@ class ServeConfig:
     f: int = 3
     sync_batch: int = 50
     n_shards: int = 1          # session partitions (one master group each)
+    # Slot-table size for the session router: the unit of live migration
+    # (CurpSessionStore.migrate_sessions / rebalance moves slots between
+    # master groups with no serving pause on untouched slots).
+    n_slots: int = 256
     # Witness table shape (S x W), threaded down to the Pallas kernels.
     witness_geometry: WitnessGeometry = field(default_factory=WitnessGeometry)
     # "python" (protocol-reference slot walk) or "device" (set-parallel
@@ -56,7 +60,8 @@ class CurpServeDriver:
         self.store = CurpSessionStore(f=serve.f, sync_batch=serve.sync_batch,
                                       n_shards=serve.n_shards,
                                       geometry=serve.witness_geometry,
-                                      witness_backend=serve.witness_backend)
+                                      witness_backend=serve.witness_backend,
+                                      n_slots=serve.n_slots)
         self.sessions: Dict[str, SessionState] = {}
         self._decode = jax.jit(
             lambda p, b, c: decode_step(cfg, p, b, c)

@@ -7,14 +7,19 @@ scenarios (multi-master, per-shard witnesses) run via run_sharded_scenario.
 from .curp_sim import (
     TXN_CRASH_STAGES,
     BatchedRunResult,
+    MigrationScenarioResult,
     ScenarioResult,
     ShardedScenarioResult,
     ShardedSimCluster,
     SimCluster,
+    SimTxnClient,
+    TimedTxnResult,
     TxnScenarioResult,
     run_batched_throughput,
+    run_migration_scenario,
     run_scenario,
     run_sharded_scenario,
+    run_timed_txn_scenario,
     run_txn_crash_scenario,
 )
 from .linearizability import check_linearizable, check_linearizable_strict
@@ -34,6 +39,8 @@ __all__ = [
     "ShardedSimCluster", "SimCluster", "run_batched_throughput",
     "run_scenario", "run_sharded_scenario",
     "TXN_CRASH_STAGES", "TxnScenarioResult", "run_txn_crash_scenario",
+    "MigrationScenarioResult", "run_migration_scenario",
+    "SimTxnClient", "TimedTxnResult", "run_timed_txn_scenario",
     "check_linearizable", "check_linearizable_strict",
     "Network", "Node", "Sim", "DEFAULT", "SimParams",
     "BatchedWorkload", "ShardSkewedWorkload", "TxnWorkload",

@@ -145,7 +145,13 @@ class TestPerShardProtocolMatrix:
 
 # ---------------------------------------------------------- cross-shard mset
 class TestCrossShardMset:
-    def test_split_spans_shards_with_per_shard_rpc_ids(self):
+    def test_split_spans_shards_with_globally_unique_rpc_ids(self):
+        """Sub-ops split per shard, each under a GLOBALLY-unique rpc_id from
+        the client's single shared RIFL space.  (Pre-migration the client
+        kept one sequence space per shard, so the same (client_id, seq)
+        named different ops on different shards — fatally ambiguous once a
+        completion record can MIGRATE to another shard with its key's slot;
+        see ShardedClientSession.)"""
         c = ShardedCluster(n_shards=N_SHARDS, f=3)
         cl = c.new_client()
         kvs = [(key_on_shard(c.router, s, tag=f"m{s}_"), s)
@@ -155,13 +161,12 @@ class TestCrossShardMset:
         for shard_id, sub in parts.items():
             assert sub.op_type is OpType.MSET
             assert all(c.router.shard_of(k) == shard_id for k in sub.keys)
-        # per-shard RPC-id spaces: same client, INDEPENDENT seqs — every
-        # shard's first sub-op is seq 1 of that shard's space (a shared
-        # space would have handed out 1..N across the sub-ops)
-        assert all(sub.rpc_id == (cl.client_id, 1) for sub in parts.values())
+        ids = [sub.rpc_id for sub in parts.values()]
+        assert len(set(ids)) == len(ids)            # no id shared by shards
+        assert all(rpc[0] == cl.client_id for rpc in ids)
         parts2 = cl.mset_parts(kvs)
-        assert all(sub.rpc_id == (cl.client_id, 2)
-                   for sub in parts2.values())
+        ids2 = [sub.rpc_id for sub in parts2.values()]
+        assert not set(ids) & set(ids2)             # fresh attempt, fresh ids
 
     def test_fast_path_when_all_shards_accept(self):
         c = ShardedCluster(n_shards=N_SHARDS, f=3)
