@@ -44,6 +44,16 @@ def main(n_ops: int = 800) -> dict:
             m = statistics.median(r.update_latencies)
             rows.append({"cmd": kind, "series": label, "median_us": m})
             derived[f"{kind}_{label}"] = m
+    # Command types are priced differently (SimParams.op_cost_extra_us);
+    # identical medians across commands would mean the per-op cost model
+    # regressed to the flat master_update_cost_us again.
+    for label in ("nondurable", "curp_1w", "curp_2w"):
+        incr, st, hm = (derived[f"{k}_{label}"]
+                        for k in ("INCR", "SET", "HMSET"))
+        assert incr < st < hm, (
+            f"fig10 {label}: expected INCR < SET < HMSET medians, "
+            f"got {incr} / {st} / {hm}"
+        )
     emit(rows, "fig10: latency by command type (us)")
     print("derived:", derived)
     return derived

@@ -40,6 +40,22 @@ def write_bench_json(results, path: pathlib.Path = BENCH_JSON) -> None:
             figures = dict(prior.get("figures", {}))
         except (json.JSONDecodeError, OSError):
             figures = {}
+    # Perf trajectory: for every numeric metric that already had a recorded
+    # value, keep the previous number next to the new one so a driver can
+    # read deltas (e.g. fig_fastpath proto_device_kops across PRs) without
+    # diffing git history.
+    deltas = {}
+    for name, _dt, derived in results:
+        prev = figures.get(name, {}).get("derived", {})
+        moved = {
+            k: {"prev": prev[k], "now": _jsonable(v)}
+            for k, v in derived.items()
+            if k in prev and isinstance(prev[k], (int, float))
+            and isinstance(_jsonable(v), (int, float))
+            and _jsonable(v) != prev[k]
+        }
+        if moved:
+            deltas[name] = moved
     figures.update({
         name: {
             "us_per_call": dt,
@@ -51,10 +67,14 @@ def write_bench_json(results, path: pathlib.Path = BENCH_JSON) -> None:
         "schema": 1,
         "unix_time": time.time(),
         "figures": figures,
+        "deltas": deltas,
     }
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     print(f"wrote {path} ({len(results)} updated, "
           f"{len(figures) - len(results)} preserved)")
+    fp = deltas.get("fig_fastpath", {}).get("proto_device_kops")
+    if fp:
+        print(f"proto_device_kops: {fp['prev']:.2f} -> {fp['now']:.2f}")
 
 
 def main() -> None:

@@ -7,7 +7,10 @@
 # The smoke runs use tiny op counts: they validate that the sharded,
 # fused-fast-path, transaction, and live-migration benchmarks still run
 # end-to-end (fig_scaling stays monotonic; fig_fastpath keeps its bit-exact
-# parity assertion and its 1-dispatch-per-batch invariant; fig_txn keeps its
+# parity assertions — set-parallel kernel vs oracle AND device witness vs
+# Python witness on the dup/stale-gc/multi-key failure paths — plus its
+# 1-dispatch-per-kernel-batch and 1-dispatch-per-cluster-batch invariants
+# (single- and cross-shard, device backend); fig_txn keeps its
 # crash-atomicity, 1-dispatch transactional-probe, single-shard fast-path,
 # fan-out-beats-sequential, and wound/wait-cuts-aborts assertions;
 # fig_migration keeps its zero-lost-writes, strict-linearizability,

@@ -1,48 +1,58 @@
 """Kernel-backed CURP witness: the accept/reject hot path runs on device.
 
 ``DeviceWitness`` is a drop-in for :class:`repro.core.witness.Witness` whose
-conflict/capacity decisions come from the Pallas set-parallel witness table
-(repro.kernels): one ``record_batch`` call is ONE fused kernel dispatch for
-the whole batch (keyhash2x32 mix -> set-parallel record), instead of a Python
-slot walk per op.  A small host-side mirror (keyhash -> (rpc_id, Op, age))
-carries the protocol metadata the table doesn't hold — recovery replay data,
-RIFL-duplicate idempotence, and §4.5 gc-age suspicion — so the semantics
-match the Python reference witness:
+conflict/capacity decisions come from the Pallas witness kernels
+(repro.kernels).  Since the gang refactor the kernel table holds MORE than
+the keyhash lanes: every slot carries the recording op's RIFL identity
+(rpc_hi/rpc_lo) and a §4.5 gc-age counter, so
 
   * duplicate record retries (same rpc_id, same key) are accepted
-    idempotently: the kernel rejects the same-key probe, and the mirror
-    recognises the rpc and upgrades the verdict;
-  * gc entries whose rpc_id doesn't match the held record are ignored (the
-    mirror filters them before the gc kernel runs), so a stale gc can never
-    drop a newer record for the same key;
-  * survivors age per gc round and are reported as suspected uncollected
-    garbage once they reach ``SUSPECT_AGE``.
+    idempotently IN-KERNEL (reason code 2),
+  * gc entries whose rpc_id doesn't match the held record are ignored
+    IN-KERNEL (the clear requires key AND rpc to match), so a stale gc can
+    never drop a newer same-key record,
+  * survivors age in-kernel per gc round.
+
+The host mirror (mixed keyhash lanes -> (rpc_id, Op)) is demoted to a
+RECOVERY-TIME VIEW: it stores the Op objects the device cannot hold (replay
+data for ``get_recovery_data``), answers ``commutes_with_all`` for backup
+reads, and carries the suspect ages reported to the master — it is never
+consulted to decide accept/reject/gc outcomes on the hot path.
+
+Many witness instances share one device-resident **gang**
+(:class:`WitnessGang`): all shards' x all witnesses' tables stacked into a
+single [n_lanes*S, W] array, so a routed cross-shard batch records at every
+target lane in ONE dispatch (repro.kernels.ops.gang_fastpath_batch) and a
+sync round gc's every witness of a shard in ONE dispatch (``gc_many``).
 
 Set placement differs from the Python witness (keyhash2x32-mixed low lane
 masked by S-1, vs ``kh % n_sets`` on the raw 64-bit hash), so occupancy
 patterns differ between backends; accept/reject *semantics* do not.
 
-Multi-key ops take an all-or-nothing path through the transactional probe
-kernel (repro.kernels.txn_probe): the op's distinct keys resolve in ONE
-dispatch whether the op accepts or rejects — the kernel computes every key's
-conflict/capacity verdict against the pre-op table and only writes when the
-whole op accepted, so there is never an accepted prefix to roll back.  Keys
-already held under the op's own rpc_id are passed as ``own`` bits (resolved
-from the host mirror) and count as placed, not as conflicts.  The
-pre-refactor record-then-rollback scheme (2 dispatches on the reject path)
-is kept as ``_record_keys_rollback`` for benchmarks/fig_txn.py's old-vs-new
-comparison.
+Multi-key ops resolve all-or-nothing through the grouped record kernel
+(repro.kernels.gang_record_groups): every key's conflict/capacity verdict is
+computed against the pre-op table and writes happen only when the whole op
+accepted — ONE dispatch whether the op accepts or rejects, for a whole batch
+of multi-key ops at once.  The pre-refactor record-then-rollback scheme
+(2 dispatches on the reject path) is kept as ``_record_keys_rollback`` for
+benchmarks/fig_txn.py's old-vs-new comparison.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .types import GcResp, Op, RecordStatus, RpcId, WitnessMode
 
 _M32 = 0xFFFFFFFF
+
+# Reason codes emitted by the gang kernels (repro.kernels.ref).
+_R_INSERT = 1
+_R_DUP = 2
+_R_CONFLICT = 3
+_R_FULL = 4
 
 
 @dataclass
@@ -58,49 +68,114 @@ def _lanes(khs) -> Tuple[np.ndarray, np.ndarray]:
     return hi, lo
 
 
-def _pad_repeat(a: np.ndarray) -> np.ndarray:
-    """Pad to the record path's jit-cache bucket size by repeating the first
-    element — gc clears are idempotent, so repeats are semantically free
-    while keeping the gc kernel's jit cache to O(log G) entries."""
-    from repro.kernels.ops import _bucket
+def _rpc_lanes(rpc_ids: Sequence[RpcId]) -> Tuple[np.ndarray, np.ndarray]:
+    hi = np.fromiter((r[0] & _M32 for r in rpc_ids), np.uint32, len(rpc_ids))
+    lo = np.fromiter((r[1] & _M32 for r in rpc_ids), np.uint32, len(rpc_ids))
+    return hi, lo
 
-    b = _bucket(len(a))
-    if b == len(a):
-        return a
-    return np.concatenate([a, np.full(b - len(a), a[0], a.dtype)])
+
+class WitnessGang:
+    """Device-resident stack of witness tables (one lane per instance).
+
+    Owns the single :class:`repro.kernels.GangTable` that every attached
+    ``DeviceWitness`` records into; lanes are allocated on ``start`` and
+    recycled on ``end``.  The lane count grows by doubling (a host-side
+    concat of zero rows) so the flattened row space stays a power of two —
+    the set-parallel kernel's tiling requirement.
+    """
+
+    def __init__(self, n_sets: int = 1024, n_ways: int = 4,
+                 n_lanes: int = 4) -> None:
+        from repro.kernels import GangTable   # deferred: keeps jax import lazy
+
+        assert n_lanes & (n_lanes - 1) == 0, "n_lanes must be a power of two"
+        self.n_sets = n_sets
+        self.n_ways = n_ways
+        self.n_lanes = n_lanes
+        self.table = GangTable.empty(n_sets, n_ways, n_lanes)
+        self._free = list(range(n_lanes - 1, -1, -1))
+        self._dirty: set = set()
+
+    def alloc(self) -> int:
+        if not self._free:
+            self._grow()
+        lane = self._free.pop()
+        if lane in self._dirty:
+            self._zero(lane)
+            self._dirty.discard(lane)
+        return lane
+
+    def free(self, lane: int) -> None:
+        self._dirty.add(lane)
+        self._free.append(lane)
+
+    def _grow(self) -> None:
+        import jax.numpy as jnp
+
+        from repro.kernels import GangTable
+
+        old = self.n_lanes
+        self.n_lanes = old * 2
+        pad = ((0, old * self.n_sets), (0, 0))
+        self.table = GangTable(*(
+            jnp.asarray(np.pad(np.asarray(a), pad)) for a in self.table
+        ))
+        self._free.extend(range(self.n_lanes - 1, old - 1, -1))
+
+    def _zero(self, lane: int) -> None:
+        # Only occupancy and age gate kernel decisions; stale key/rpc lanes
+        # under occ == 0 are never read.
+        import jax.numpy as jnp
+
+        occ = np.asarray(self.table.occ).copy()
+        age = np.asarray(self.table.age).copy()
+        rows = slice(lane * self.n_sets, (lane + 1) * self.n_sets)
+        occ[rows] = 0
+        age[rows] = 0
+        self.table = self.table._replace(
+            occ=jnp.asarray(occ), age=jnp.asarray(age)
+        )
 
 
 class DeviceWitness:
-    """One witness instance serving one master, table state on device."""
+    """One witness instance serving one master; table state lives in one
+    lane of a (possibly shared) device-resident gang."""
 
     SUSPECT_AGE = 3
 
-    def __init__(self, n_sets: int = 1024, n_ways: int = 4) -> None:
-        from repro.kernels import WitnessTable  # deferred: keeps jax import lazy
-
+    def __init__(self, n_sets: int = 1024, n_ways: int = 4,
+                 gang: Optional[WitnessGang] = None) -> None:
         self.n_sets = n_sets
         self.n_ways = n_ways
         self.mode = WitnessMode.ENDED
         self.master_id: Optional[int] = None
-        self._table_cls = WitnessTable
-        self._table = None
-        # keyhash -> protocol metadata for every occupied slot.
-        self._held: Dict[int, _Held] = {}
+        self.gang = gang          # shared gang, or private (made on start)
+        self.lane: Optional[int] = None
+        # mixed (q_hi, q_lo) -> protocol metadata: the recovery-time view.
+        self._held: Dict[Tuple[int, int], _Held] = {}
         self.stats = {"accepts": 0, "rejects_conflict": 0, "rejects_full": 0,
                       "rejects_mode": 0, "gc_drops": 0, "kernel_batches": 0}
 
     # -- lifecycle (Fig. 4: coordinator -> witness) ---------------------------
     def start(self, master_id: int) -> bool:
+        if self.gang is None:
+            self.gang = WitnessGang(self.n_sets, self.n_ways, n_lanes=1)
+        elif (self.gang.n_sets, self.gang.n_ways) != (self.n_sets,
+                                                      self.n_ways):
+            raise ValueError("witness geometry does not match its gang")
+        if self.lane is None:
+            self.lane = self.gang.alloc()
         self.master_id = master_id
         self.mode = WitnessMode.NORMAL
-        self._table = self._table_cls.empty(self.n_sets, self.n_ways)
         self._held = {}
         return True
 
     def end(self) -> None:
         self.mode = WitnessMode.ENDED
         self.master_id = None
-        self._table = None
+        if self.lane is not None:
+            self.gang.free(self.lane)
+            self.lane = None
         self._held = {}
 
     # -- client -> witness ----------------------------------------------------
@@ -108,64 +183,88 @@ class DeviceWitness:
         self, master_id: int, key_hashes: Tuple[int, ...], rpc_id: RpcId,
         request: Op,
     ) -> RecordStatus:
-        """Single-op record: a batch of one (multi-key ops roll back the
-        accepted prefix if any key rejects)."""
+        """Single-op record: a group of one through the grouped kernel."""
         if self.mode is not WitnessMode.NORMAL or master_id != self.master_id:
             self.stats["rejects_mode"] += 1
             return RecordStatus.REJECTED
         return self._record_keys(key_hashes, rpc_id, request)
 
     def record_batch(self, master_id: int, ops: List[Op]) -> List[RecordStatus]:
-        """Whole-batch record: ONE fused kernel dispatch resolves every
-        single-key op's accept bit.  Multi-key ops take the all-or-nothing
-        per-op path; batch order is preserved exactly (consecutive
-        single-key runs batch together, so an all-single-key batch — the
-        batched client path's common case — is still one dispatch)."""
-        from repro.kernels import fastpath_batch
+        """Whole-batch record, ONE kernel dispatch, any mix of group sizes.
 
+        All-single-key batches (the batched client path's common case) go
+        through the set-parallel kernel; batches containing multi-key ops go
+        through the grouped all-or-nothing kernel.  Batch order is preserved
+        exactly in both (the set-parallel prep keeps per-set order; the
+        grouped kernel is sequential in group index)."""
         if self.mode is not WitnessMode.NORMAL or master_id != self.master_id:
             self.stats["rejects_mode"] += len(ops)
             return [RecordStatus.REJECTED] * len(ops)
-        out: List[RecordStatus] = [RecordStatus.REJECTED] * len(ops)
-        i = 0
-        while i < len(ops):
-            if len(ops[i].key_hashes()) != 1:
-                out[i] = self._record_keys(
-                    ops[i].key_hashes(), ops[i].rpc_id, ops[i]
-                )
-                i += 1
-                continue
-            j = i
-            while j < len(ops) and len(ops[j].key_hashes()) == 1:
-                j += 1
-            khs = [op.key_hashes()[0] for op in ops[i:j]]
+        if not ops:
+            return []
+        from repro.kernels import gang_record
+
+        if any(len(op.key_hashes()) != 1 for op in ops):
+            return self._record_groups(ops)
+        khs = [op.key_hashes()[0] for op in ops]
+        hi, lo = _lanes(khs)
+        rhi, rlo = _rpc_lanes([op.rpc_id for op in ops])
+        lanes = np.full(len(ops), self.lane, np.int32)
+        rsn, qh, ql, table = gang_record(
+            self.gang.table, self.n_sets, hi, lo, lanes, rhi, rlo
+        )
+        self.gang.table = table
+        self.stats["kernel_batches"] += 1
+        return [
+            self._settle(int(rsn[i]), [(int(qh[i]), int(ql[i]))],
+                         ops[i].rpc_id, ops[i])
+            for i in range(len(ops))
+        ]
+
+    def _record_groups(self, ops: List[Op]) -> List[RecordStatus]:
+        """Batch of (possibly multi-key) ops via the grouped kernel: every
+        op resolves all-or-nothing, whole batch in ONE dispatch."""
+        from repro.kernels import gang_record_groups
+
+        groups = [op.key_hashes() for op in ops]
+        G = len(groups)
+        K = max(len(g) for g in groups)
+        khi = np.zeros((G, K), np.uint32)
+        klo = np.zeros((G, K), np.uint32)
+        kval = np.zeros((G, K), np.int32)
+        for g, khs in enumerate(groups):
             hi, lo = _lanes(khs)
-            res = fastpath_batch(self._table, hi, lo)
-            self._table = res.table
-            self.stats["kernel_batches"] += 1
-            accepted = np.asarray(res.accepted)
-            for k, idx in enumerate(range(i, j)):
-                out[idx] = self._settle(
-                    khs[k], bool(accepted[k]), ops[idx].rpc_id, ops[idx]
-                )
-            i = j
+            khi[g, :len(khs)] = hi
+            klo[g, :len(khs)] = lo
+            kval[g, :len(khs)] = 1
+        rhi, rlo = _rpc_lanes([op.rpc_id for op in ops])
+        lanes = np.full(G, self.lane, np.int32)
+        res = gang_record_groups(
+            self.gang.table, self.n_sets, khi, klo, kval, lanes, rhi, rlo
+        )
+        self.gang.table = res.table
+        self.stats["kernel_batches"] += 1
+        out = []
+        for g, op in enumerate(ops):
+            keys = [(int(res.q_hi[g, k]), int(res.q_lo[g, k]))
+                    for k in range(len(groups[g]))]
+            out.append(self._settle(int(res.reasons[g]), keys,
+                                    op.rpc_id, op))
         return out
 
-    def _settle(self, kh: int, accepted: bool, rpc_id: RpcId,
-                request: Op) -> RecordStatus:
-        """Fold a kernel accept bit into protocol-level status + mirror."""
-        if accepted:
-            self._held[kh] = _Held(rpc_id, request)
+    def _settle(self, reason: int, keys: List[Tuple[int, int]],
+                rpc_id: RpcId, request: Op) -> RecordStatus:
+        """Fold a kernel reason code into protocol status + mirror + stats.
+
+        The mirror write mirrors the Python reference's slot overwrite: on
+        any accept (fresh insert or idempotent dup) every key's entry is
+        re-stamped with age 0."""
+        if reason in (_R_INSERT, _R_DUP):
+            for key in keys:
+                self._held[key] = _Held(rpc_id, request)
             self.stats["accepts"] += 1
             return RecordStatus.ACCEPTED
-        held = self._held.get(kh)
-        if held is not None and held.rpc_id == rpc_id:
-            # Duplicate record RPC (client retry): idempotent accept; the
-            # table already holds the key.
-            held.gc_age = 0
-            self.stats["accepts"] += 1
-            return RecordStatus.ACCEPTED
-        if held is not None:
+        if reason == _R_CONFLICT:
             self.stats["rejects_conflict"] += 1
         else:
             self.stats["rejects_full"] += 1
@@ -173,85 +272,64 @@ class DeviceWitness:
 
     def _record_keys(self, key_hashes: Tuple[int, ...], rpc_id: RpcId,
                      request: Op) -> RecordStatus:
-        """All-or-nothing multi-key record via the transactional probe
-        kernel: ONE dispatch whether the op accepts or rejects (the kernel
-        leaves the table bit-identical on reject, so no rollback gc)."""
-        from repro.kernels import txn_probe
+        """All-or-nothing multi-key record: ONE grouped-kernel dispatch
+        whether the op accepts or rejects (the kernel leaves the table
+        bit-identical on reject, so no rollback gc).  Dup/conflict verdicts
+        come from the kernel-held rpc lanes — no host mirror input."""
+        from repro.kernels import gang_record_groups
 
-        # A key repeated within ONE op occupies one slot and trivially
-        # commutes with itself (Python Witness semantics): probe each
-        # distinct key once, in first-occurrence order.
-        khs = list(dict.fromkeys(key_hashes))
+        khs = list(key_hashes)
         hi, lo = _lanes(khs)
-        # Host mirror resolves RIFL-retry idempotence BEFORE the dispatch: a
-        # key already held under this exact rpc_id is an expected hit
-        # (§3.2.2 duplicate record), not a conflict.
-        own = np.fromiter(
-            (1 if (h := self._held.get(kh)) is not None
-             and h.rpc_id == rpc_id else 0 for kh in khs),
-            np.int32, len(khs),
+        res = gang_record_groups(
+            self.gang.table, self.n_sets,
+            hi[None, :], lo[None, :], np.ones((1, len(khs)), np.int32),
+            np.array([self.lane], np.int32),
+            np.array([rpc_id[0] & _M32], np.uint32),
+            np.array([rpc_id[1] & _M32], np.uint32),
         )
-        res = txn_probe(self._table, hi, lo, own)
-        self._table = res.table
+        self.gang.table = res.table
         self.stats["kernel_batches"] += 1
-        if res.accepted:
-            for kh, o in zip(khs, own):
-                if o:
-                    self._held[kh].gc_age = 0
-                else:
-                    self._held[kh] = _Held(rpc_id, request)
-            self.stats["accepts"] += 1
-            return RecordStatus.ACCEPTED
-        if any(
-            (h := self._held.get(kh)) is not None and h.rpc_id != rpc_id
-            for kh in khs
-        ):
-            self.stats["rejects_conflict"] += 1
-        else:
-            self.stats["rejects_full"] += 1
-        return RecordStatus.REJECTED
+        keys = [(int(res.q_hi[0, k]), int(res.q_lo[0, k]))
+                for k in range(len(khs))]
+        return self._settle(int(res.reasons[0]), keys, rpc_id, request)
 
     def _record_keys_rollback(self, key_hashes: Tuple[int, ...], rpc_id: RpcId,
                               request: Op) -> RecordStatus:
         """Pre-refactor record-then-rollback scheme, kept only for the
-        old-vs-new dispatch comparison in benchmarks/fig_txn.py: the batch
-        record dispatch is followed by a gc dispatch whenever a partial
-        accept must be rolled back (2 dispatches on the reject path)."""
-        from repro.kernels import fastpath_batch, witness_gc
+        old-vs-new dispatch comparison in benchmarks/fig_txn.py: the keys
+        record individually (set-parallel dispatch) and any accepted prefix
+        is rolled back by a second gc dispatch when the op rejects."""
+        from repro.kernels import gang_gc, gang_record
 
         khs = list(dict.fromkeys(key_hashes))
         hi, lo = _lanes(khs)
-        res = fastpath_batch(self._table, hi, lo)
-        acc = np.asarray(res.accepted)
-        self.stats["kernel_batches"] += 1
-        ok = all(
-            bool(a)
-            or ((h := self._held.get(kh)) is not None and h.rpc_id == rpc_id)
-            for kh, a in zip(khs, acc)
+        K = len(khs)
+        lanes = np.full(K, self.lane, np.int32)
+        rhi = np.full(K, rpc_id[0] & _M32, np.uint32)
+        rlo = np.full(K, rpc_id[1] & _M32, np.uint32)
+        rsn, qh, ql, table = gang_record(
+            self.gang.table, self.n_sets, hi, lo, lanes, rhi, rlo
         )
+        self.stats["kernel_batches"] += 1
+        ok = all(int(r) in (_R_INSERT, _R_DUP) for r in rsn)
         if ok:
-            self._table = res.table
-            for kh, a in zip(khs, acc):
-                if a:
-                    self._held[kh] = _Held(rpc_id, request)
-                else:
-                    self._held[kh].gc_age = 0
+            self.gang.table = table
+            for k in range(K):
+                self._held[(int(qh[k]), int(ql[k]))] = _Held(rpc_id, request)
             self.stats["accepts"] += 1
             return RecordStatus.ACCEPTED
-        # Roll back any accepted prefix (the second dispatch on reject).
-        table = res.table
-        if any(bool(a) for a in acc):
-            keep = acc.astype(bool)
-            table = witness_gc(
-                table,
-                _pad_repeat(np.asarray(res.q_hi)[keep]),
-                _pad_repeat(np.asarray(res.q_lo)[keep]),
+        # Roll back freshly inserted keys (the second dispatch on reject);
+        # dup hits predate this op and must survive.  No aging: a rollback
+        # is not a §4.5 gc round.
+        ins = [k for k in range(K) if int(rsn[k]) == _R_INSERT]
+        if ins:
+            _clr, table = gang_gc(
+                table, self.n_sets,
+                qh[ins], ql[ins], rhi[ins], rlo[ins], lanes[ins],
+                np.zeros(self.gang.n_lanes, np.int32), do_age=False,
             )
-        self._table = table
-        if any(
-            (h := self._held.get(kh)) is not None and h.rpc_id != rpc_id
-            for kh in khs
-        ):
+        self.gang.table = table
+        if any(int(r) == _R_CONFLICT for r in rsn):
             self.stats["rejects_conflict"] += 1
         else:
             self.stats["rejects_full"] += 1
@@ -259,26 +337,24 @@ class DeviceWitness:
 
     # -- master -> witness ----------------------------------------------------
     def gc(self, entries: Tuple[Tuple[int, RpcId], ...]) -> GcResp:
-        """Drop synced records (one gc kernel dispatch); report suspects."""
-        from repro.kernels import witness_gc
-
-        from .shard import mix2x32
-
+        """Drop synced records (one gang gc dispatch); report suspects."""
         if self.mode is not WitnessMode.NORMAL:
             return GcResp(stale_requests=())
-        # The mirror filters entries to those actually held under the synced
-        # rpc_id — a stale gc can never drop a newer same-key record.
-        drop = [kh for kh, rpc_id in entries
-                if (h := self._held.get(kh)) is not None and h.rpc_id == rpc_id]
-        if drop:
-            mixed = [mix2x32((kh >> 32) & _M32, kh & _M32) for kh in drop]
-            mh = _pad_repeat(np.asarray([m[0] for m in mixed], np.uint32))
-            ml = _pad_repeat(np.asarray([m[1] for m in mixed], np.uint32))
-            self._table = witness_gc(self._table, mh, ml)
-            for kh in drop:
-                del self._held[kh]
-            self.stats["gc_drops"] += len(drop)
-        # Age survivors; collect suspects (§4.5), dedup by rpc.
+        resps = gc_many([self], entries)
+        return resps[0]
+
+    def _apply_gc(self, keys: List[Tuple[int, int]],
+                  rpc_ids: List[RpcId], cleared) -> GcResp:
+        """Fold per-entry cleared bits into mirror + stats; age survivors
+        host-side for suspect reporting (the kernel ages its lanes too —
+        that state drives device-side suspicion on TPU)."""
+        for (key, rpc_id, clr) in zip(keys, rpc_ids, cleared):
+            if not clr:
+                continue
+            held = self._held.get(key)
+            if held is not None and held.rpc_id == rpc_id:
+                del self._held[key]
+            self.stats["gc_drops"] += 1
         stale: List[Op] = []
         seen: set = set()
         for held in self._held.values():
@@ -302,8 +378,64 @@ class DeviceWitness:
     def commutes_with_all(self, key_hashes: Tuple[int, ...]) -> bool:
         if self.mode is not WitnessMode.NORMAL:
             return False
-        return all(kh not in self._held for kh in key_hashes)
+        if not key_hashes:
+            return True
+        from repro.kernels import np_keyhash2x32
+
+        hi, lo = _lanes(list(key_hashes))
+        qh, ql = np_keyhash2x32(hi, lo)
+        return all(
+            (int(qh[i]), int(ql[i])) not in self._held
+            for i in range(len(key_hashes))
+        )
 
     @property
     def occupancy(self) -> int:
         return len(self._held)
+
+
+def gc_many(witnesses: Sequence[DeviceWitness],
+            entries: Tuple[Tuple[int, RpcId], ...]) -> List[GcResp]:
+    """Gc the same sync batch at MANY witnesses of one gang in ONE dispatch.
+
+    Entries are lane-expanded (every witness gets its own copy targeting its
+    lane) and deduplicated per (key, rpc) — the Python reference clears a
+    slot once however many times the pair appears.  Aging covers exactly
+    the participating lanes.  Returns one GcResp per witness, in order.
+    """
+    from repro.kernels import gang_gc, np_keyhash2x32
+
+    assert witnesses, "gc_many needs at least one witness"
+    gang = witnesses[0].gang
+    assert all(w.gang is gang for w in witnesses), "witnesses must share a gang"
+    assert all(w.mode is WitnessMode.NORMAL for w in witnesses)
+    uniq = list(dict.fromkeys((kh, rpc) for kh, rpc in entries))
+    if not uniq:
+        # Pure aging round: Python gc ages survivors even with no entries.
+        return [w._apply_gc([], [], []) for w in witnesses]
+    hi, lo = _lanes([kh for kh, _rpc in uniq])
+    qh, ql = np_keyhash2x32(hi, lo)
+    rhi, rlo = _rpc_lanes([rpc for _kh, rpc in uniq])
+    E, L = len(uniq), len(witnesses)
+    g_qh = np.tile(qh, L)
+    g_ql = np.tile(ql, L)
+    g_rh = np.tile(rhi, L)
+    g_rl = np.tile(rlo, L)
+    g_lane = np.repeat(
+        np.fromiter((w.lane for w in witnesses), np.int32, L), E
+    )
+    aged = np.zeros(gang.n_lanes, np.int32)
+    for w in witnesses:
+        aged[w.lane] = 1
+    cleared, table = gang_gc(
+        gang.table, gang.n_sets, g_qh, g_ql, g_rh, g_rl, g_lane, aged
+    )
+    gang.table = table
+    for w in witnesses:
+        w.stats["kernel_batches"] += 1
+    keys = [(int(qh[e]), int(ql[e])) for e in range(E)]
+    rpcs = [rpc for _kh, rpc in uniq]
+    return [
+        w._apply_gc(keys, rpcs, [bool(c) for c in cleared[i * E:(i + 1) * E]])
+        for i, w in enumerate(witnesses)
+    ]

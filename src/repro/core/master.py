@@ -101,6 +101,7 @@ class Master:
         witness_list_version: int,
         client_acks: Sequence[Tuple[int, int]] = (),
         now: float = 0.0,
+        commutes: Optional[bool] = None,
     ) -> Tuple[str, ExecResult]:
         """Execute an update; classify the reply path.
 
@@ -108,6 +109,11 @@ class Master:
         a backup sync through this op before the reply is released; the result
         carries synced=True so the client completes without witness accepts
         (§3.2.3 "tags its result as synced").
+
+        ``commutes`` optionally overrides the host window lookup with a
+        commutativity verdict already computed elsewhere — the fused batch
+        driver passes the device ring buffer's conflict bit so the host
+        ``_unsynced_keyhash`` dict is never consulted on the hot path.
         """
         if witness_list_version != self.witness_list_version:
             # §3.6: stale witness list — client must refetch and retry, else
@@ -156,7 +162,8 @@ class Master:
             return ERROR, ExecResult(blocking, synced=False, ok=False,
                                      error="TXN_PENDING")
 
-        commutes = self._commutes(op)
+        if commutes is None:
+            commutes = self._commutes(op)
         # §4.4 hot-key heuristic: was any touched key updated "recently"
         # (within hot_key_window) before this op?  If so it will likely be
         # updated again soon — sync preemptively after responding.

@@ -218,6 +218,7 @@ class ShardGroup:
         record: Optional[Callable[[Op, Any, int], None]] = None,
         geometry: Optional[WitnessGeometry] = None,
         witness_backend: str = "python",
+        gang=None,
     ) -> None:
         self.shard_id = shard_id
         self.config = config
@@ -230,6 +231,18 @@ class ShardGroup:
         self.geometry = geometry
         assert witness_backend in ("python", "device"), witness_backend
         self.witness_backend = witness_backend
+        # Device witnesses stack their tables into one device-resident gang
+        # (repro.core.device_witness.WitnessGang): cluster-provided when the
+        # group belongs to a ShardedCluster (all shards share one gang so a
+        # routed batch is ONE dispatch), group-local otherwise.
+        self.gang = gang
+        if witness_backend == "device" and self.gang is None:
+            from .device_witness import WitnessGang
+
+            lanes = 1
+            while lanes < f:
+                lanes <<= 1
+            self.gang = WitnessGang(geometry.n_sets, geometry.n_ways, lanes)
         self.master = Master(
             alloc_id(), epoch=0, sync_batch=sync_batch,
             hot_key_window=hot_key_window,
@@ -264,7 +277,8 @@ class ShardGroup:
         if self.witness_backend == "device":
             from .device_witness import DeviceWitness
 
-            return DeviceWitness(self.geometry.n_sets, self.geometry.n_ways)
+            return DeviceWitness(self.geometry.n_sets, self.geometry.n_ways,
+                                 gang=self.gang)
         return Witness(self.geometry.n_sets, self.geometry.n_ways)
 
     # ------------------------------------------------------------------ faults
@@ -520,16 +534,35 @@ class ShardGroup:
                 self.master.abort_sync()
                 return
             gc_entries = self.master.complete_sync()
-            for i, w in enumerate(self.witnesses):
-                if i not in self._dropped_witnesses:
-                    resp = w.gc(gc_entries)
-                    # §4.5: retry suspected uncollected garbage through RIFL.
-                    for op in resp.stale_requests:
-                        self.master.handle_update(
-                            op,
-                            self.config.fetch(self.shard_id).witness_list_version,
-                            (), 0.0,
-                        )
+            live = [w for i, w in enumerate(self.witnesses)
+                    if i not in self._dropped_witnesses]
+            for resp in self._gc_witnesses(live, gc_entries):
+                # §4.5: retry suspected uncollected garbage through RIFL.
+                for op in resp.stale_requests:
+                    self.master.handle_update(
+                        op,
+                        self.config.fetch(self.shard_id).witness_list_version,
+                        (), 0.0,
+                    )
+
+    def _gc_witnesses(self, witnesses, gc_entries):
+        """One sync round's witness gc: device witnesses sharing a gang
+        clear + age in ONE stacked dispatch (lane-expanded entries); any
+        remaining witness gc's individually.  Responses in witness order."""
+        if self.witness_backend == "device" and len(witnesses) > 1:
+            from .device_witness import DeviceWitness, gc_many
+            from .types import WitnessMode
+
+            gang = self.gang
+            stacked = [w for w in witnesses
+                       if isinstance(w, DeviceWitness)
+                       and w.mode is WitnessMode.NORMAL and w.gang is gang]
+            if len(stacked) > 1:
+                resp = dict(zip((id(w) for w in stacked),
+                                gc_many(stacked, gc_entries)))
+                return [resp[id(w)] if id(w) in resp else w.gc(gc_entries)
+                        for w in witnesses]
+        return [w.gc(gc_entries) for w in witnesses]
 
     def sync_now(self) -> None:
         self.master.want_sync = True
@@ -782,6 +815,17 @@ class ShardedCluster:
             geometry = WitnessGeometry(witness_sets, witness_ways)
         self.geometry = geometry
         self.witness_backend = witness_backend
+        # One device-resident gang for the WHOLE cluster: every shard's
+        # witnesses stack into it, so a routed cross-shard batch records at
+        # all its target lanes in ONE dispatch (see update_batch).
+        self.gang = None
+        if witness_backend == "device":
+            from .device_witness import WitnessGang
+
+            lanes = 1
+            while lanes < n_shards * f:
+                lanes <<= 1
+            self.gang = WitnessGang(geometry.n_sets, geometry.n_ways, lanes)
         # Kept for add_shard: a grown shard is built like the seed shards.
         self._group_kwargs = dict(
             f=f, sync_batch=sync_batch, hot_key_window=hot_key_window,
@@ -791,12 +835,18 @@ class ShardedCluster:
             ShardGroup(
                 shard_id=i, config=self.config, alloc_id=self._node_id,
                 record=self._record, geometry=geometry,
-                witness_backend=witness_backend, **self._group_kwargs,
+                witness_backend=witness_backend, gang=self.gang,
+                **self._group_kwargs,
             )
             for i in range(n_shards)
         ]
         self.migration = MigrationManager(self)
         self._apply_ownership()
+        self._fused = None
+        if witness_backend == "device":
+            from .fastbatch import FusedBatchDriver
+
+            self._fused = FusedBatchDriver(self)
 
     def _node_id(self) -> int:
         self._next_node_id += 1
@@ -874,7 +924,18 @@ class ShardedCluster:
         """Batched client path: group ops by owning shard, drive each shard's
         batch through ShardGroup.update_batch (one witness-record invocation
         — one kernel dispatch on the device backend — per witness per shard),
-        and return per-op outcomes in the input order."""
+        and return per-op outcomes in the input order.
+
+        On the device backend a routed cross-shard batch of plain updates
+        first tries the fused driver (core/fastbatch.py): ONE stacked-gang
+        dispatch covers hashing, slot routing, the device-resident master
+        window conflict check, and every shard's every witness record.  The
+        driver declines (returns None) whenever any op or shard falls off
+        its eligibility envelope, and the per-shard path below runs."""
+        if self._fused is not None:
+            fused = self._fused.try_update_batch(session, ops, now)
+            if fused is not None:
+                return fused
         groups: Dict[int, List[int]] = {}
         for idx, op in enumerate(ops):
             groups.setdefault(self._group_for(op).shard_id, []).append(idx)
@@ -1106,7 +1167,8 @@ class ShardedCluster:
         group = ShardGroup(
             shard_id=sid, config=self.config, alloc_id=self._node_id,
             record=self._record, geometry=self.geometry,
-            witness_backend=self.witness_backend, **self._group_kwargs,
+            witness_backend=self.witness_backend, gang=self.gang,
+            **self._group_kwargs,
         )
         self.shards.append(group)
         self.n_shards += 1

@@ -90,7 +90,13 @@ class Op:
         return self.op_type in UPDATE_OPS
 
     def key_hashes(self) -> Tuple[int, ...]:
-        return tuple(keyhash(k) for k in self.keys)
+        # Memoized: the hot paths (witness records, window checks, gc entry
+        # building) re-ask several times per op; keys are frozen.
+        khs = self.__dict__.get("_khs")
+        if khs is None:
+            khs = tuple(keyhash(k) for k in self.keys)
+            object.__setattr__(self, "_khs", khs)
+        return khs
 
 
 class RecordStatus(enum.Enum):

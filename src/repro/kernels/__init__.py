@@ -22,14 +22,24 @@ Pallas so the dry-run roofline reflects real XLA numbers (DESIGN.md §4).
 from .ops import (
     DEFAULT_N_SLOTS,
     FastPathResult,
+    GangFastPathResult,
+    GangRecordResult,
+    GangTable,
     TxnProbeResult,
     WitnessTable,
     conflict_scan,
     default_slot_map,
     dispatch_count,
     fastpath_batch,
+    gang_fastpath_batch,
+    gang_gc,
+    gang_record,
+    gang_record_groups,
     keyhash2x32,
+    np_keyhash2x32,
     ref_conflict_scan,
+    ref_gang_gc,
+    ref_gang_record,
     ref_keyhash2x32,
     ref_witness_gc,
     ref_witness_record,
@@ -49,4 +59,7 @@ __all__ = [
     "witness_record_seq", "fastpath_batch", "txn_probe", "dispatch_count",
     "reset_dispatch_count", "ref_conflict_scan", "ref_keyhash2x32",
     "ref_witness_gc", "ref_witness_record", "ref_witness_record_txn",
+    "GangTable", "GangRecordResult", "GangFastPathResult",
+    "gang_record", "gang_record_groups", "gang_gc", "gang_fastpath_batch",
+    "np_keyhash2x32", "ref_gang_record", "ref_gang_gc",
 ]

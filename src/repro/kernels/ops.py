@@ -38,8 +38,12 @@ from .conflict_scan import conflict_scan_pallas
 from .keyhash import keyhash2x32_pallas
 from .ref import (
     U32,
+    GangTable,
     WitnessTable,
+    np_keyhash2x32,
     ref_conflict_scan,
+    ref_gang_gc,
+    ref_gang_record,
     ref_keyhash2x32,
     ref_witness_gc,
     ref_witness_record,
@@ -48,6 +52,9 @@ from .ref import (
 from .witness_record import (
     DEFAULT_TILE_SETS,
     fastpath_record_scan_pallas,
+    gang_gc_pallas,
+    gang_record_groups_pallas,
+    gang_record_setpar_pallas,
     witness_gc_pallas,
     witness_record_seq_pallas,
     witness_record_setpar_pallas,
@@ -123,7 +130,8 @@ def _pad_to(x: jnp.ndarray, m: int, fill=0) -> Tuple[jnp.ndarray, int]:
 # surrounding jit)
 # ---------------------------------------------------------------------------
 def _setpar_prep(n_sets: int, q_hi: jnp.ndarray, q_lo: jnp.ndarray,
-                 q_valid: jnp.ndarray | None = None):
+                 q_valid: jnp.ndarray | None = None,
+                 sets: jnp.ndarray | None = None):
     """Sort a query batch into round-contiguous set-parallel order.
 
     Returns (qhi_f, qlo_f, sets_f, round_start, n_rounds, perm) where
@@ -136,9 +144,17 @@ def _setpar_prep(n_sets: int, q_hi: jnp.ndarray, q_lo: jnp.ndarray,
     out-of-range set id ``n_sets`` and rank B, so they sort to the tail,
     fall beyond ``n_rounds``, and are never touched by the kernel (their
     accept bit stays 0).
+
+    ``sets`` optionally supplies precomputed set ids (the gang path derives
+    GLOBAL rows ``lane * S + (lo & (S-1))`` over the stacked table, with
+    ``n_sets`` = total rows); by default the ids come from the low lane.
+    Permute any additional per-query arrays with the returned ``perm``.
     """
     (B,) = q_hi.shape
-    sets = (q_lo & jnp.uint32(n_sets - 1)).astype(jnp.int32)       # [B]
+    if sets is None:
+        sets = (q_lo & jnp.uint32(n_sets - 1)).astype(jnp.int32)   # [B]
+    else:
+        sets = sets.astype(jnp.int32)
     if q_valid is None:
         valid = jnp.ones((B,), jnp.int32)
     else:
@@ -495,6 +511,316 @@ def txn_probe(table: WitnessTable, key_hi, key_lo, own=None,
     )
 
 
+# ---------------------------------------------------------------------------
+# Gang ops: stacked witness lanes with kernel-held RIFL/gc state
+# ---------------------------------------------------------------------------
+# A gang stacks L witness instances (all shards x all witnesses) into one
+# [L*S, W] device table whose slots carry rpc identity and gc age alongside
+# the keyhash lanes (repro.kernels.ref.GangTable).  The ops below keep the
+# whole serving hot loop at ONE dispatch per *cluster* batch: reason codes
+# (1 insert / 2 dup / 3 conflict / 4 full) come back per op so the host
+# updates stats/mirrors without consulting device state, and all outputs are
+# materialized to numpy HERE — callers slice/index host-side for free instead
+# of paying one device program per jnp ``__getitem__``.
+
+class GangRecordResult(NamedTuple):
+    """Result of one grouped gang record (all caller order)."""
+    reasons: np.ndarray      # [G] reason code per group
+    q_hi: np.ndarray         # [G, K] mixed lanes of every key (padding = 0)
+    q_lo: np.ndarray         # [G, K]
+    table: GangTable         # updated gang table (donated buffers)
+
+
+@functools.partial(jax.jit, static_argnames=("n_sets", "interpret"))
+def _gang_groups_impl(table, k_hi, k_lo, k_valid, lanes, r_hi, r_lo, g_valid,
+                      n_sets: int, interpret: bool):
+    G, K = k_hi.shape
+    qh, ql = ref_keyhash2x32(k_hi.reshape(-1), k_lo.reshape(-1))
+    qh = qh.reshape(G, K)
+    ql = ql.reshape(G, K)
+    rows = (
+        lanes[:, None] * n_sets
+        + (ql & jnp.uint32(n_sets - 1)).astype(jnp.int32)
+    )
+    rsn, new_table = gang_record_groups_pallas(
+        table, qh, ql, rows, k_valid, r_hi, r_lo, g_valid,
+        interpret=interpret,
+    )
+    return rsn, qh, ql, new_table
+
+
+def gang_record_groups(
+    table: GangTable, n_sets: int,
+    key_hi, key_lo, key_valid, lanes, rpc_hi, rpc_lo,
+    *, interpret: bool | None = None,
+) -> GangRecordResult:
+    """Batched per-group all-or-nothing record: ONE dispatch for a whole
+    batch of (possibly multi-key) ops.
+
+    ``key_hi``/``key_lo``/``key_valid`` are [G, K] RAW keyhash lanes padded
+    to a common key count; ``lanes``/``rpc_hi``/``rpc_lo`` are [G] (target
+    witness lane, rpc identity).  Groups resolve sequentially in index
+    order with the Python reference's exact placement semantics; dup/
+    conflict decisions use the kernel-held rpc lanes (no host mirror
+    input).  Rebind ``result.table``.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    _count_dispatch()
+    key_hi = np.asarray(key_hi, np.uint32)
+    key_lo = np.asarray(key_lo, np.uint32)
+    key_valid = np.asarray(key_valid, np.int32)
+    G, K = key_hi.shape
+    Gp, Kp = _bucket(G, lo=4), _bucket(K, lo=2)
+    pad2 = ((0, Gp - G), (0, Kp - K))
+    key_hi = np.pad(key_hi, pad2)
+    key_lo = np.pad(key_lo, pad2)
+    key_valid = np.pad(key_valid, pad2)
+    lanes = np.pad(np.asarray(lanes, np.int32), (0, Gp - G))
+    rpc_hi = np.pad(np.asarray(rpc_hi, np.uint32), (0, Gp - G))
+    rpc_lo = np.pad(np.asarray(rpc_lo, np.uint32), (0, Gp - G))
+    g_valid = np.zeros((Gp,), np.int32)
+    g_valid[:G] = 1
+    rsn, qh, ql, new_table = _gang_groups_impl(
+        table, key_hi, key_lo, key_valid, lanes, rpc_hi, rpc_lo,
+        jnp.asarray(g_valid), n_sets, interpret,
+    )
+    return GangRecordResult(
+        np.asarray(rsn)[:G], np.asarray(qh)[:G, :K], np.asarray(ql)[:G, :K],
+        new_table,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_sets", "interpret",
+                                             "tile_sets"))
+def _gang_record_impl(table, k_hi, k_lo, k_valid, lanes, r_hi, r_lo,
+                      n_sets: int, interpret: bool, tile_sets: int):
+    R, _W = table.occ.shape
+    qh, ql = ref_keyhash2x32(k_hi, k_lo)
+    rows = (
+        lanes * n_sets + (ql & jnp.uint32(n_sets - 1)).astype(jnp.int32)
+    )
+    qhi_f, qlo_f, sets_f, rstart, n_rounds, perm = _setpar_prep(
+        R, qh, ql, k_valid, sets=rows
+    )
+    rsn_f, new_table = gang_record_setpar_pallas(
+        table, qhi_f, qlo_f, r_hi[perm], r_lo[perm], sets_f, rstart,
+        n_rounds, tile_sets=tile_sets, interpret=interpret,
+    )
+    return _unsort(perm, rsn_f), qh, ql, new_table
+
+
+def gang_record(
+    table: GangTable, n_sets: int, key_hi, key_lo, lanes, rpc_hi, rpc_lo,
+    *, interpret: bool | None = None, tile_sets: int = DEFAULT_TILE_SETS,
+):
+    """Set-parallel single-key record over the gang: ONE dispatch for a
+    batch of [B] single-key ops (each with its own lane + rpc identity).
+
+    Returns (reasons [B], q_hi [B], q_lo [B], table) — numpy outputs,
+    caller order, same reason codes as ``gang_record_groups``.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    _count_dispatch()
+    key_hi = np.asarray(key_hi, np.uint32)
+    key_lo = np.asarray(key_lo, np.uint32)
+    (B,) = key_hi.shape
+    key_hi, key_lo, lanes, rpc_hi, rpc_lo, valid = _pad_valid(
+        B, key_hi, key_lo,
+        np.asarray(lanes, np.int32),
+        np.asarray(rpc_hi, np.uint32), np.asarray(rpc_lo, np.uint32),
+    )
+    rsn, qh, ql, new_table = _gang_record_impl(
+        table, key_hi, key_lo, valid, lanes, rpc_hi, rpc_lo,
+        n_sets, interpret, tile_sets,
+    )
+    return (np.asarray(rsn)[:B], np.asarray(qh)[:B], np.asarray(ql)[:B],
+            new_table)
+
+
+@functools.partial(jax.jit, static_argnames=("n_sets", "do_age", "interpret",
+                                             "tile_sets"))
+def _gang_gc_impl(table, g_hi, g_lo, g_rh, g_rl, g_lane, g_valid, aged_lanes,
+                  n_sets: int, do_age: bool, interpret: bool, tile_sets: int):
+    rows = (
+        g_lane * n_sets + (g_lo & jnp.uint32(n_sets - 1)).astype(jnp.int32)
+    )
+    aged_rows = jnp.repeat(aged_lanes.astype(jnp.int32), n_sets)
+    clr, new_table = gang_gc_pallas(
+        table, g_hi, g_lo, g_rh, g_rl, rows, g_valid, aged_rows,
+        do_age=do_age, tile_sets=tile_sets, interpret=interpret,
+    )
+    return clr, new_table
+
+
+def gang_gc(
+    table: GangTable, n_sets: int,
+    g_hi, g_lo, g_rpc_hi, g_rpc_lo, g_lane, aged_lanes,
+    *, do_age: bool = True,
+    interpret: bool | None = None, tile_sets: int = DEFAULT_TILE_SETS,
+):
+    """Gang gc, ONE dispatch: rpc-matched clears + in-kernel aging.
+
+    Entry lanes are MIXED key lanes (as returned by the record ops) plus
+    the recording rpc identity and target lane; a slot clears only on a
+    full (key, rpc, lane) match, so a stale gc entry never drops a newer
+    same-key record.  ``aged_lanes`` is an [L] 0/1 mask of lanes whose
+    survivors age this round (§4.5); ``do_age=False`` is the rollback
+    variant.  Returns (cleared [G] numpy bit per entry, new table).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    _count_dispatch()
+    g_hi = np.asarray(g_hi, np.uint32)
+    (G,) = g_hi.shape
+    g_hi, g_lo, g_rh, g_rl, g_lane, valid = _pad_valid(
+        G, g_hi, np.asarray(g_lo, np.uint32),
+        np.asarray(g_rpc_hi, np.uint32), np.asarray(g_rpc_lo, np.uint32),
+        np.asarray(g_lane, np.int32),
+    )
+    clr, new_table = _gang_gc_impl(
+        table, g_hi, g_lo, g_rh, g_rl, g_lane, valid,
+        jnp.asarray(np.asarray(aged_lanes, np.int32)),
+        n_sets, do_age, interpret, tile_sets,
+    )
+    return np.asarray(clr)[:G], new_table
+
+
+# ---------------------------------------------------------------------------
+# Fused gang fast path: ONE dispatch for a routed multi-shard batch
+# ---------------------------------------------------------------------------
+class GangFastPathResult(NamedTuple):
+    """Result of one fused cluster-batch dispatch (all caller order)."""
+    reasons: np.ndarray      # [B, f] reason code per op per witness copy
+    conflicts: np.ndarray    # [B] device master-window conflict bit
+    shard_ids: np.ndarray    # [B] slot-table placement
+    q_hi: np.ndarray         # [B] mixed keyhash lanes
+    q_lo: np.ndarray         # [B]
+    table: GangTable         # updated gang table (donated buffers)
+    ring_hi: jnp.ndarray     # [NS, CAP] updated unsynced-window rings
+    ring_lo: jnp.ndarray     # [NS, CAP]
+    counts: np.ndarray       # [NS] post-append live-entry count per ring
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots", "n_sets", "f",
+                                             "interpret", "tile_sets"))
+def _gang_fastpath_impl(table, k_hi, k_lo, k_valid, r_hi, r_lo, exec_pred,
+                        slot_map, lane_map, ring_hi, ring_lo,
+                        tail_slot, count,
+                        n_slots: int, n_sets: int, f: int,
+                        interpret: bool, tile_sets: int):
+    (B,) = k_hi.shape
+    R, _W = table.occ.shape
+    NS, CAP = ring_hi.shape
+    qh, ql = ref_keyhash2x32(k_hi, k_lo)
+    slots = (ql % jnp.uint32(n_slots)).astype(jnp.int32)
+    shard = slot_map[slots]                                        # [B]
+    valid = k_valid.astype(jnp.int32)
+    # --- device-resident master window: ring conflict scan -----------------
+    rhi_b = ring_hi[shard]                                         # [B, CAP]
+    rlo_b = ring_lo[shard]
+    c_iota = jax.lax.iota(jnp.int32, CAP)[None, :]
+    live = ((c_iota - tail_slot[shard][:, None]) % CAP) < count[shard][:, None]
+    ring_hit = jnp.any(
+        live & (rhi_b == qh[:, None]) & (rlo_b == ql[:, None]), axis=1
+    )
+    # Intra-batch window growth: op i also conflicts with any EARLIER op j
+    # of the same shard and key that will itself enter the window.
+    app = (exec_pred == 1) & (valid == 1)                          # [B]
+    b_iota = jax.lax.iota(jnp.int32, B)
+    earlier = b_iota[:, None] > b_iota[None, :]
+    same = (
+        (qh[:, None] == qh[None, :])
+        & (ql[:, None] == ql[None, :])
+        & (shard[:, None] == shard[None, :])
+        & earlier & app[None, :]
+    )
+    intra_hit = jnp.any(same, axis=1)
+    conflicts = ((ring_hit | intra_hit) & (valid == 1)).astype(jnp.int32)
+    # --- ring append (executed ops only, in batch order per shard) ---------
+    shard_eq = shard[:, None] == shard[None, :]
+    rank = jnp.sum(shard_eq & earlier & app[None, :], axis=1)
+    slot_pos = (tail_slot[shard] + count[shard] + rank) % CAP
+    srow = jnp.where(app, shard, NS)
+    ring_hi = ring_hi.at[srow, slot_pos].set(qh, mode="drop")
+    ring_lo = ring_lo.at[srow, slot_pos].set(ql, mode="drop")
+    new_count = count + jnp.zeros((NS,), jnp.int32).at[shard].add(
+        app.astype(jnp.int32)
+    )
+    # --- witness record, expanded to every shard's f witness lanes ---------
+    lanes_e = lane_map[shard].reshape(-1)                          # [B*f]
+    rep = lambda x: jnp.repeat(x, f)
+    qh_e, ql_e = rep(qh), rep(ql)
+    rows_e = lanes_e * n_sets + (ql_e & jnp.uint32(n_sets - 1)).astype(
+        jnp.int32
+    )
+    qhi_f, qlo_f, sets_f, rstart, n_rounds, perm = _setpar_prep(
+        R, qh_e, ql_e, rep(valid), sets=rows_e
+    )
+    rsn_f, new_table = gang_record_setpar_pallas(
+        table, qhi_f, qlo_f, rep(r_hi)[perm], rep(r_lo)[perm],
+        sets_f, rstart, n_rounds,
+        tile_sets=tile_sets, interpret=interpret,
+    )
+    reasons = _unsort(perm, rsn_f).reshape(B, f)
+    return (reasons, conflicts, shard, qh, ql, new_table,
+            ring_hi, ring_lo, new_count)
+
+
+def gang_fastpath_batch(
+    table: GangTable, n_sets: int,
+    key_hi, key_lo, rpc_hi, rpc_lo, exec_pred,
+    slot_map, lane_map,
+    ring_hi, ring_lo, tail_slot, count,
+    *, interpret: bool | None = None,
+    tile_sets: int = DEFAULT_TILE_SETS,
+) -> GangFastPathResult:
+    """The whole cluster-batch hot loop in ONE device dispatch:
+
+        hash -> slot route -> ring conflict scan (device-resident master
+        window, incl. intra-batch growth) -> ring append -> record at every
+        target shard's f witness lanes (stacked gang, rpc/age held
+        in-kernel)
+
+    ``lane_map`` is [NS, f] (gang lane of witness j of shard s);
+    ``ring_hi/ring_lo`` are the [NS, CAP] per-shard unsynced-keyhash rings
+    with ``tail_slot``/``count`` the live span (count + appends must fit
+    CAP — callers drain first).  ``exec_pred[b]=1`` marks ops that will
+    execute at their master (RIFL duplicates don't re-enter the window).
+    Reasons/conflicts come back per op as numpy; ring buffers and table
+    stay on device.  Rebind table and ring state from the result.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    slot_map = np.asarray(slot_map, np.int32)
+    n_slots = int(slot_map.shape[0])
+    lane_map = np.asarray(lane_map, np.int32)
+    NS, f = lane_map.shape
+    _count_dispatch()
+    key_hi = np.asarray(key_hi, np.uint32)
+    (B,) = key_hi.shape
+    key_hi, key_lo, rpc_hi, rpc_lo, exec_pred, valid = _pad_valid(
+        B, key_hi, np.asarray(key_lo, np.uint32),
+        np.asarray(rpc_hi, np.uint32), np.asarray(rpc_lo, np.uint32),
+        np.asarray(exec_pred, np.int32),
+    )
+    out = _gang_fastpath_impl(
+        table, key_hi, key_lo, valid, rpc_hi, rpc_lo, exec_pred,
+        jnp.asarray(slot_map), jnp.asarray(lane_map),
+        ring_hi, ring_lo,
+        jnp.asarray(np.asarray(tail_slot, np.int32)),
+        jnp.asarray(np.asarray(count, np.int32)),
+        n_slots, n_sets, f, interpret, tile_sets,
+    )
+    reasons, conflicts, shard, qh, ql, new_table, rh, rl, new_count = out
+    return GangFastPathResult(
+        np.asarray(reasons)[:B], np.asarray(conflicts)[:B],
+        np.asarray(shard)[:B], np.asarray(qh)[:B], np.asarray(ql)[:B],
+        new_table, rh, rl, np.asarray(new_count),
+    )
+
+
 __all__ = [
     "WitnessTable", "FastPathResult", "TxnProbeResult", "keyhash2x32",
     "DEFAULT_N_SLOTS", "default_slot_map",
@@ -502,4 +828,7 @@ __all__ = [
     "conflict_scan", "fastpath_batch", "txn_probe", "dispatch_count",
     "reset_dispatch_count", "ref_keyhash2x32", "ref_witness_record",
     "ref_witness_gc", "ref_conflict_scan", "ref_witness_record_txn",
+    "GangTable", "GangRecordResult", "GangFastPathResult",
+    "gang_record", "gang_record_groups", "gang_gc", "gang_fastpath_batch",
+    "np_keyhash2x32", "ref_gang_record", "ref_gang_gc",
 ]

@@ -196,3 +196,167 @@ def ref_conflict_scan(
         & (w_valid[None, :] == 1)
     )
     return jnp.any(eq, axis=1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Host-side keyhash mix (numpy): bit-exact with ref_keyhash2x32, zero device
+# dispatches.  The protocol layer uses this to mix gc entries / mirror keys.
+# ---------------------------------------------------------------------------
+def np_fmix32(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint32)
+    x = x ^ (x >> np.uint32(16))
+    x = x * _C1
+    x = x ^ (x >> np.uint32(13))
+    x = x * _C2
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def np_keyhash2x32(hi: np.ndarray, lo: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized numpy mirror of ``ref_keyhash2x32`` (same fmix32 chain)."""
+    old = np.seterr(over="ignore")
+    try:
+        hi = np.asarray(hi, np.uint32)
+        lo = np.asarray(lo, np.uint32)
+        h1 = np_fmix32(lo + _GOLD)
+        h2 = np_fmix32(hi ^ h1)
+        h3 = np_fmix32(h1 + h2 * _MIX5 + _MIXC)
+    finally:
+        np.seterr(**old)
+    return h2, h3
+
+
+# ---------------------------------------------------------------------------
+# Gang table: many witness instances stacked into one device-resident array
+# ---------------------------------------------------------------------------
+# Per-slot reason codes emitted by the gang record kernels.  ACCEPT_* both
+# mean RecordStatus.ACCEPTED at the protocol layer; the split keeps host
+# stats exact without consulting the host mirror.
+REASON_NONE = 0        # padding lane / not processed
+REASON_INSERT = 1      # accepted: inserted into a free way
+REASON_DUP = 2         # accepted: idempotent duplicate (same key, same rpc)
+REASON_CONFLICT = 3    # rejected: same key held under a foreign rpc
+REASON_FULL = 4        # rejected: probed set is out of ways
+
+
+class GangTable(NamedTuple):
+    """L stacked witness tables, flattened to [L*S, W] so the set-parallel
+    record kernel runs unchanged over the union of all lanes' sets (global
+    set row = lane * S + (q_lo & (S-1))).
+
+    Beyond the key lanes of :class:`WitnessTable`, every slot carries the
+    recording op's RIFL identity (rpc_hi = client id, rpc_lo = seq) and a
+    §4.5 gc-age counter, so duplicate-retry acceptance, stale-gc
+    suppression, and garbage suspicion resolve in-kernel.
+    """
+    keys_hi: jnp.ndarray   # [L*S, W] uint32
+    keys_lo: jnp.ndarray   # [L*S, W] uint32
+    occ: jnp.ndarray       # [L*S, W] int32 (0/1)
+    rpc_hi: jnp.ndarray    # [L*S, W] uint32 (client id)
+    rpc_lo: jnp.ndarray    # [L*S, W] uint32 (sequence number)
+    age: jnp.ndarray       # [L*S, W] int32 (gc rounds survived)
+
+    @staticmethod
+    def empty(n_sets: int, n_ways: int, n_lanes: int = 1) -> "GangTable":
+        assert n_sets & (n_sets - 1) == 0, "n_sets must be a power of two"
+        R = n_lanes * n_sets
+        return GangTable(
+            keys_hi=jnp.zeros((R, n_ways), U32),
+            keys_lo=jnp.zeros((R, n_ways), U32),
+            occ=jnp.zeros((R, n_ways), jnp.int32),
+            rpc_hi=jnp.zeros((R, n_ways), U32),
+            rpc_lo=jnp.zeros((R, n_ways), U32),
+            age=jnp.zeros((R, n_ways), jnp.int32),
+        )
+
+
+def _gang_np(table: GangTable):
+    return tuple(np.array(np.asarray(a)) for a in table)
+
+
+def ref_gang_record(table: GangTable, n_sets: int, groups):
+    """Pure-Python oracle for the gang record kernels.
+
+    ``groups`` is a sequence of ``(lane, (rpc_hi, rpc_lo), keys)`` where
+    ``keys`` is a list of mixed ``(q_hi, q_lo)`` lane pairs — ONE group is
+    one op (single-key ops are groups of size 1).  Semantics transcribe
+    ``repro.core.witness.Witness.record`` exactly, including the
+    pre-state-way placement quirk (every key's way is chosen against the
+    pre-op table; writes land sequentially, last wins).
+
+    Returns (reasons per group, new GangTable) with numpy state.
+    """
+    khi, klo, occ, rhi, rlo, age = _gang_np(table)
+    W = occ.shape[1]
+    reasons = []
+    for lane, (rc, rs), keys in groups:
+        rc, rs = np.uint32(rc), np.uint32(rs)
+        placements = []
+        reason = None
+        for qh, ql in keys:
+            qh, ql = np.uint32(qh), np.uint32(ql)
+            row = lane * n_sets + (int(ql) & (n_sets - 1))
+            free_way = None
+            conflicted = False
+            for w in range(W):
+                if occ[row, w] == 1:
+                    same = khi[row, w] == qh and klo[row, w] == ql
+                    if same and not (rhi[row, w] == rc and rlo[row, w] == rs):
+                        conflicted = True
+                        break
+                    if same:
+                        free_way = w           # idempotent duplicate hit
+                        break
+                elif free_way is None:
+                    free_way = w
+            if conflicted:
+                reason = REASON_CONFLICT
+                break
+            if free_way is None:
+                reason = REASON_FULL
+                break
+            placements.append((row, free_way, qh, ql,
+                               occ[row, free_way] == 1))
+        if reason is None:
+            all_dup = all(p[4] for p in placements) and len(placements) > 0
+            reason = REASON_DUP if all_dup else REASON_INSERT
+            for row, w, qh, ql, _dup in placements:
+                khi[row, w] = qh
+                klo[row, w] = ql
+                occ[row, w] = 1
+                rhi[row, w] = rc
+                rlo[row, w] = rs
+                age[row, w] = 0
+        reasons.append(reason)
+    return reasons, GangTable(*(jnp.asarray(a) for a in
+                                (khi, klo, occ, rhi, rlo, age)))
+
+
+def ref_gang_gc(table: GangTable, n_sets: int, entries, aged_lanes):
+    """Oracle for the gang gc kernel.
+
+    ``entries`` is a sequence of ``(lane, (q_hi, q_lo), (rpc_hi, rpc_lo))``;
+    a slot is cleared only when key AND rpc match (stale-gc suppression
+    in-kernel).  Every occupied survivor in ``aged_lanes`` then ages by one
+    round (§4.5).  Returns (cleared bit per entry, new GangTable).
+    """
+    khi, klo, occ, rhi, rlo, age = _gang_np(table)
+    W = occ.shape[1]
+    cleared = []
+    for lane, (qh, ql), (rc, rs) in entries:
+        qh, ql = np.uint32(qh), np.uint32(ql)
+        row = lane * n_sets + (int(ql) & (n_sets - 1))
+        hit = False
+        for w in range(W):
+            if (occ[row, w] == 1 and khi[row, w] == qh and klo[row, w] == ql
+                    and rhi[row, w] == np.uint32(rc)
+                    and rlo[row, w] == np.uint32(rs)):
+                occ[row, w] = 0
+                age[row, w] = 0
+                hit = True
+        cleared.append(hit)
+    for lane in aged_lanes:
+        rows = slice(lane * n_sets, (lane + 1) * n_sets)
+        age[rows] = np.where(occ[rows] == 1, age[rows] + 1, 0)
+    return cleared, GangTable(*(jnp.asarray(a) for a in
+                                (khi, klo, occ, rhi, rlo, age)))

@@ -62,7 +62,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .ref import U32, WitnessTable
+from .ref import U32, GangTable, WitnessTable
 
 # Default number of table rows (sets) handled by one grid cell.  At the
 # paper's 1024x4 geometry one tile is the whole table (48 KiB — trivially
@@ -480,6 +480,415 @@ def _gc_kernel(ghi_ref, glo_ref, khi_in, klo_in, occ_in, occ_ref):
         & (occ[:, :, None] == 1)
     )
     occ_ref[...] = jnp.where(jnp.any(m, axis=-1), 0, occ)
+
+
+# ---------------------------------------------------------------------------
+# Gang kernels: stacked lanes + kernel-held RIFL identity and gc-age state
+# ---------------------------------------------------------------------------
+# A GangTable is L witness tables flattened to [L*S, W]; queries arrive with
+# *global* set rows (lane * S + (q_lo & (S-1))) so the existing set-parallel
+# round machinery runs unchanged over the union of all lanes.  Every slot
+# additionally holds the recording op's rpc identity and a gc-age counter:
+# duplicate-retry acceptance (same key + same rpc), stale-gc suppression
+# (clear only on key AND rpc match) and §4.5 age bumping all resolve inside
+# the dispatch.  Reason codes (see repro.kernels.ref): 1 insert / 2 dup /
+# 3 conflict / 4 set-full / 0 padding.
+
+
+def _gang_setpar_body(
+    tile_lo, r_blk, nrounds_ref,
+    qhi_ref, qlo_ref, qrh_ref, qrl_ref, sets_ref, rstart_ref,
+    khi_in, klo_in, occ_in, rh_in, rl_in, age_in,
+    rsn_ref, khi_ref, klo_ref, occ_ref, rh_ref, rl_ref, age_ref,
+):
+    """Set-parallel gang record for one table tile: _setpar_kernel_body
+    extended with rpc/age lanes and a per-query reason output."""
+    TILE_S, W = khi_in.shape
+    B = qhi_ref.shape[0]
+    way_iota = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+    rstart = rstart_ref[...]
+    n_rounds = nrounds_ref[0]
+
+    def round_body(r, carry):
+        khi, klo, occ, rh, rl, age = carry
+        start = rstart[r]
+        end = rstart[r + 1]
+        base = jnp.minimum(start, B - r_blk)
+        qhi_c = pl.load(qhi_ref, (pl.ds(base, r_blk),))
+        qlo_c = pl.load(qlo_ref, (pl.ds(base, r_blk),))
+        qrh_c = pl.load(qrh_ref, (pl.ds(base, r_blk),))
+        qrl_c = pl.load(qrl_ref, (pl.ds(base, r_blk),))
+        sets_c = pl.load(sets_ref, (pl.ds(base, r_blk),))
+        pos = base + jax.lax.iota(jnp.int32, r_blk)
+        valid = (pos >= start) & (pos < end)
+        row = sets_c - tile_lo
+        in_tile = (row >= 0) & (row < TILE_S)
+        m = valid & in_tile
+        rowc = jnp.clip(row, 0, TILE_S - 1)
+        row_hi = khi[rowc]                            # [r_blk, W] gathers
+        row_lo = klo[rowc]
+        row_occ = occ[rowc]
+        row_rh = rh[rowc]
+        row_rl = rl[rowc]
+        row_age = age[rowc]
+        keym = (
+            (row_occ == 1)
+            & (row_hi == qhi_c[:, None])
+            & (row_lo == qlo_c[:, None])
+        )
+        rpcm = (row_rh == qrh_c[:, None]) & (row_rl == qrl_c[:, None])
+        dupm = keym & rpcm                            # idempotent retry hit
+        confm = keym & ~rpcm                          # foreign-rpc conflict
+        is_dup = jnp.any(dupm, axis=1)
+        is_conf = jnp.any(confm, axis=1)
+        free = row_occ == 0
+        has_free = jnp.any(free, axis=1)
+        way = jnp.where(is_dup, jnp.argmax(dupm, axis=1),
+                        jnp.argmax(free, axis=1))
+        acc = ~is_conf & (is_dup | has_free)
+        reason = jnp.where(
+            is_conf, 3, jnp.where(is_dup, 2, jnp.where(has_free, 1, 4))
+        ).astype(jnp.int32)
+        accq = m & acc
+        sel = (way_iota == way[:, None]) & accq[:, None]
+        new_hi = jnp.where(sel, qhi_c[:, None], row_hi)
+        new_lo = jnp.where(sel, qlo_c[:, None], row_lo)
+        new_occ = jnp.where(sel, 1, row_occ)
+        new_rh = jnp.where(sel, qrh_c[:, None], row_rh)
+        new_rl = jnp.where(sel, qrl_c[:, None], row_rl)
+        new_age = jnp.where(sel, 0, row_age)          # accept resets age
+        srow = jnp.where(accq, rowc, TILE_S)
+        khi = khi.at[srow].set(new_hi, mode="drop")
+        klo = klo.at[srow].set(new_lo, mode="drop")
+        occ = occ.at[srow].set(new_occ, mode="drop")
+        rh = rh.at[srow].set(new_rh, mode="drop")
+        rl = rl.at[srow].set(new_rl, mode="drop")
+        age = age.at[srow].set(new_age, mode="drop")
+        old_rsn = pl.load(rsn_ref, (pl.ds(base, r_blk),))
+        pl.store(rsn_ref, (pl.ds(base, r_blk),),
+                 jnp.where(m, reason, old_rsn))
+        return khi, klo, occ, rh, rl, age
+
+    khi, klo, occ, rh, rl, age = jax.lax.fori_loop(
+        0, n_rounds, round_body,
+        (khi_in[...], klo_in[...], occ_in[...],
+         rh_in[...], rl_in[...], age_in[...]),
+    )
+    khi_ref[...] = khi
+    klo_ref[...] = klo
+    occ_ref[...] = occ
+    rh_ref[...] = rh
+    rl_ref[...] = rl
+    age_ref[...] = age
+
+
+def _make_gang_record_kernel(r_blk: int, tile_s: int):
+    def kernel(nrounds_ref, qhi_ref, qlo_ref, qrh_ref, qrl_ref,
+               sets_ref, rstart_ref,
+               khi_in, klo_in, occ_in, rh_in, rl_in, age_in,
+               rsn_ref, khi_ref, klo_ref, occ_ref, rh_ref, rl_ref, age_ref):
+        g = pl.program_id(0)
+
+        @pl.when(g == 0)
+        def _init():
+            rsn_ref[...] = jnp.zeros_like(rsn_ref)
+
+        _gang_setpar_body(
+            g * tile_s, r_blk, nrounds_ref,
+            qhi_ref, qlo_ref, qrh_ref, qrl_ref, sets_ref, rstart_ref,
+            khi_in, klo_in, occ_in, rh_in, rl_in, age_in,
+            rsn_ref, khi_ref, klo_ref, occ_ref, rh_ref, rl_ref, age_ref,
+        )
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("tile_sets", "interpret"))
+def gang_record_setpar_pallas(
+    table: GangTable,
+    qhi_f: jnp.ndarray, qlo_f: jnp.ndarray,
+    qrh_f: jnp.ndarray, qrl_f: jnp.ndarray,
+    sets_f: jnp.ndarray, round_start: jnp.ndarray, n_rounds: jnp.ndarray,
+    *, tile_sets: int = DEFAULT_TILE_SETS, interpret: bool = True,
+):
+    """Set-parallel single-key record over a stacked gang table.
+
+    Same prep contract as ``witness_record_setpar_pallas`` except the set
+    ids are *global* rows (lane * S + local set) and each query carries its
+    rpc identity.  Returns (reasons-in-sorted-order [B], new gang table);
+    all six table buffers alias their outputs.
+    """
+    R, W = table.occ.shape
+    (B,) = qhi_f.shape
+    tile_s = min(tile_sets, R)
+    r_blk = min(B, R)
+    grid, full, tile = _grid_and_specs(R, W, B, tile_s)
+    out = pl.pallas_call(
+        _make_gang_record_kernel(r_blk, tile_s),
+        grid=grid,
+        in_specs=[
+            full((1,)), full((B,)), full((B,)), full((B,)), full((B,)),
+            full((B,)), full((B + 1,)),
+            tile, tile, tile, tile, tile, tile,
+        ],
+        out_specs=[full((B,)), tile, tile, tile, tile, tile, tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((R, W), U32),
+            jax.ShapeDtypeStruct((R, W), U32),
+            jax.ShapeDtypeStruct((R, W), jnp.int32),
+            jax.ShapeDtypeStruct((R, W), U32),
+            jax.ShapeDtypeStruct((R, W), U32),
+            jax.ShapeDtypeStruct((R, W), jnp.int32),
+        ],
+        input_output_aliases={7: 1, 8: 2, 9: 3, 10: 4, 11: 5, 12: 6},
+        interpret=interpret,
+    )(n_rounds, qhi_f, qlo_f, qrh_f, qrl_f, sets_f, round_start,
+      table.keys_hi, table.keys_lo, table.occ,
+      table.rpc_hi, table.rpc_lo, table.age)
+    rsn = out[0]
+    return rsn, GangTable(*out[1:])
+
+
+def _make_gang_groups_kernel(K: int):
+    """Sequential per-group all-or-nothing record: one fori_loop over G
+    groups; each group's K (padded) keys decide together against the
+    current table and, on accept, write sequentially in key order (the
+    Python reference's placement-then-write loop, pre-state-way quirk
+    included)."""
+    def kernel(qhi_ref, qlo_ref, qrow_ref, qval_ref,
+               grh_ref, grl_ref, gval_ref,
+               khi_in, klo_in, occ_in, rh_in, rl_in, age_in,
+               rsn_ref, khi_ref, klo_ref, occ_ref, rh_ref, rl_ref, age_ref):
+        W = khi_in.shape[1]
+        G = qhi_ref.shape[0]
+        khi_ref[...] = khi_in[...]
+        klo_ref[...] = klo_in[...]
+        occ_ref[...] = occ_in[...]
+        rh_ref[...] = rh_in[...]
+        rl_ref[...] = rl_in[...]
+        age_ref[...] = age_in[...]
+        way_iota = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+
+        def body(g, _):
+            qhi_g = pl.load(qhi_ref, (pl.ds(g, 1), slice(None)))[0]   # [K]
+            qlo_g = pl.load(qlo_ref, (pl.ds(g, 1), slice(None)))[0]
+            qrow_g = pl.load(qrow_ref, (pl.ds(g, 1), slice(None)))[0]
+            qval_g = pl.load(qval_ref, (pl.ds(g, 1), slice(None)))[0]
+            rc = pl.load(grh_ref, (pl.ds(g, 1),))[0]
+            rs = pl.load(grl_ref, (pl.ds(g, 1),))[0]
+            gv = pl.load(gval_ref, (pl.ds(g, 1),))[0]
+            # Decision pass: every key probes the table as left by previous
+            # groups (K-row gather, statically unrolled — K is tiny).
+            rows = [
+                (pl.load(khi_ref, (pl.ds(qrow_g[k], 1), slice(None))),
+                 pl.load(klo_ref, (pl.ds(qrow_g[k], 1), slice(None))),
+                 pl.load(occ_ref, (pl.ds(qrow_g[k], 1), slice(None))),
+                 pl.load(rh_ref, (pl.ds(qrow_g[k], 1), slice(None))),
+                 pl.load(rl_ref, (pl.ds(qrow_g[k], 1), slice(None))))
+                for k in range(K)
+            ]
+            row_hi = jnp.concatenate([r[0] for r in rows], axis=0)     # [K, W]
+            row_lo = jnp.concatenate([r[1] for r in rows], axis=0)
+            row_occ = jnp.concatenate([r[2] for r in rows], axis=0)
+            row_rh = jnp.concatenate([r[3] for r in rows], axis=0)
+            row_rl = jnp.concatenate([r[4] for r in rows], axis=0)
+            keym = (
+                (row_occ == 1)
+                & (row_hi == qhi_g[:, None])
+                & (row_lo == qlo_g[:, None])
+            )
+            rpcm = (row_rh == rc) & (row_rl == rs)
+            dupm = keym & rpcm
+            confm = keym & ~rpcm
+            dup_k = jnp.any(dupm, axis=1)
+            conf_k = jnp.any(confm, axis=1)
+            free = row_occ == 0
+            has_free = jnp.any(free, axis=1)
+            way_k = jnp.where(dup_k, jnp.argmax(dupm, axis=1),
+                              jnp.argmax(free, axis=1))
+            ok_k = ~conf_k & (dup_k | has_free)
+            vk = qval_g == 1
+            acc = jnp.all(ok_k | ~vk) & (gv == 1)
+            all_dup = jnp.all(dup_k | ~vk) & jnp.any(vk)
+            # Reject reason comes from the FIRST failing key, like the
+            # Python loop that returns at the first conflict/full key.
+            fail = vk & ~ok_k
+            fail_conf = conf_k[jnp.argmax(fail)]
+            reason = jnp.where(
+                acc, jnp.where(all_dup, 2, 1), jnp.where(fail_conf, 3, 4)
+            )
+            reason = jnp.where(gv == 1, reason, 0).astype(jnp.int32)
+            pl.store(rsn_ref, (pl.ds(g, 1),), reason.reshape((1,)))
+            # Write pass: sequential in key order so same-set placement
+            # collisions resolve last-wins; rows reload because an earlier
+            # key of this group may share the row.
+            for k in range(K):
+                r = qrow_g[k]
+                sel = (way_iota == way_k[k]) & (acc & vk[k])
+                hi_k = pl.load(khi_ref, (pl.ds(r, 1), slice(None)))
+                lo_k = pl.load(klo_ref, (pl.ds(r, 1), slice(None)))
+                oc_k = pl.load(occ_ref, (pl.ds(r, 1), slice(None)))
+                rh_k = pl.load(rh_ref, (pl.ds(r, 1), slice(None)))
+                rl_k = pl.load(rl_ref, (pl.ds(r, 1), slice(None)))
+                ag_k = pl.load(age_ref, (pl.ds(r, 1), slice(None)))
+                pl.store(khi_ref, (pl.ds(r, 1), slice(None)),
+                         jnp.where(sel, qhi_g[k], hi_k))
+                pl.store(klo_ref, (pl.ds(r, 1), slice(None)),
+                         jnp.where(sel, qlo_g[k], lo_k))
+                pl.store(occ_ref, (pl.ds(r, 1), slice(None)),
+                         jnp.where(sel, 1, oc_k))
+                pl.store(rh_ref, (pl.ds(r, 1), slice(None)),
+                         jnp.where(sel, rc, rh_k))
+                pl.store(rl_ref, (pl.ds(r, 1), slice(None)),
+                         jnp.where(sel, rs, rl_k))
+                pl.store(age_ref, (pl.ds(r, 1), slice(None)),
+                         jnp.where(sel, 0, ag_k))
+            return 0
+
+        jax.lax.fori_loop(0, G, body, 0)
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gang_record_groups_pallas(
+    table: GangTable,
+    qhi: jnp.ndarray, qlo: jnp.ndarray,
+    qrow: jnp.ndarray, qval: jnp.ndarray,
+    grh: jnp.ndarray, grl: jnp.ndarray, gval: jnp.ndarray,
+    *, interpret: bool = True,
+):
+    """One-dispatch batch of per-group all-or-nothing records.
+
+    ``qhi/qlo/qrow/qval`` are [G, K] padded key arrays (mixed lanes, global
+    rows); ``grh/grl/gval`` are the per-group rpc identity and validity.
+    Groups resolve sequentially in index order — single-key ops are groups
+    of size 1, bit-exact with ``Witness.record``.  Returns (reason per
+    group [G], new gang table).
+    """
+    R, W = table.occ.shape
+    G, K = qhi.shape
+    out = pl.pallas_call(
+        _make_gang_groups_kernel(K),
+        out_shape=[
+            jax.ShapeDtypeStruct((G,), jnp.int32),
+            jax.ShapeDtypeStruct((R, W), U32),
+            jax.ShapeDtypeStruct((R, W), U32),
+            jax.ShapeDtypeStruct((R, W), jnp.int32),
+            jax.ShapeDtypeStruct((R, W), U32),
+            jax.ShapeDtypeStruct((R, W), U32),
+            jax.ShapeDtypeStruct((R, W), jnp.int32),
+        ],
+        input_output_aliases={7: 1, 8: 2, 9: 3, 10: 4, 11: 5, 12: 6},
+        interpret=interpret,
+    )(qhi.astype(U32), qlo.astype(U32),
+      qrow.astype(jnp.int32), qval.astype(jnp.int32),
+      grh.astype(U32), grl.astype(U32), gval.astype(jnp.int32),
+      table.keys_hi, table.keys_lo, table.occ,
+      table.rpc_hi, table.rpc_lo, table.age)
+    rsn = out[0]
+    return rsn, GangTable(*out[1:])
+
+
+def _make_gang_gc_kernel(tile_s: int, do_age: bool):
+    def kernel(ghi_ref, glo_ref, grh_ref, grl_ref, grow_ref, gval_ref,
+               aged_ref,
+               khi_in, klo_in, occ_in, rh_in, rl_in, age_in,
+               clr_ref, occ_ref, age_ref):
+        g = pl.program_id(0)
+        tile_lo = g * tile_s
+        khi = khi_in[...]                          # [T, W]
+        klo = klo_in[...]
+        occ = occ_in[...]
+        rh = rh_in[...]
+        rl = rl_in[...]
+        age = age_in[...]
+        rows = tile_lo + jax.lax.iota(jnp.int32, tile_s)
+        # [T, W, G] cube: clear only where key AND rpc AND row all match —
+        # a newer record under a different rpc survives a stale gc entry.
+        m = (
+            (khi[:, :, None] == ghi_ref[...][None, None, :])
+            & (klo[:, :, None] == glo_ref[...][None, None, :])
+            & (rh[:, :, None] == grh_ref[...][None, None, :])
+            & (rl[:, :, None] == grl_ref[...][None, None, :])
+            & (occ[:, :, None] == 1)
+            & (rows[:, None, None] == grow_ref[...][None, None, :])
+            & (gval_ref[...][None, None, :] == 1)
+        )
+        clr = jnp.any(m, axis=-1)
+        occ_new = jnp.where(clr, 0, occ)
+        age_new = jnp.where(clr, 0, age)
+        if do_age:
+            aged_t = aged_ref[...]                 # [T] per-row age mask
+            age_new = jnp.where(
+                aged_t[:, None] == 1,
+                jnp.where(occ_new == 1, age_new + 1, 0),
+                age_new,
+            )
+        occ_ref[...] = occ_new
+        age_ref[...] = age_new
+        mine = jnp.any(m, axis=(0, 1)).astype(jnp.int32)   # [G]
+
+        @pl.when(g == 0)
+        def _init():
+            clr_ref[...] = mine
+
+        @pl.when(g != 0)
+        def _accum():
+            clr_ref[...] = jnp.maximum(clr_ref[...], mine)
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("do_age", "tile_sets", "interpret")
+)
+def gang_gc_pallas(
+    table: GangTable,
+    g_hi: jnp.ndarray, g_lo: jnp.ndarray,
+    g_rh: jnp.ndarray, g_rl: jnp.ndarray,
+    g_row: jnp.ndarray, g_valid: jnp.ndarray,
+    aged_rows: jnp.ndarray,
+    *, do_age: bool = True,
+    tile_sets: int = DEFAULT_TILE_SETS, interpret: bool = True,
+):
+    """Gang gc: rpc-matched clears + in-kernel §4.5 aging, ONE dispatch.
+
+    Entries carry (key lanes, rpc lanes, global row); a slot clears only on
+    a full match, so stale entries never drop a newer same-key record.
+    Survivors in rows flagged by ``aged_rows`` age by one round (cleared /
+    empty slots reset to 0); ``do_age=False`` is the rollback variant.
+    Returns (cleared bit per entry [G], new gang table); occ and age alias
+    their outputs, key/rpc lanes are untouched.
+    """
+    R, W = table.occ.shape
+    (G,) = g_hi.shape
+    tile_s = min(tile_sets, R)
+    grid, full, tile = _grid_and_specs(R, W, G, tile_s)
+    row_tile = pl.BlockSpec((tile_s,), lambda g: (g,))
+    out = pl.pallas_call(
+        _make_gang_gc_kernel(tile_s, do_age),
+        grid=grid,
+        in_specs=[
+            full((G,)), full((G,)), full((G,)), full((G,)),
+            full((G,)), full((G,)), row_tile,
+            tile, tile, tile, tile, tile, tile,
+        ],
+        out_specs=[full((G,)), tile, tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((G,), jnp.int32),
+            jax.ShapeDtypeStruct((R, W), jnp.int32),
+            jax.ShapeDtypeStruct((R, W), jnp.int32),
+        ],
+        input_output_aliases={9: 1, 12: 2},
+        interpret=interpret,
+    )(g_hi.astype(U32), g_lo.astype(U32),
+      g_rh.astype(U32), g_rl.astype(U32),
+      g_row.astype(jnp.int32), g_valid.astype(jnp.int32),
+      aged_rows.astype(jnp.int32),
+      table.keys_hi, table.keys_lo, table.occ,
+      table.rpc_hi, table.rpc_lo, table.age)
+    clr, occ, age = out
+    return clr, GangTable(table.keys_hi, table.keys_lo, occ,
+                          table.rpc_hi, table.rpc_lo, age)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

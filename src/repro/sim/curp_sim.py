@@ -192,7 +192,11 @@ class SimMaster(Node):
     def service_time(self, msg) -> float:
         p = self.p
         if isinstance(msg, MUpdate):
-            c = p.master_update_cost_us
+            # Per-command pricing (Fig. 10): the op type's execution-cost
+            # delta rides on the base update cost.
+            c = p.master_update_cost_us + p.op_cost_extra_us.get(
+                msg.op.op_type.name, 0.0
+            )
             if self.mode == "sync":
                 # Original primary-backup: the per-op sync RPCs are issued
                 # inside the update handler (no batching).  The §4.4 polling
@@ -922,9 +926,15 @@ def run_batched_throughput(
             "workload must expose batch(session) and batch_size "
             "(BatchedWorkload interface); per-op workloads are not batched"
         )
-    # Warm one batch outside the timed window (jit compiles on the device
-    # backend; Python path warms caches).
+    # Warm outside the timed window: two batches compile the fused
+    # record/fast-path kernels, and an explicit sync on every shard compiles
+    # the gc kernel at its drain-time shape — otherwise the first in-window
+    # drain pays the compile and the recorded kops is cold-start noise, not
+    # steady-state protocol cost.
     cluster.update_batch(session, wl.batch(session))
+    cluster.update_batch(session, wl.batch(session))
+    for _g in cluster.shards:
+        _g.sync_now()
     fast = slow = accepts = 0
     t0 = _time.perf_counter()
     for _ in range(n_batches):

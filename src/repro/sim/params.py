@@ -32,6 +32,7 @@ ratios and RTT counts (see DESIGN.md §5).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Dict
 
 
 @dataclass
@@ -52,6 +53,15 @@ class SimParams:
 
     # --- master (single dispatch-thread server) -------------------------------
     master_update_cost_us: float = 1.3   # execute + respond, one update RPC
+    # Per-command execution-cost deltas on top of master_update_cost_us,
+    # keyed by OpType name (Fig. 10: command types are NOT equally priced —
+    # INCR carries no value payload, HMSET pays the hash-field lookup).
+    # SET is the calibration anchor (delta 0), so every SET-workload figure
+    # keeps the §5.1 napkin math above bit-for-bit.
+    op_cost_extra_us: Dict[str, float] = field(default_factory=lambda: {
+        "INCR": -0.3,
+        "HMSET": 1.0,
+    })
     master_read_cost_us: float = 1.0
     repl_send_cost_us: float = 0.4       # issue one backup sync RPC
     repl_ack_cost_us: float = 0.3        # process one backup ack
