@@ -1,4 +1,4 @@
-.PHONY: check test bench-scaling bench-fastpath bench-txn bench-migration
+.PHONY: check test bench-scaling bench-fastpath bench-txn bench-migration bench-crdt
 
 check:
 	bash scripts/check.sh
@@ -17,3 +17,6 @@ bench-txn:
 
 bench-migration:
 	PYTHONPATH=src python -m benchmarks.fig_migration
+
+bench-crdt:
+	PYTHONPATH=src python -m benchmarks.fig_crdt

@@ -10,7 +10,8 @@ import json
 import pathlib
 import time
 
-BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_curp.json"
+BENCH_DIR = pathlib.Path(__file__).resolve().parent
+BENCH_JSON = BENCH_DIR.parent / "BENCH_curp.json"
 
 
 def _jsonable(v):
@@ -34,10 +35,12 @@ def write_bench_json(results, path: pathlib.Path = BENCH_JSON) -> None:
     the rest of the perf trajectory.
     """
     figures = {}
+    prior_time = None
     if path.exists():
         try:
             prior = json.loads(path.read_text())
             figures = dict(prior.get("figures", {}))
+            prior_time = prior.get("unix_time")
         except (json.JSONDecodeError, OSError):
             figures = {}
     # Perf trajectory: for every numeric metric that already had a recorded
@@ -56,13 +59,30 @@ def write_bench_json(results, path: pathlib.Path = BENCH_JSON) -> None:
         }
         if moved:
             deltas[name] = moved
+    now = time.time()
     figures.update({
         name: {
             "us_per_call": dt,
+            "unix_time": now,
             "derived": {k: _jsonable(v) for k, v in derived.items()},
         }
         for name, dt, derived in results
     })
+    # Staleness guard: a figure carried over from the prior file whose
+    # benchmark module was edited AFTER the figure last ran is showing
+    # numbers the current code may no longer produce (how fig10's recorded
+    # medians survived a cost-model change unnoticed).  Warn, don't fail —
+    # partial runs are legitimate; the warning says which job to re-run.
+    ran = {name for name, _dt, _d in results}
+    for name, entry in sorted(figures.items()):
+        if name in ran:
+            continue
+        mod = BENCH_DIR / f"{name}.py"
+        stamp = entry.get("unix_time", prior_time)
+        if mod.exists() and stamp is not None and mod.stat().st_mtime > stamp:
+            print(f"WARNING: {path.name} entry '{name}' predates "
+                  f"benchmarks/{mod.name} (module edited since that figure "
+                  f"last ran) — stale numbers; re-run it")
     payload = {
         "schema": 1,
         "unix_time": time.time(),
@@ -86,6 +106,7 @@ def main() -> None:
         fig10_ops,
         fig11_witness_capacity,
         fig12_batchsize,
+        fig_crdt,
         fig_fastpath,
         fig_migration,
         fig_scaling,
@@ -105,6 +126,7 @@ def main() -> None:
         ("fig_fastpath", fig_fastpath.main),
         ("fig_txn", fig_txn.main),
         ("fig_migration", fig_migration.main),
+        ("fig_crdt", fig_crdt.main),
         ("roofline_table", roofline_table.main),
     ]
     results = []

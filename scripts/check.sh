@@ -15,7 +15,11 @@
 # fan-out-beats-sequential, and wound/wait-cuts-aborts assertions;
 # fig_migration keeps its zero-lost-writes, strict-linearizability,
 # untouched-slot fast-ratio, slot-route parity, and rebalance-beats-static
-# assertions), not the measured numbers.
+# assertions; fig_crdt keeps the merge-lattice separation — hot-counter
+# INCR fast-frac >=0.95 vs plain SET <=0.2 at skew 1.0 — the 16x16
+# matrix/scalar and record-kernel/oracle bit-exact parity checks, and the
+# merge-aware strict-linearizability assertion on every scenario), not the
+# measured numbers.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -25,4 +29,5 @@ python -m benchmarks.fig_scaling --smoke
 python -m benchmarks.fig_fastpath --smoke
 python -m benchmarks.fig_txn --smoke
 python -m benchmarks.fig_migration --smoke
+python -m benchmarks.fig_crdt --smoke
 echo "check.sh: all green"

@@ -131,3 +131,12 @@ class ClientSession:
 
     def op_del(self, key) -> Op:
         return Op(OpType.DEL, (key,), (), self.next_rpc_id())
+
+    def op_sadd(self, key, member) -> Op:
+        return Op(OpType.SADD, (key,), (member,), self.next_rpc_id())
+
+    def op_append(self, key, chunk) -> Op:
+        return Op(OpType.APPEND, (key,), (chunk,), self.next_rpc_id())
+
+    def op_max(self, key, n) -> Op:
+        return Op(OpType.MAX, (key,), (n,), self.next_rpc_id())

@@ -44,6 +44,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .merge import CLS_OTHER, conflicts
 from .types import GcResp, Op, RecordStatus, RpcId, WitnessMode
 
 _M32 = 0xFFFFFFFF
@@ -60,6 +61,17 @@ class _Held:
     rpc_id: RpcId
     request: Op
     gc_age: int = 0
+    op_class: int = 0
+
+
+def _op_pairs(key_hashes, request: Optional[Op]):
+    """The (key_hash, class) pairs to place — same derivation rule as
+    ``Witness._pairs``: trust the request's lattice expansion only when the
+    caller passed its own routing hashes; bare hash lists get the
+    conservative OTHER class (un-widened CURP check)."""
+    if request is not None and tuple(request.key_hashes()) == tuple(key_hashes):
+        return request.hash_classes()
+    return tuple((kh, CLS_OTHER) for kh in key_hashes)
 
 
 def _lanes(khs) -> Tuple[np.ndarray, np.ndarray]:
@@ -151,8 +163,10 @@ class DeviceWitness:
         self.master_id: Optional[int] = None
         self.gang = gang          # shared gang, or private (made on start)
         self.lane: Optional[int] = None
-        # mixed (q_hi, q_lo) -> protocol metadata: the recovery-time view.
-        self._held: Dict[Tuple[int, int], _Held] = {}
+        # mixed (q_hi, q_lo) -> {rpc_id -> metadata}: the recovery-time
+        # view.  Nested because the merge lattice lets several MERGEABLE
+        # records of one key coexist (one device slot each, one rpc each).
+        self._held: Dict[Tuple[int, int], Dict[RpcId, _Held]] = {}
         self.stats = {"accepts": 0, "rejects_conflict": 0, "rejects_full": 0,
                       "rejects_mode": 0, "gc_drops": 0, "kernel_batches": 0}
 
@@ -204,64 +218,77 @@ class DeviceWitness:
             return []
         from repro.kernels import gang_record
 
-        if any(len(op.key_hashes()) != 1 for op in ops):
-            return self._record_groups(ops)
-        khs = [op.key_hashes()[0] for op in ops]
+        pairs = [op.hash_classes() for op in ops]
+        if any(len(p) != 1 for p in pairs):
+            return self._record_groups(ops, pairs)
+        khs = [p[0][0] for p in pairs]
+        kcls = np.fromiter((p[0][1] for p in pairs), np.int32, len(pairs))
         hi, lo = _lanes(khs)
         rhi, rlo = _rpc_lanes([op.rpc_id for op in ops])
         lanes = np.full(len(ops), self.lane, np.int32)
         rsn, qh, ql, table = gang_record(
-            self.gang.table, self.n_sets, hi, lo, lanes, rhi, rlo
+            self.gang.table, self.n_sets, hi, lo, lanes, rhi, rlo, kcls
         )
         self.gang.table = table
         self.stats["kernel_batches"] += 1
         return [
             self._settle(int(rsn[i]), [(int(qh[i]), int(ql[i]))],
-                         ops[i].rpc_id, ops[i])
+                         ops[i].rpc_id, ops[i], [int(kcls[i])])
             for i in range(len(ops))
         ]
 
-    def _record_groups(self, ops: List[Op]) -> List[RecordStatus]:
-        """Batch of (possibly multi-key) ops via the grouped kernel: every
-        op resolves all-or-nothing, whole batch in ONE dispatch."""
+    def _record_groups(self, ops: List[Op], pairs=None) -> List[RecordStatus]:
+        """Batch of (possibly multi-pair) ops via the grouped kernel: every
+        op resolves all-or-nothing, whole batch in ONE dispatch.  Groups are
+        the ops' lattice pairs — HMSET contributes its derived per-field
+        FIELD sub-hashes, so field overlap conflicts in-kernel."""
         from repro.kernels import gang_record_groups
 
-        groups = [op.key_hashes() for op in ops]
-        G = len(groups)
-        K = max(len(g) for g in groups)
+        if pairs is None:
+            pairs = [op.hash_classes() for op in ops]
+        G = len(pairs)
+        K = max(len(p) for p in pairs)
         khi = np.zeros((G, K), np.uint32)
         klo = np.zeros((G, K), np.uint32)
         kval = np.zeros((G, K), np.int32)
-        for g, khs in enumerate(groups):
-            hi, lo = _lanes(khs)
-            khi[g, :len(khs)] = hi
-            klo[g, :len(khs)] = lo
-            kval[g, :len(khs)] = 1
+        kcls = np.zeros((G, K), np.int32)
+        for g, p in enumerate(pairs):
+            hi, lo = _lanes([kh for kh, _c in p])
+            khi[g, :len(p)] = hi
+            klo[g, :len(p)] = lo
+            kval[g, :len(p)] = 1
+            kcls[g, :len(p)] = [c for _kh, c in p]
         rhi, rlo = _rpc_lanes([op.rpc_id for op in ops])
         lanes = np.full(G, self.lane, np.int32)
         res = gang_record_groups(
-            self.gang.table, self.n_sets, khi, klo, kval, lanes, rhi, rlo
+            self.gang.table, self.n_sets, khi, klo, kval, lanes, rhi, rlo,
+            kcls,
         )
         self.gang.table = res.table
         self.stats["kernel_batches"] += 1
         out = []
         for g, op in enumerate(ops):
             keys = [(int(res.q_hi[g, k]), int(res.q_lo[g, k]))
-                    for k in range(len(groups[g]))]
+                    for k in range(len(pairs[g]))]
             out.append(self._settle(int(res.reasons[g]), keys,
-                                    op.rpc_id, op))
+                                    op.rpc_id, op,
+                                    [c for _kh, c in pairs[g]]))
         return out
 
     def _settle(self, reason: int, keys: List[Tuple[int, int]],
-                rpc_id: RpcId, request: Op) -> RecordStatus:
+                rpc_id: RpcId, request: Op,
+                classes: List[int]) -> RecordStatus:
         """Fold a kernel reason code into protocol status + mirror + stats.
 
         The mirror write mirrors the Python reference's slot overwrite: on
         any accept (fresh insert or idempotent dup) every key's entry is
-        re-stamped with age 0."""
+        re-stamped with age 0.  Entries nest per rpc so mergeable same-key
+        records (each holding its own device slot) coexist in the mirror."""
         if reason in (_R_INSERT, _R_DUP):
-            for key in keys:
-                self._held[key] = _Held(rpc_id, request)
+            for key, cls in zip(keys, classes):
+                self._held.setdefault(key, {})[rpc_id] = _Held(
+                    rpc_id, request, op_class=cls
+                )
             self.stats["accepts"] += 1
             return RecordStatus.ACCEPTED
         if reason == _R_CONFLICT:
@@ -272,26 +299,29 @@ class DeviceWitness:
 
     def _record_keys(self, key_hashes: Tuple[int, ...], rpc_id: RpcId,
                      request: Op) -> RecordStatus:
-        """All-or-nothing multi-key record: ONE grouped-kernel dispatch
+        """All-or-nothing multi-pair record: ONE grouped-kernel dispatch
         whether the op accepts or rejects (the kernel leaves the table
         bit-identical on reject, so no rollback gc).  Dup/conflict verdicts
         come from the kernel-held rpc lanes — no host mirror input."""
         from repro.kernels import gang_record_groups
 
-        khs = list(key_hashes)
-        hi, lo = _lanes(khs)
+        pairs = _op_pairs(key_hashes, request)
+        hi, lo = _lanes([kh for kh, _c in pairs])
+        kcls = np.fromiter((c for _kh, c in pairs), np.int32, len(pairs))
         res = gang_record_groups(
             self.gang.table, self.n_sets,
-            hi[None, :], lo[None, :], np.ones((1, len(khs)), np.int32),
+            hi[None, :], lo[None, :], np.ones((1, len(pairs)), np.int32),
             np.array([self.lane], np.int32),
             np.array([rpc_id[0] & _M32], np.uint32),
             np.array([rpc_id[1] & _M32], np.uint32),
+            kcls[None, :],
         )
         self.gang.table = res.table
         self.stats["kernel_batches"] += 1
         keys = [(int(res.q_hi[0, k]), int(res.q_lo[0, k]))
-                for k in range(len(khs))]
-        return self._settle(int(res.reasons[0]), keys, rpc_id, request)
+                for k in range(len(pairs))]
+        return self._settle(int(res.reasons[0]), keys, rpc_id, request,
+                            [c for _kh, c in pairs])
 
     def _record_keys_rollback(self, key_hashes: Tuple[int, ...], rpc_id: RpcId,
                               request: Op) -> RecordStatus:
@@ -315,7 +345,10 @@ class DeviceWitness:
         if ok:
             self.gang.table = table
             for k in range(K):
-                self._held[(int(qh[k]), int(ql[k]))] = _Held(rpc_id, request)
+                key = (int(qh[k]), int(ql[k]))
+                self._held.setdefault(key, {})[rpc_id] = _Held(
+                    rpc_id, request, op_class=0
+                )
             self.stats["accepts"] += 1
             return RecordStatus.ACCEPTED
         # Roll back freshly inserted keys (the second dispatch on reject);
@@ -351,17 +384,20 @@ class DeviceWitness:
         for (key, rpc_id, clr) in zip(keys, rpc_ids, cleared):
             if not clr:
                 continue
-            held = self._held.get(key)
-            if held is not None and held.rpc_id == rpc_id:
-                del self._held[key]
+            by_rpc = self._held.get(key)
+            if by_rpc is not None and rpc_id in by_rpc:
+                del by_rpc[rpc_id]
+                if not by_rpc:
+                    del self._held[key]
             self.stats["gc_drops"] += 1
         stale: List[Op] = []
         seen: set = set()
-        for held in self._held.values():
-            held.gc_age += 1
-            if held.gc_age >= self.SUSPECT_AGE and held.rpc_id not in seen:
-                seen.add(held.rpc_id)
-                stale.append(held.request)
+        for by_rpc in self._held.values():
+            for held in by_rpc.values():
+                held.gc_age += 1
+                if held.gc_age >= self.SUSPECT_AGE and held.rpc_id not in seen:
+                    seen.add(held.rpc_id)
+                    stale.append(held.request)
         return GcResp(stale_requests=tuple(stale))
 
     def get_recovery_data(self, master_id: int) -> Tuple[Op, ...]:
@@ -370,28 +406,39 @@ class DeviceWitness:
             return ()
         self.mode = WitnessMode.RECOVERY
         out: Dict[RpcId, Op] = {}
-        for held in self._held.values():
-            out[held.rpc_id] = held.request     # dedupe multi-key entries
+        for by_rpc in self._held.values():
+            for held in by_rpc.values():
+                out[held.rpc_id] = held.request  # dedupe multi-key entries
         return tuple(out.values())
 
     # -- §A.1 consistent reads from backups ------------------------------------
-    def commutes_with_all(self, key_hashes: Tuple[int, ...]) -> bool:
+    def commutes_with_all(self, key_hashes: Tuple[int, ...],
+                          classes: Optional[Tuple[int, ...]] = None) -> bool:
+        """True iff no held record CONFLICTS with any query pair under the
+        merge lattice.  Without ``classes`` the query is the conservative
+        OTHER class (conflicts with every held class) — the original "no
+        held request touches these keys" read check."""
         if self.mode is not WitnessMode.NORMAL:
             return False
         if not key_hashes:
             return True
         from repro.kernels import np_keyhash2x32
 
+        if classes is None:
+            classes = (CLS_OTHER,) * len(key_hashes)
         hi, lo = _lanes(list(key_hashes))
         qh, ql = np_keyhash2x32(hi, lo)
-        return all(
-            (int(qh[i]), int(ql[i])) not in self._held
-            for i in range(len(key_hashes))
-        )
+        for i, cls in enumerate(classes):
+            by_rpc = self._held.get((int(qh[i]), int(ql[i])))
+            if by_rpc and any(
+                conflicts(h.op_class, cls) for h in by_rpc.values()
+            ):
+                return False
+        return True
 
     @property
     def occupancy(self) -> int:
-        return len(self._held)
+        return sum(len(by_rpc) for by_rpc in self._held.values())
 
 
 def gc_many(witnesses: Sequence[DeviceWitness],

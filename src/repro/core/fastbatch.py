@@ -45,10 +45,14 @@ from .types import Op, OpType, RecordStatus, WitnessMode
 
 _M32 = 0xFFFFFFFF
 
-# Ops the fused kernel understands: single-key plain updates.  Everything
-# else (txn legs, migration ops, multi-key msets) has protocol side effects
-# the one-dispatch pipeline doesn't model and takes the regular path.
-_PLAIN_UPDATES = {OpType.SET, OpType.INCR, OpType.HMSET, OpType.DEL}
+# Ops the fused kernel understands: single-key plain updates whose merge
+# lattice expands to exactly ONE (key_hash, class) pair — the kernel carries
+# one class lane per op slot.  Everything else (txn legs, migration ops,
+# multi-key msets, HMSETs with per-field FIELD pairs) has protocol side
+# effects or pair fan-out the one-dispatch pipeline doesn't model and takes
+# the regular path.
+_PLAIN_UPDATES = {OpType.SET, OpType.INCR, OpType.HMSET, OpType.DEL,
+                  OpType.SADD, OpType.APPEND, OpType.MAX}
 
 RING_CAP = 1024
 
@@ -78,6 +82,7 @@ class DeviceRing:
         self.n_shards = n_shards
         self.hi = jnp.zeros((n_shards, cap), jnp.uint32)
         self.lo = jnp.zeros((n_shards, cap), jnp.uint32)
+        self.cls = jnp.zeros((n_shards, cap), jnp.int32)
         self.tail = np.zeros(n_shards, np.int32)
         self.count = np.zeros(n_shards, np.int32)
         self._snap: Dict[int, _RingSnap] = {}
@@ -100,37 +105,45 @@ class DeviceRing:
         ``reserve`` more appends; False means the window doesn't fit and the
         caller must decline (or drain first)."""
         if not self._coherent(shard_id, master):
-            khs = [kh for e in master.log[master.synced_index:]
-                   for kh in e.op.key_hashes()]
-            n = len(khs)
+            pairs = [pair for e in master.log[master.synced_index:]
+                     for pair in e.op.hash_classes()]
+            n = len(pairs)
             if n + reserve > self.cap:
                 return False
-            self._rebuild_row(shard_id, khs)
+            self._rebuild_row(shard_id, pairs)
             self._snap[shard_id] = _RingSnap(
                 master.log, len(master.log), master.synced_index
             )
         return int(self.count[shard_id]) + reserve <= self.cap
 
-    def _rebuild_row(self, shard_id: int, khs: Sequence[int]) -> None:
+    def _rebuild_row(self, shard_id: int, pairs: Sequence) -> None:
+        """Mirror ``log[synced_index:]`` as (key_hash, class) lattice pairs —
+        the same expansion the master's host window refcounts, so the
+        kernel's matrix consult sees exactly the host conflict set."""
         import jax.numpy as jnp
 
         from repro.kernels import np_keyhash2x32
 
         hi = np.asarray(self.hi).copy()
         lo = np.asarray(self.lo).copy()
+        cl = np.asarray(self.cls).copy()
         hi[shard_id] = 0
         lo[shard_id] = 0
-        if khs:
+        cl[shard_id] = 0
+        if pairs:
+            khs = [kh for kh, _c in pairs]
             k_hi = np.fromiter(((k >> 32) & _M32 for k in khs),
                                np.uint32, len(khs))
             k_lo = np.fromiter((k & _M32 for k in khs), np.uint32, len(khs))
             qh, ql = np_keyhash2x32(k_hi, k_lo)
             hi[shard_id, :len(khs)] = qh
             lo[shard_id, :len(khs)] = ql
+            cl[shard_id, :len(khs)] = [c for _kh, c in pairs]
         self.hi = jnp.asarray(hi)
         self.lo = jnp.asarray(lo)
+        self.cls = jnp.asarray(cl)
         self.tail[shard_id] = 0
-        self.count[shard_id] = len(khs)
+        self.count[shard_id] = len(pairs)
 
     def committed(self, shard_id: int, master, appended: int) -> None:
         """The fused batch's master rounds are done: verify the masters
@@ -156,7 +169,7 @@ class DeviceRing:
             return
         if master.synced_index == snap.synced:
             return
-        adv = sum(len(e.op.key_hashes())
+        adv = sum(len(e.op.hash_classes())
                   for e in master.log[snap.synced:master.synced_index])
         if adv > int(self.count[shard_id]):
             self.invalidate(shard_id)
@@ -214,6 +227,10 @@ class FusedBatchDriver:
             return None
         for op in ops:
             if op.op_type not in _PLAIN_UPDATES or len(op.keys) != 1:
+                return None
+            if len(op.hash_classes()) != 1:
+                # HMSET with fields fans out to FIELD sub-pairs; the fused
+                # kernel carries exactly one (hash, class) lane per op.
                 return None
         if len({op.rpc_id for op in ops}) != len(ops):
             # An in-batch retry of the same rpc breaks exec prediction
@@ -282,10 +299,12 @@ class FusedBatchDriver:
             for j, w in enumerate(g.witnesses[:f]):
                 lane_map[g.shard_id, j] = w.lane if w.lane is not None else 0
 
-        khs = [op.key_hashes()[0] for op in ops]
+        pairs = [op.hash_classes()[0] for op in ops]   # eligibility: 1 pair
+        khs = [kh for kh, _c in pairs]
         k_hi = np.fromiter(((k >> 32) & _M32 for k in khs),
                            np.uint32, len(khs))
         k_lo = np.fromiter((k & _M32 for k in khs), np.uint32, len(khs))
+        k_cls = np.fromiter((c for _kh, c in pairs), np.int32, len(pairs))
         r_hi = np.fromiter((op.rpc_id[0] & _M32 for op in ops),
                            np.uint32, len(ops))
         r_lo = np.fromiter((op.rpc_id[1] & _M32 for op in ops),
@@ -295,10 +314,12 @@ class FusedBatchDriver:
             gang.table, gang.n_sets, k_hi, k_lo, r_hi, r_lo, exec_pred,
             np.asarray(cluster.router.slot_map, np.int32), lane_map,
             self.ring.hi, self.ring.lo, self.ring.tail, self.ring.count,
+            key_cls=k_cls, ring_cls=self.ring.cls,
         )
         gang.table = res.table
         self.ring.hi = res.ring_hi
         self.ring.lo = res.ring_lo
+        self.ring.cls = res.ring_cls
         self.ring.count = np.asarray(res.counts, np.int32).copy()
         assert list(res.shard_ids) == shard_ids, \
             "device slot routing diverged from the host router"
@@ -315,7 +336,8 @@ class FusedBatchDriver:
         for b, op in enumerate(ops):
             key = (int(res.q_hi[b]), int(res.q_lo[b]))
             statuses_per_op.append([
-                w._settle(int(res.reasons[b, j]), [key], op.rpc_id, op)
+                w._settle(int(res.reasons[b, j]), [key], op.rpc_id, op,
+                          [int(k_cls[b])])
                 for j, w in enumerate(witnesses[shard_ids[b]])
             ])
 

@@ -16,6 +16,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .backup import LogEntry
+from .merge import conflicts
 from .rifl import RiflTable
 from .store import KVStore
 from .types import TXN_OPS, BackupSyncReq, ExecResult, Op, OpType, RpcId
@@ -58,7 +59,12 @@ class Master:
         self.log: List[LogEntry] = []
         self.synced_index = 0                 # log[:synced_index] is on backups
         self.witness_list_version = 0
-        self._unsynced_keyhash: Dict[int, int] = {}  # keyhash -> refcount
+        # The §3.2.3 unsynced window, merge-lattice aware: keyhash -> the
+        # {merge-class: refcount} map of unsynced (hash, class) pairs from
+        # Op.hash_classes().  A new op commutes iff none of its pairs
+        # CONFLICTS (repro.core.merge) with a held class at the same hash —
+        # e.g. INCR rides the fast path over unsynced INCRs of the same key.
+        self._unsynced_keyhash: Dict[int, Dict[int, int]] = {}
         self.sync_in_progress: Optional[PendingSync] = None
         self.want_sync: bool = False          # sync requested (batch full / conflict)
         self.owned_partition = None           # optional key filter (migration §3.6)
@@ -82,7 +88,32 @@ class Master:
         return len(self.log) - self.synced_index
 
     def _commutes(self, op: Op) -> bool:
-        return not any(kh in self._unsynced_keyhash for kh in op.key_hashes())
+        for kh, cls in op.hash_classes():
+            held = self._unsynced_keyhash.get(kh)
+            if not held:
+                continue
+            for held_cls in held:
+                if conflicts(held_cls, cls):
+                    return False
+        return True
+
+    def _window_add(self, op: Op) -> None:
+        for kh, cls in op.hash_classes():
+            per_cls = self._unsynced_keyhash.setdefault(kh, {})
+            per_cls[cls] = per_cls.get(cls, 0) + 1
+
+    def _window_remove(self, op: Op) -> None:
+        for kh, cls in op.hash_classes():
+            per_cls = self._unsynced_keyhash.get(kh)
+            if per_cls is None:
+                continue
+            cnt = per_cls.get(cls, 0) - 1
+            if cnt <= 0:
+                per_cls.pop(cls, None)
+                if not per_cls:
+                    self._unsynced_keyhash.pop(kh, None)
+            else:
+                per_cls[cls] = cnt
 
     def owns(self, op: Op) -> bool:
         if op.op_type is OpType.MIGRATE_IN:
@@ -178,8 +209,7 @@ class Master:
         result = self.store.execute(op, now)
         self.rifl.record_completion(op.rpc_id, result, synced=False)
         self.log.append(LogEntry(op, result))
-        for kh in op.key_hashes():
-            self._unsynced_keyhash[kh] = self._unsynced_keyhash.get(kh, 0) + 1
+        self._window_add(op)
         if op.op_type is OpType.MIGRATE_OUT:
             self.stats["migrated_out_keys"] += len(op.keys)
 
@@ -213,8 +243,7 @@ class Master:
         unsynced-window refcounts (symmetric with complete_sync's walk)."""
         self.rifl.record_completion(op.rpc_id, result, synced=False)
         self.log.append(LogEntry(op, result))
-        for kh in op.key_hashes():
-            self._unsynced_keyhash[kh] = self._unsynced_keyhash.get(kh, 0) + 1
+        self._window_add(op)
 
     def _handle_txn(self, op: Op, now: float) -> Tuple[str, ExecResult]:
         """PREPARE / COMMIT / ABORT legs of the 2PC (repro.core.txn).
@@ -318,13 +347,12 @@ class Master:
         through = self.sync_in_progress.through_index
         gc_entries: List[Tuple[int, RpcId]] = []
         for entry in self.log[self.synced_index:through]:
-            for kh in entry.op.key_hashes():
+            # gc entries enumerate the op's (hash, class) pairs — the same
+            # identity the witnesses recorded — so e.g. an HMSET's derived
+            # per-field FIELD slots are collected, not just the base key's.
+            for kh, _cls in entry.op.hash_classes():
                 gc_entries.append((kh, entry.op.rpc_id))
-                cnt = self._unsynced_keyhash.get(kh, 0) - 1
-                if cnt <= 0:
-                    self._unsynced_keyhash.pop(kh, None)
-                else:
-                    self._unsynced_keyhash[kh] = cnt
+            self._window_remove(entry.op)
         self.rifl.mark_synced_through(
             entry.op.rpc_id for entry in self.log[self.synced_index:through]
         )
@@ -342,12 +370,7 @@ class Master:
             return
         assert self.sync_in_progress is None
         for entry in self.log[self.synced_index:through]:
-            for kh in entry.op.key_hashes():
-                cnt = self._unsynced_keyhash.get(kh, 0) - 1
-                if cnt <= 0:
-                    self._unsynced_keyhash.pop(kh, None)
-                else:
-                    self._unsynced_keyhash[kh] = cnt
+            self._window_remove(entry.op)
         self.rifl.mark_synced_through(
             e.op.rpc_id for e in self.log[self.synced_index:through]
         )
@@ -375,12 +398,21 @@ class Master:
         self._unsynced_keyhash.clear()
 
     def replay_from_witness(self, requests: Sequence[Op]) -> int:
-        """Replay witness data (any order — all commutative); RIFL filters ops
-        that already made it to backups (§3.3).  Client acks are ignored while
-        replaying (§4.8).  Returns number of ops actually re-executed."""
+        """Replay witness data; RIFL filters ops that already made it to
+        backups (§3.3).  Client acks are ignored while replaying (§4.8).
+
+        With the merge lattice, a witness may hold SEVERAL live records of
+        one key (concurrent INCRs/SADDs/...), so the replay is a merge-FOLD,
+        not a last-writer-wins pick: every surviving request re-executes
+        through the state machine, whose merge-op semantics (repro.core.store)
+        are order-insensitive within a class.  Requests are additionally
+        sorted by rpc_id so two recoveries (or recovery vs a differently-
+        ordered witness extraction) produce bit-identical logs — order only
+        matters for the log/backup byte stream, never for the merged state.
+        Returns number of ops actually re-executed."""
         self.rifl.replay_mode = True
         executed = 0
-        for op in requests:
+        for op in sorted(requests, key=lambda o: o.rpc_id):
             if not self.owns(op):
                 continue  # §3.6: migrated partition remnants are ignored
             if self.rifl.check_duplicate(op.rpc_id) is not None:
@@ -388,8 +420,7 @@ class Master:
             result = self.store.execute(op, 0.0)
             self.rifl.record_completion(op.rpc_id, result, synced=False)
             self.log.append(LogEntry(op, result))
-            for kh in op.key_hashes():
-                self._unsynced_keyhash[kh] = self._unsynced_keyhash.get(kh, 0) + 1
+            self._window_add(op)
             executed += 1
         self.rifl.replay_mode = False
         self.want_sync = executed > 0 or self.unsynced_count > 0

@@ -678,6 +678,15 @@ class ShardedClientSession:
     def op_del(self, key) -> Op:
         return self._sub(key).op_del(key)
 
+    def op_sadd(self, key, member) -> Op:
+        return self._sub(key).op_sadd(key, member)
+
+    def op_append(self, key, chunk) -> Op:
+        return self._sub(key).op_append(key, chunk)
+
+    def op_max(self, key, n) -> Op:
+        return self._sub(key).op_max(key, n)
+
     def mset_parts(self, kvs,
                    prev: Optional[Dict[int, Op]] = None) -> Dict[int, Op]:
         """Split a multi-key set into per-shard MSET sub-ops, each carrying

@@ -13,6 +13,41 @@ from typing import Any, Dict, Optional, Tuple
 from .types import Op, OpType
 
 
+# --- CRDT merge-op value semantics (repro.core.merge) -----------------------
+# These three pure functions ARE the merge semantics: the store executes
+# them, and sim.linearizability imports THEM (not re-implementations) so the
+# checker's legality model cannot drift from the state machine.  Each is
+# order-insensitive over concurrent applications of its own class, which is
+# what makes the widened witness admissions linearizable.
+
+def merge_sadd(cur: Any, member: Any) -> frozenset:
+    """Set-union add.  A non-set prior value is superseded (SADD || SET is
+    a lattice CONFLICT, so the overwrite is only reachable sequentially)."""
+    base = cur if isinstance(cur, frozenset) else frozenset()
+    return base | {member}
+
+
+def merge_append(cur: Any, chunk: Any) -> Tuple[Any, ...]:
+    """Append under the CANONICAL sorted-chunks value: the stored value is
+    the sorted tuple of appended chunks, so any serialization of concurrent
+    appends — and any witness-replay order — converges bit-identically."""
+    if isinstance(cur, tuple):
+        base = cur
+    elif cur is None:
+        base = ()
+    else:
+        base = (cur,)
+    return tuple(sorted(base + (chunk,), key=repr))
+
+
+def merge_max(cur: Any, n: Any) -> Any:
+    """Bounded max: commutative and idempotent over numeric values; a
+    non-numeric prior value is superseded (sequential-only, as above)."""
+    if isinstance(cur, (int, float)) and isinstance(n, (int, float)):
+        return max(cur, n)
+    return n
+
+
 @dataclass
 class VersionedValue:
     value: Any
@@ -119,6 +154,21 @@ class KVStore:
             for f, v in fields:
                 h[f] = v
             self._set(key, h, now)
+            return "OK"
+        if t == OpType.SADD:
+            (key,) = op.keys
+            (member,) = op.args
+            self._set(key, merge_sadd(self.get(key), member), now)
+            return "OK"
+        if t == OpType.APPEND:
+            (key,) = op.keys
+            (chunk,) = op.args
+            self._set(key, merge_append(self.get(key), chunk), now)
+            return "OK"
+        if t == OpType.MAX:
+            (key,) = op.keys
+            (n,) = op.args
+            self._set(key, merge_max(self.get(key), n), now)
             return "OK"
         if t == OpType.MSET:
             for key, value in zip(op.keys, op.args):

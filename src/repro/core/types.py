@@ -49,6 +49,12 @@ class OpType(enum.Enum):
     MSET = "MSET"         # multi-key atomic set (exercises multi-key witness path)
     DEL = "DEL"
     NOOP = "NOOP"
+    # CRDT-flavoured merge ops (repro.core.merge): commute with themselves
+    # by construction, so the widened witness check admits concurrent
+    # same-key pairs on the 1-RTT fast path.
+    SADD = "SADD"         # set-add (union merge)
+    APPEND = "APPEND"     # append (canonical sorted-chunks merge)
+    MAX = "MAX"           # bounded max (idempotent, commutative)
     # Mini-transaction subsystem (repro.core.txn): single-shard atomic
     # read+write op, and the per-shard legs of the RIFL-identified 2PC.
     TXN = "TXN"                   # single-shard read-set + write-set, 1 RTT
@@ -65,6 +71,7 @@ class OpType(enum.Enum):
 
 # Which ops are updates (need durability) vs reads.
 UPDATE_OPS = {OpType.SET, OpType.INCR, OpType.HMSET, OpType.MSET, OpType.DEL,
+              OpType.SADD, OpType.APPEND, OpType.MAX,
               OpType.TXN, OpType.TXN_PREPARE, OpType.TXN_COMMIT,
               OpType.TXN_ABORT, OpType.MIGRATE_IN, OpType.MIGRATE_OUT}
 
@@ -97,6 +104,21 @@ class Op:
             khs = tuple(keyhash(k) for k in self.keys)
             object.__setattr__(self, "_khs", khs)
         return khs
+
+    def hash_classes(self) -> Tuple[Tuple[int, int], ...]:
+        """Memoized ``(key_hash, merge-class)`` pairs (repro.core.merge).
+
+        This is the commutativity identity of the op: what witnesses record,
+        masters refcount in the unsynced window, and gc entries enumerate.
+        ``key_hashes()`` stays the ROUTING identity (one hash per key);
+        HMSET's derived per-field FIELD pairs appear only here."""
+        hcs = self.__dict__.get("_hcs")
+        if hcs is None:
+            from .merge import op_hash_classes   # lazy: merge imports types
+
+            hcs = tuple(op_hash_classes(self))
+            object.__setattr__(self, "_hcs", hcs)
+        return hcs
 
 
 class RecordStatus(enum.Enum):

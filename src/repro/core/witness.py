@@ -15,6 +15,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from .merge import CLS_OTHER, conflicts
 from .types import (
     GcResp,
     Op,
@@ -31,6 +32,7 @@ class _Slot:
     request: Optional[Op] = None
     occupied: bool = False
     gc_age: int = 0  # number of master gc rounds survived (§4.5 suspicion)
+    op_class: int = 0  # merge-lattice class of the held pair (repro.core.merge)
 
 
 class Witness:
@@ -74,47 +76,71 @@ class Witness:
     ) -> RecordStatus:
         """Accept iff commutative with all held requests AND space available.
 
+        Commutativity is the WIDENED merge-lattice relation (repro.core.merge):
+        a same-key-hash pair conflicts only if its op classes conflict, so two
+        concurrent INCRs (or SADDs, APPENDs, MAXes, disjoint-field HMSETs) of
+        one key coexist in different ways of the same set.
+
         Multi-object updates (§4.2): the commutativity and space check runs for
         every affected object; on accept the request is written n times, once
-        per object.
+        per object.  Ways are RESERVED as the placement loop claims them —
+        two pairs of one op that land in the same set take distinct free ways
+        (and reject as full when the set can't seat them all), instead of the
+        old compute-all-then-write aliasing that let the second key silently
+        clobber the first out of gc/recovery data.
         """
         if self.mode is not WitnessMode.NORMAL or master_id != self.master_id:
             self.stats["rejects_mode"] += 1
             return RecordStatus.REJECTED
 
-        placements: List[Tuple[int, int]] = []  # (set_idx, way_idx) per key
-        for kh in key_hashes:
+        pairs = self._pairs(key_hashes, request)
+        placements: List[Tuple[int, int, int, int]] = []  # (set, way, kh, cls)
+        claimed: set = set()   # (set_idx, way) taken by earlier pairs of THIS op
+        for kh, cls in pairs:
             set_idx = kh % self.n_sets
             ways = self._slots[set_idx]
             free_way = None
             for w, slot in enumerate(ways):
                 if slot.occupied:
-                    if slot.key_hash == kh and slot.rpc_id != rpc_id:
+                    if slot.key_hash == kh and slot.rpc_id == rpc_id:
+                        # Duplicate record RPC (client retry): idempotent accept.
+                        free_way = w
+                        break
+                    if slot.key_hash == kh and conflicts(slot.op_class, cls):
                         # Non-commutative with a held request: must reject —
                         # the witness cannot order them (§3.2.2).
                         self.stats["rejects_conflict"] += 1
                         self._note_suspect(slot)
                         return RecordStatus.REJECTED
-                    if slot.rpc_id == rpc_id and slot.key_hash == kh:
-                        # Duplicate record RPC (client retry): idempotent accept.
-                        free_way = w
-                        break
-                elif free_way is None:
+                elif free_way is None and (set_idx, w) not in claimed:
                     free_way = w
             if free_way is None:
                 self.stats["rejects_full"] += 1
                 return RecordStatus.REJECTED
-            placements.append((set_idx, free_way))
+            claimed.add((set_idx, free_way))
+            placements.append((set_idx, free_way, kh, cls))
 
-        for kh, (set_idx, way) in zip(key_hashes, placements):
+        for set_idx, way, kh, cls in placements:
             slot = self._slots[set_idx][way]
             slot.key_hash = kh
             slot.rpc_id = rpc_id
             slot.request = request
             slot.occupied = True
             slot.gc_age = 0
+            slot.op_class = cls
         self.stats["accepts"] += 1
         return RecordStatus.ACCEPTED
+
+    @staticmethod
+    def _pairs(key_hashes: Tuple[int, ...], request: Optional[Op]):
+        """The (key_hash, class) pairs to place.  Derived from the request
+        when the caller passed its routing hashes (the Fig. 4 RPC always
+        does); a bare hash list falls back to the conservative OTHER class,
+        reproducing the un-widened check exactly."""
+        if request is not None and \
+                tuple(request.key_hashes()) == tuple(key_hashes):
+            return request.hash_classes()
+        return tuple((kh, CLS_OTHER) for kh in key_hashes)
 
     def record_batch(self, master_id: int, ops: List[Op]) -> List[RecordStatus]:
         """One witness invocation for a whole update batch (the batched
@@ -164,14 +190,21 @@ class Witness:
         return tuple(out.values())
 
     # -- §A.1 consistent reads from backups ------------------------------------
-    def commutes_with_all(self, key_hashes: Tuple[int, ...]) -> bool:
-        """True iff no held request touches any of these keys (read check)."""
+    def commutes_with_all(self, key_hashes: Tuple[int, ...],
+                          classes: Optional[Tuple[int, ...]] = None) -> bool:
+        """True iff no held request CONFLICTS with any of these pairs under
+        the merge lattice.  Without ``classes`` the query is the conservative
+        OTHER class — it conflicts with every held class, i.e. the original
+        "no held request touches these keys" read check."""
         if self.mode is not WitnessMode.NORMAL:
             return False
-        for kh in key_hashes:
+        if classes is None:
+            classes = (CLS_OTHER,) * len(key_hashes)
+        for kh, cls in zip(key_hashes, classes):
             set_idx = kh % self.n_sets
             for slot in self._slots[set_idx]:
-                if slot.occupied and slot.key_hash == kh:
+                if slot.occupied and slot.key_hash == kh \
+                        and conflicts(slot.op_class, cls):
                     return False
         return True
 

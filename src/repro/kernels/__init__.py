@@ -22,6 +22,8 @@ Pallas so the dry-run roofline reflects real XLA numbers (DESIGN.md §4).
 from .ops import (
     DEFAULT_N_SLOTS,
     FastPathResult,
+    conflict_matrix_np,
+    matrix_rows,
     GangFastPathResult,
     GangRecordResult,
     GangTable,
@@ -62,4 +64,5 @@ __all__ = [
     "GangTable", "GangRecordResult", "GangFastPathResult",
     "gang_record", "gang_record_groups", "gang_gc", "gang_fastpath_batch",
     "np_keyhash2x32", "ref_gang_record", "ref_gang_gc",
+    "matrix_rows", "conflict_matrix_np",
 ]

@@ -40,6 +40,8 @@ from .ref import (
     U32,
     GangTable,
     WitnessTable,
+    conflict_matrix_np,
+    matrix_rows,
     np_keyhash2x32,
     ref_conflict_scan,
     ref_gang_gc,
@@ -219,14 +221,14 @@ def _pad_valid(B: int, *arrays):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "tile_sets"))
-def _witness_record_impl(table: WitnessTable, q_hi, q_lo, q_valid,
+def _witness_record_impl(table: WitnessTable, q_hi, q_lo, q_cls, q_valid,
                          interpret: bool, tile_sets: int):
     S, _W = table.occ.shape
     qhi_f, qlo_f, sets_f, rstart, n_rounds, perm = _setpar_prep(
         S, q_hi, q_lo, q_valid
     )
     acc_f, new_table = witness_record_setpar_pallas(
-        table, qhi_f, qlo_f, sets_f, rstart, n_rounds,
+        table, qhi_f, qlo_f, sets_f, q_cls[perm], rstart, n_rounds,
         tile_sets=tile_sets, interpret=interpret,
     )
     return _unsort(perm, acc_f), new_table
@@ -289,15 +291,18 @@ def shard_route(hi, lo, n_shards: int | None = None, *,
     return out[:n]
 
 
-def witness_record(table: WitnessTable, q_hi, q_lo,
+def witness_record(table: WitnessTable, q_hi, q_lo, q_cls=None,
                    *, interpret: bool | None = None,
                    tile_sets: int = DEFAULT_TILE_SETS):
     """Batched record RPCs against a device-side witness table, resolved by
     the set-parallel kernel (order preserved per set; sets in parallel).
 
-    Returns (accepted [B] int32, new_table).  Table buffers are aliased
-    in-program (no intermediate copy inside the dispatch); rebind ``table``
-    to the returned table (see witness_record.py for the exact contract).
+    ``q_cls`` is the optional per-query merge-lattice op class
+    (repro.core.merge; default SET, which reproduces the classless any-hit
+    conflict rule).  Returns (accepted [B] int32, new_table).  Table buffers
+    are aliased in-program (no intermediate copy inside the dispatch);
+    rebind ``table`` to the returned table (see witness_record.py for the
+    exact contract).
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -305,9 +310,11 @@ def witness_record(table: WitnessTable, q_hi, q_lo,
     q_hi = np.asarray(q_hi, np.uint32)
     q_lo = np.asarray(q_lo, np.uint32)
     (B,) = q_hi.shape
-    q_hi, q_lo, valid = _pad_valid(B, q_hi, q_lo)
+    q_cls = (np.zeros((B,), np.int32) if q_cls is None
+             else np.asarray(q_cls, np.int32))
+    q_hi, q_lo, q_cls, valid = _pad_valid(B, q_hi, q_lo, q_cls)
     acc, new_table = _witness_record_impl(
-        table, q_hi, q_lo, valid, interpret, tile_sets
+        table, q_hi, q_lo, jnp.asarray(q_cls), valid, interpret, tile_sets
     )
     return acc[:B], new_table
 
@@ -335,10 +342,16 @@ def witness_gc(table: WitnessTable, g_hi, g_lo,
     )
 
 
-def conflict_scan(w_hi, w_lo, w_valid, q_hi, q_lo,
+def conflict_scan(w_hi, w_lo, w_valid, q_hi, q_lo, q_cls=None,
                   *, block_b: int = 256, block_u: int = 512,
                   interpret: bool | None = None):
-    """Commutativity check of B queries vs a U-entry unsynced window."""
+    """Commutativity check of B queries vs a U-entry unsynced window.
+
+    ``w_valid`` packs each window entry's merge-lattice class (0 invalid,
+    else 1 + class; legacy 0/1 callers get class SET) and ``q_cls`` is the
+    optional per-query class — same in-dispatch matrix consult as the
+    witness record kernels.
+    """
     if interpret is None:
         interpret = not _on_tpu()
     _count_dispatch()
@@ -347,13 +360,18 @@ def conflict_scan(w_hi, w_lo, w_valid, q_hi, q_lo,
     w_valid = jnp.asarray(w_valid, jnp.int32)
     q_hi = jnp.asarray(q_hi, U32)
     q_lo = jnp.asarray(q_lo, U32)
+    if q_cls is None:
+        q_cls = jnp.zeros(q_hi.shape, jnp.int32)
+    else:
+        q_cls = jnp.asarray(q_cls, jnp.int32)
     whp, u = _pad_to(w_hi, block_u)
     wlp, _ = _pad_to(w_lo, block_u)
     wvp, _ = _pad_to(w_valid, block_u)      # padding is valid=0 => no hits
     qhp, b = _pad_to(q_hi, block_b)
     qlp, _ = _pad_to(q_lo, block_b)
+    qcp, _ = _pad_to(q_cls, block_b)
     out = conflict_scan_pallas(
-        whp, wlp, wvp, qhp, qlp,
+        whp, wlp, wvp, qhp, qlp, qcp,
         block_b=block_b, block_u=block_u, interpret=interpret,
     )
     return out[:b]
@@ -375,7 +393,7 @@ class FastPathResult(NamedTuple):
 @functools.partial(
     jax.jit, static_argnames=("n_slots", "interpret", "tile_sets")
 )
-def _fastpath_impl(table, w_hi, w_lo, w_valid, k_hi, k_lo, k_valid,
+def _fastpath_impl(table, w_hi, w_lo, w_valid, k_hi, k_lo, k_cls, k_valid,
                    slot_map, n_slots: int, interpret: bool, tile_sets: int):
     # Hash: bit-exact with the keyhash2x32 Pallas kernel (same fmix32 chain);
     # inlined here so XLA fuses it with the sort/segment prep.
@@ -390,7 +408,7 @@ def _fastpath_impl(table, w_hi, w_lo, w_valid, k_hi, k_lo, k_valid,
         S, qh, ql, k_valid
     )
     acc_f, con_f, new_table = fastpath_record_scan_pallas(
-        table, qhi_f, qlo_f, sets_f, rstart, n_rounds,
+        table, qhi_f, qlo_f, sets_f, k_cls[perm], rstart, n_rounds,
         w_hi, w_lo, w_valid, tile_sets=tile_sets, interpret=interpret,
     )
     return (_unsort(perm, acc_f), _unsort(perm, con_f), shard_ids,
@@ -398,7 +416,7 @@ def _fastpath_impl(table, w_hi, w_lo, w_valid, k_hi, k_lo, k_valid,
 
 
 def fastpath_batch(
-    table: WitnessTable, key_hi, key_lo,
+    table: WitnessTable, key_hi, key_lo, key_cls=None,
     *, window_hi=None, window_lo=None, window_valid=None,
     n_shards: int = 1, slot_map=None, n_slots: int = DEFAULT_N_SLOTS,
     interpret: bool | None = None,
@@ -414,9 +432,13 @@ def fastpath_batch(
     kernel, and checks commutativity against the master's unsynced window —
     all in a single jitted program containing a single pallas_call.
 
-    The window arguments are MIXED lanes (as previously returned in
-    ``FastPathResult.q_hi/q_lo``); omit them for an empty window.  Table
-    buffers are donated; rebind to ``result.table``.
+    ``key_cls`` is the optional per-op merge-lattice class (default SET);
+    it widens BOTH in-dispatch decisions — witness record and window scan —
+    with the same matrix as the Python path.  The window arguments are
+    MIXED lanes (as previously returned in ``FastPathResult.q_hi/q_lo``),
+    with ``window_valid`` packing the entry class (0 invalid, else
+    1 + class; plain 0/1 means class SET); omit them for an empty window.
+    Table buffers are donated; rebind to ``result.table``.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -445,7 +467,9 @@ def fastpath_batch(
     # O(log B) entries.  Padded query lanes are masked out end to end;
     # padded window lanes carry valid=0 and can never hit.
     (B,) = key_hi.shape
-    key_hi, key_lo, k_valid = _pad_valid(B, key_hi, key_lo)
+    key_cls = (np.zeros((B,), np.int32) if key_cls is None
+               else np.asarray(key_cls, np.int32))
+    key_hi, key_lo, key_cls, k_valid = _pad_valid(B, key_hi, key_lo, key_cls)
     (U,) = w_hi.shape
     pad_u = _bucket(U) - U
     if pad_u:
@@ -453,8 +477,8 @@ def fastpath_batch(
         w_lo = np.concatenate([w_lo, np.zeros((pad_u,), np.uint32)])
         w_val = np.concatenate([w_val, np.zeros((pad_u,), np.int32)])
     acc, con, shard_ids, qh, ql, new_table = _fastpath_impl(
-        table, w_hi, w_lo, w_val, key_hi, key_lo, k_valid,
-        jnp.asarray(slot_map), n_slots, interpret, tile_sets,
+        table, w_hi, w_lo, w_val, key_hi, key_lo, jnp.asarray(key_cls),
+        k_valid, jnp.asarray(slot_map), n_slots, interpret, tile_sets,
     )
     return FastPathResult(
         acc[:B], con[:B], shard_ids[:B], qh[:B], ql[:B], new_table
@@ -532,8 +556,8 @@ class GangRecordResult(NamedTuple):
 
 
 @functools.partial(jax.jit, static_argnames=("n_sets", "interpret"))
-def _gang_groups_impl(table, k_hi, k_lo, k_valid, lanes, r_hi, r_lo, g_valid,
-                      n_sets: int, interpret: bool):
+def _gang_groups_impl(table, k_hi, k_lo, k_cls, k_valid, lanes, r_hi, r_lo,
+                      g_valid, n_sets: int, interpret: bool):
     G, K = k_hi.shape
     qh, ql = ref_keyhash2x32(k_hi.reshape(-1), k_lo.reshape(-1))
     qh = qh.reshape(G, K)
@@ -543,7 +567,7 @@ def _gang_groups_impl(table, k_hi, k_lo, k_valid, lanes, r_hi, r_lo, g_valid,
         + (ql & jnp.uint32(n_sets - 1)).astype(jnp.int32)
     )
     rsn, new_table = gang_record_groups_pallas(
-        table, qh, ql, rows, k_valid, r_hi, r_lo, g_valid,
+        table, qh, ql, rows, k_valid, k_cls, r_hi, r_lo, g_valid,
         interpret=interpret,
     )
     return rsn, qh, ql, new_table
@@ -551,16 +575,17 @@ def _gang_groups_impl(table, k_hi, k_lo, k_valid, lanes, r_hi, r_lo, g_valid,
 
 def gang_record_groups(
     table: GangTable, n_sets: int,
-    key_hi, key_lo, key_valid, lanes, rpc_hi, rpc_lo,
+    key_hi, key_lo, key_valid, lanes, rpc_hi, rpc_lo, key_cls=None,
     *, interpret: bool | None = None,
 ) -> GangRecordResult:
     """Batched per-group all-or-nothing record: ONE dispatch for a whole
     batch of (possibly multi-key) ops.
 
     ``key_hi``/``key_lo``/``key_valid`` are [G, K] RAW keyhash lanes padded
-    to a common key count; ``lanes``/``rpc_hi``/``rpc_lo`` are [G] (target
-    witness lane, rpc identity).  Groups resolve sequentially in index
-    order with the Python reference's exact placement semantics; dup/
+    to a common key count; ``key_cls`` is the optional [G, K] merge-lattice
+    class per key (default SET); ``lanes``/``rpc_hi``/``rpc_lo`` are [G]
+    (target witness lane, rpc identity).  Groups resolve sequentially in
+    index order with the Python reference's exact placement semantics; dup/
     conflict decisions use the kernel-held rpc lanes (no host mirror
     input).  Rebind ``result.table``.
     """
@@ -571,19 +596,22 @@ def gang_record_groups(
     key_lo = np.asarray(key_lo, np.uint32)
     key_valid = np.asarray(key_valid, np.int32)
     G, K = key_hi.shape
+    key_cls = (np.zeros((G, K), np.int32) if key_cls is None
+               else np.asarray(key_cls, np.int32))
     Gp, Kp = _bucket(G, lo=4), _bucket(K, lo=2)
     pad2 = ((0, Gp - G), (0, Kp - K))
     key_hi = np.pad(key_hi, pad2)
     key_lo = np.pad(key_lo, pad2)
     key_valid = np.pad(key_valid, pad2)
+    key_cls = np.pad(key_cls, pad2)
     lanes = np.pad(np.asarray(lanes, np.int32), (0, Gp - G))
     rpc_hi = np.pad(np.asarray(rpc_hi, np.uint32), (0, Gp - G))
     rpc_lo = np.pad(np.asarray(rpc_lo, np.uint32), (0, Gp - G))
     g_valid = np.zeros((Gp,), np.int32)
     g_valid[:G] = 1
     rsn, qh, ql, new_table = _gang_groups_impl(
-        table, key_hi, key_lo, key_valid, lanes, rpc_hi, rpc_lo,
-        jnp.asarray(g_valid), n_sets, interpret,
+        table, key_hi, key_lo, jnp.asarray(key_cls), key_valid, lanes,
+        rpc_hi, rpc_lo, jnp.asarray(g_valid), n_sets, interpret,
     )
     return GangRecordResult(
         np.asarray(rsn)[:G], np.asarray(qh)[:G, :K], np.asarray(ql)[:G, :K],
@@ -593,7 +621,7 @@ def gang_record_groups(
 
 @functools.partial(jax.jit, static_argnames=("n_sets", "interpret",
                                              "tile_sets"))
-def _gang_record_impl(table, k_hi, k_lo, k_valid, lanes, r_hi, r_lo,
+def _gang_record_impl(table, k_hi, k_lo, k_cls, k_valid, lanes, r_hi, r_lo,
                       n_sets: int, interpret: bool, tile_sets: int):
     R, _W = table.occ.shape
     qh, ql = ref_keyhash2x32(k_hi, k_lo)
@@ -604,18 +632,20 @@ def _gang_record_impl(table, k_hi, k_lo, k_valid, lanes, r_hi, r_lo,
         R, qh, ql, k_valid, sets=rows
     )
     rsn_f, new_table = gang_record_setpar_pallas(
-        table, qhi_f, qlo_f, r_hi[perm], r_lo[perm], sets_f, rstart,
-        n_rounds, tile_sets=tile_sets, interpret=interpret,
+        table, qhi_f, qlo_f, r_hi[perm], r_lo[perm], k_cls[perm], sets_f,
+        rstart, n_rounds, tile_sets=tile_sets, interpret=interpret,
     )
     return _unsort(perm, rsn_f), qh, ql, new_table
 
 
 def gang_record(
     table: GangTable, n_sets: int, key_hi, key_lo, lanes, rpc_hi, rpc_lo,
+    key_cls=None,
     *, interpret: bool | None = None, tile_sets: int = DEFAULT_TILE_SETS,
 ):
     """Set-parallel single-key record over the gang: ONE dispatch for a
     batch of [B] single-key ops (each with its own lane + rpc identity).
+    ``key_cls`` is the optional [B] merge-lattice class lane (default SET).
 
     Returns (reasons [B], q_hi [B], q_lo [B], table) — numpy outputs,
     caller order, same reason codes as ``gang_record_groups``.
@@ -626,14 +656,16 @@ def gang_record(
     key_hi = np.asarray(key_hi, np.uint32)
     key_lo = np.asarray(key_lo, np.uint32)
     (B,) = key_hi.shape
-    key_hi, key_lo, lanes, rpc_hi, rpc_lo, valid = _pad_valid(
-        B, key_hi, key_lo,
+    key_cls = (np.zeros((B,), np.int32) if key_cls is None
+               else np.asarray(key_cls, np.int32))
+    key_hi, key_lo, key_cls, lanes, rpc_hi, rpc_lo, valid = _pad_valid(
+        B, key_hi, key_lo, key_cls,
         np.asarray(lanes, np.int32),
         np.asarray(rpc_hi, np.uint32), np.asarray(rpc_lo, np.uint32),
     )
     rsn, qh, ql, new_table = _gang_record_impl(
-        table, key_hi, key_lo, valid, lanes, rpc_hi, rpc_lo,
-        n_sets, interpret, tile_sets,
+        table, key_hi, key_lo, jnp.asarray(key_cls), valid, lanes,
+        rpc_hi, rpc_lo, n_sets, interpret, tile_sets,
     )
     return (np.asarray(rsn)[:B], np.asarray(qh)[:B], np.asarray(ql)[:B],
             new_table)
@@ -701,13 +733,14 @@ class GangFastPathResult(NamedTuple):
     ring_hi: jnp.ndarray     # [NS, CAP] updated unsynced-window rings
     ring_lo: jnp.ndarray     # [NS, CAP]
     counts: np.ndarray       # [NS] post-append live-entry count per ring
+    ring_cls: jnp.ndarray    # [NS, CAP] merge-lattice class per ring entry
 
 
 @functools.partial(jax.jit, static_argnames=("n_slots", "n_sets", "f",
                                              "interpret", "tile_sets"))
-def _gang_fastpath_impl(table, k_hi, k_lo, k_valid, r_hi, r_lo, exec_pred,
-                        slot_map, lane_map, ring_hi, ring_lo,
-                        tail_slot, count,
+def _gang_fastpath_impl(table, k_hi, k_lo, k_cls, k_valid, r_hi, r_lo,
+                        exec_pred, slot_map, lane_map, ring_hi, ring_lo,
+                        ring_cls, tail_slot, count,
                         n_slots: int, n_sets: int, f: int,
                         interpret: bool, tile_sets: int):
     (B,) = k_hi.shape
@@ -717,16 +750,21 @@ def _gang_fastpath_impl(table, k_hi, k_lo, k_valid, r_hi, r_lo, exec_pred,
     slots = (ql % jnp.uint32(n_slots)).astype(jnp.int32)
     shard = slot_map[slots]                                        # [B]
     valid = k_valid.astype(jnp.int32)
+    qcls = k_cls.astype(jnp.int32)
+    mrow = matrix_rows(qcls)                                       # [B]
     # --- device-resident master window: ring conflict scan -----------------
     rhi_b = ring_hi[shard]                                         # [B, CAP]
     rlo_b = ring_lo[shard]
+    rcls_b = ring_cls[shard]                                       # [B, CAP]
     c_iota = jax.lax.iota(jnp.int32, CAP)[None, :]
     live = ((c_iota - tail_slot[shard][:, None]) % CAP) < count[shard][:, None]
     ring_hit = jnp.any(
-        live & (rhi_b == qh[:, None]) & (rlo_b == ql[:, None]), axis=1
+        live & (rhi_b == qh[:, None]) & (rlo_b == ql[:, None])
+        & (((mrow[:, None] >> rcls_b) & 1) == 1), axis=1
     )
     # Intra-batch window growth: op i also conflicts with any EARLIER op j
-    # of the same shard and key that will itself enter the window.
+    # of the same shard and key that will itself enter the window — unless
+    # the merge lattice says their classes commute (e.g. INCR over INCR).
     app = (exec_pred == 1) & (valid == 1)                          # [B]
     b_iota = jax.lax.iota(jnp.int32, B)
     earlier = b_iota[:, None] > b_iota[None, :]
@@ -734,6 +772,7 @@ def _gang_fastpath_impl(table, k_hi, k_lo, k_valid, r_hi, r_lo, exec_pred,
         (qh[:, None] == qh[None, :])
         & (ql[:, None] == ql[None, :])
         & (shard[:, None] == shard[None, :])
+        & (((mrow[:, None] >> qcls[None, :]) & 1) == 1)
         & earlier & app[None, :]
     )
     intra_hit = jnp.any(same, axis=1)
@@ -745,6 +784,7 @@ def _gang_fastpath_impl(table, k_hi, k_lo, k_valid, r_hi, r_lo, exec_pred,
     srow = jnp.where(app, shard, NS)
     ring_hi = ring_hi.at[srow, slot_pos].set(qh, mode="drop")
     ring_lo = ring_lo.at[srow, slot_pos].set(ql, mode="drop")
+    ring_cls = ring_cls.at[srow, slot_pos].set(qcls, mode="drop")
     new_count = count + jnp.zeros((NS,), jnp.int32).at[shard].add(
         app.astype(jnp.int32)
     )
@@ -760,12 +800,12 @@ def _gang_fastpath_impl(table, k_hi, k_lo, k_valid, r_hi, r_lo, exec_pred,
     )
     rsn_f, new_table = gang_record_setpar_pallas(
         table, qhi_f, qlo_f, rep(r_hi)[perm], rep(r_lo)[perm],
-        sets_f, rstart, n_rounds,
+        rep(qcls)[perm], sets_f, rstart, n_rounds,
         tile_sets=tile_sets, interpret=interpret,
     )
     reasons = _unsort(perm, rsn_f).reshape(B, f)
     return (reasons, conflicts, shard, qh, ql, new_table,
-            ring_hi, ring_lo, new_count)
+            ring_hi, ring_lo, new_count, ring_cls)
 
 
 def gang_fastpath_batch(
@@ -773,7 +813,8 @@ def gang_fastpath_batch(
     key_hi, key_lo, rpc_hi, rpc_lo, exec_pred,
     slot_map, lane_map,
     ring_hi, ring_lo, tail_slot, count,
-    *, interpret: bool | None = None,
+    *, key_cls=None, ring_cls=None,
+    interpret: bool | None = None,
     tile_sets: int = DEFAULT_TILE_SETS,
 ) -> GangFastPathResult:
     """The whole cluster-batch hot loop in ONE device dispatch:
@@ -788,8 +829,11 @@ def gang_fastpath_batch(
     with ``tail_slot``/``count`` the live span (count + appends must fit
     CAP — callers drain first).  ``exec_pred[b]=1`` marks ops that will
     execute at their master (RIFL duplicates don't re-enter the window).
-    Reasons/conflicts come back per op as numpy; ring buffers and table
-    stay on device.  Rebind table and ring state from the result.
+    ``key_cls`` ([B]) and ``ring_cls`` ([NS, CAP]) carry the merge-lattice
+    op classes for queries and ring entries (default SET = conflict with
+    everything, the legacy behaviour).  Reasons/conflicts come back per op
+    as numpy; ring buffers and table stay on device.  Rebind table and
+    ring state (including ``ring_cls``) from the result.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -800,24 +844,29 @@ def gang_fastpath_batch(
     _count_dispatch()
     key_hi = np.asarray(key_hi, np.uint32)
     (B,) = key_hi.shape
-    key_hi, key_lo, rpc_hi, rpc_lo, exec_pred, valid = _pad_valid(
-        B, key_hi, np.asarray(key_lo, np.uint32),
+    key_cls = (np.zeros((B,), np.int32) if key_cls is None
+               else np.asarray(key_cls, np.int32))
+    if ring_cls is None:
+        ring_cls = jnp.zeros(ring_hi.shape, jnp.int32)
+    key_hi, key_lo, key_cls, rpc_hi, rpc_lo, exec_pred, valid = _pad_valid(
+        B, key_hi, np.asarray(key_lo, np.uint32), key_cls,
         np.asarray(rpc_hi, np.uint32), np.asarray(rpc_lo, np.uint32),
         np.asarray(exec_pred, np.int32),
     )
     out = _gang_fastpath_impl(
-        table, key_hi, key_lo, valid, rpc_hi, rpc_lo, exec_pred,
-        jnp.asarray(slot_map), jnp.asarray(lane_map),
-        ring_hi, ring_lo,
+        table, key_hi, key_lo, jnp.asarray(key_cls), valid, rpc_hi, rpc_lo,
+        exec_pred, jnp.asarray(slot_map), jnp.asarray(lane_map),
+        ring_hi, ring_lo, ring_cls,
         jnp.asarray(np.asarray(tail_slot, np.int32)),
         jnp.asarray(np.asarray(count, np.int32)),
         n_slots, n_sets, f, interpret, tile_sets,
     )
-    reasons, conflicts, shard, qh, ql, new_table, rh, rl, new_count = out
+    (reasons, conflicts, shard, qh, ql, new_table, rh, rl, new_count,
+     rcls) = out
     return GangFastPathResult(
         np.asarray(reasons)[:B], np.asarray(conflicts)[:B],
         np.asarray(shard)[:B], np.asarray(qh)[:B], np.asarray(ql)[:B],
-        new_table, rh, rl, np.asarray(new_count),
+        new_table, rh, rl, np.asarray(new_count), rcls,
     )
 
 
@@ -831,4 +880,5 @@ __all__ = [
     "GangTable", "GangRecordResult", "GangFastPathResult",
     "gang_record", "gang_record_groups", "gang_gc", "gang_fastpath_batch",
     "np_keyhash2x32", "ref_gang_record", "ref_gang_gc",
+    "matrix_rows", "conflict_matrix_np",
 ]

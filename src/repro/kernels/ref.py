@@ -34,6 +34,41 @@ _MIX5 = np.uint32(5)
 _MIXC = np.uint32(0xE6546B64)
 
 
+# ---------------------------------------------------------------------------
+# Merge-lattice conflict matrix (repro.core.merge), kernel-consumable form.
+#
+# Occupancy packs the held op class: occ == 0 is empty, occ == 1 + class is
+# occupied (class SET == 0, so legacy all-SET tables are bit-identical with
+# the old 0/1 encoding).  A query carries its class as a separate q_cls lane;
+# conflict against an occupied way is then ONE bit test:
+#     ((CONFLICT_MATRIX[q_cls] >> (occ - 1)) & 1) == 1
+# ---------------------------------------------------------------------------
+def conflict_matrix_np() -> np.ndarray:
+    """The merge-lattice matrix as int32 bitmask rows.  Imported lazily:
+    repro.core imports repro.kernels at package init, so a module-level
+    back-edge from here into repro.core would cycle."""
+    from repro.core.merge import CONFLICT_MATRIX
+
+    return np.asarray(CONFLICT_MATRIX, np.int32)
+
+
+def matrix_rows(q_cls: jnp.ndarray) -> jnp.ndarray:
+    """``mrow[i] = CONFLICT_MATRIX[q_cls[i]]`` without a gather.
+
+    The matrix is a static Python constant, so the lookup unrolls to a
+    16-way where-sum over scalar literals — legal inside a Pallas kernel
+    body (no dynamic indexing of traced constants) and trivially fused by
+    XLA on the jnp oracle path.  Shared by oracles AND kernels so both
+    consult the exact same matrix.
+    """
+    rows = conflict_matrix_np()
+    q_cls = q_cls.astype(jnp.int32)
+    mrow = jnp.zeros(q_cls.shape, jnp.int32)
+    for c in range(rows.shape[0]):
+        mrow = mrow + jnp.where(q_cls == c, np.int32(rows[c]), np.int32(0))
+    return mrow
+
+
 def fmix32(x: jnp.ndarray) -> jnp.ndarray:
     """murmur3 32-bit finalizer (full avalanche)."""
     x = x.astype(U32)
@@ -56,10 +91,15 @@ def ref_keyhash2x32(hi: jnp.ndarray, lo: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.
 
 
 class WitnessTable(NamedTuple):
-    """Device-side witness state: S sets x W ways of (hi, lo) keyhash slots."""
+    """Device-side witness state: S sets x W ways of (hi, lo) keyhash slots.
+
+    ``occ`` packs the held op class: 0 = empty, 1 + class = occupied
+    (repro.core.merge; class SET == 0, so an all-SET table reads 0/1 exactly
+    as before the merge-lattice widening).
+    """
     keys_hi: jnp.ndarray   # [S, W] uint32
     keys_lo: jnp.ndarray   # [S, W] uint32
-    occ: jnp.ndarray       # [S, W] int32 (0/1)
+    occ: jnp.ndarray       # [S, W] int32 (0 = empty, else 1 + op class)
 
     @staticmethod
     def empty(n_sets: int, n_ways: int) -> "WitnessTable":
@@ -72,19 +112,29 @@ class WitnessTable(NamedTuple):
 
 
 def ref_witness_record(
-    table: WitnessTable, q_hi: jnp.ndarray, q_lo: jnp.ndarray
+    table: WitnessTable, q_hi: jnp.ndarray, q_lo: jnp.ndarray,
+    q_cls: jnp.ndarray = None,
 ) -> Tuple[jnp.ndarray, WitnessTable]:
-    """Sequential batched record.  Returns (accepted [B] int32, new table)."""
+    """Sequential batched record.  Returns (accepted [B] int32, new table).
+
+    ``q_cls`` is the per-query merge-lattice op class (default SET): a
+    same-key hit conflicts only when the matrix says the classes conflict,
+    so e.g. INCR records stack in different ways of one set.
+    """
     S, W = table.occ.shape
     set_mask = jnp.uint32(S - 1)
+    if q_cls is None:
+        q_cls = jnp.zeros(q_hi.shape, jnp.int32)
 
     def body(carry, q):
         khi, klo, occ = carry
-        qhi, qlo = q
+        qhi, qlo, qc, mrow = q
         s = (qlo & set_mask).astype(jnp.int32)
         row_hi, row_lo, row_occ = khi[s], klo[s], occ[s]
+        wcls = jnp.maximum(row_occ - 1, 0)
         conflict = jnp.any(
-            (row_occ == 1) & (row_hi == qhi) & (row_lo == qlo)
+            (row_occ > 0) & (row_hi == qhi) & (row_lo == qlo)
+            & (((mrow >> wcls) & 1) == 1)
         )
         free = row_occ == 0
         has_free = jnp.any(free)
@@ -93,12 +143,13 @@ def ref_witness_record(
         sel = (jnp.arange(W) == way) & acc
         khi = khi.at[s].set(jnp.where(sel, qhi, row_hi))
         klo = klo.at[s].set(jnp.where(sel, qlo, row_lo))
-        occ = occ.at[s].set(jnp.where(sel, 1, row_occ))
+        occ = occ.at[s].set(jnp.where(sel, 1 + qc, row_occ))
         return (khi, klo, occ), acc.astype(jnp.int32)
 
     (khi, klo, occ), accepted = jax.lax.scan(
         body, (table.keys_hi, table.keys_lo, table.occ),
-        (q_hi.astype(U32), q_lo.astype(U32)),
+        (q_hi.astype(U32), q_lo.astype(U32),
+         q_cls.astype(jnp.int32), matrix_rows(q_cls)),
     )
     return accepted, WitnessTable(khi, klo, occ)
 
@@ -113,7 +164,7 @@ def ref_witness_gc(
     m = (
         (table.keys_hi[:, :, None] == g_hi[None, None, :].astype(U32))
         & (table.keys_lo[:, :, None] == g_lo[None, None, :].astype(U32))
-        & (table.occ[:, :, None] == 1)
+        & (table.occ[:, :, None] > 0)
     )
     cleared = jnp.any(m, axis=-1)
     return WitnessTable(
@@ -129,11 +180,13 @@ def ref_witness_record_txn(
 ) -> Tuple[jnp.ndarray, jnp.ndarray, WitnessTable]:
     """All-or-nothing transactional probe oracle: the K keys of ONE op.
 
-    Placement follows the Python ``Witness.record`` semantics exactly —
-    every key's conflict/way decision is made against the PRE-op table, and
-    on accept the writes land sequentially in key order (so two same-set
-    keys that both picked the same pre-state free way resolve last-wins,
-    matching the reference's placement-then-write loop).
+    Placement follows the (fixed) Python ``Witness.record`` semantics: the
+    conflict decision is made against the PRE-op table, but free ways are
+    RESERVED in key order — the k-th same-set inserter takes the set's
+    (rank+1)-th free way, and the op rejects as full when a set cannot seat
+    all of its inserters.  (The old oracle gave every key the set's FIRST
+    free way, so two same-set keys of one op aliased and the second write
+    clobbered the first out of the table.)
 
     ``own[k] = 1`` marks a key already held under this op's rpc_id (client
     retry, resolved host-side from the mirror): its table hit counts as
@@ -143,6 +196,7 @@ def ref_witness_record_txn(
     untouched unless the whole op accepted.
     """
     S, W = table.occ.shape
+    K = q_hi.shape[0]
     set_mask = jnp.uint32(S - 1)
     q_hi = q_hi.astype(U32)
     q_lo = q_lo.astype(U32)
@@ -153,17 +207,28 @@ def ref_witness_record_txn(
     row_lo = table.keys_lo[sets]
     row_occ = table.occ[sets]
     hit = jnp.any(
-        (row_occ == 1) & (row_hi == q_hi[:, None]) & (row_lo == q_lo[:, None]),
+        (row_occ > 0) & (row_hi == q_hi[:, None]) & (row_lo == q_lo[:, None]),
         axis=1,
     )
     free = row_occ == 0
-    has_free = jnp.any(free, axis=1)
-    way = jnp.argmax(free, axis=1)                             # first free way
-    ok = jnp.where(own == 1, hit | has_free, ~hit & has_free)
+    # Way reservation: rank this key among the op's earlier same-set
+    # inserters; it seats iff the set still has a free way left after them,
+    # and takes the (rank+1)-th free way so the writes never alias.
+    claim = (valid == 1) & ~hit
+    earlier = jnp.arange(K)[None, :] < jnp.arange(K)[:, None]  # [K, K] j < k
+    rank = jnp.sum(
+        (sets[:, None] == sets[None, :]) & earlier & claim[None, :], axis=1
+    )
+    n_free = jnp.sum(free.astype(jnp.int32), axis=1)
+    seat = n_free > rank
+    cfree = jnp.cumsum(free.astype(jnp.int32), axis=1)
+    selw = free & (cfree == (rank + 1)[:, None])
+    way = jnp.argmax(selw, axis=1)                             # reserved way
+    ok = jnp.where(own == 1, hit | seat, ~hit & seat)
     accepted = jnp.all(ok | (valid == 0))
     # Keys already present (hit) keep their slot; everything else inserts at
-    # its pre-state first-free way — own keys included, should the table
-    # have lost them (keeps table and host mirror convergent).
+    # its reserved free way — own keys included, should the table have lost
+    # them (keeps table and host mirror convergent).
     write = accepted & (valid == 1) & ~hit
 
     def body(k, carry):
@@ -187,13 +252,25 @@ def ref_witness_record_txn(
 
 def ref_conflict_scan(
     w_hi: jnp.ndarray, w_lo: jnp.ndarray, w_valid: jnp.ndarray,
-    q_hi: jnp.ndarray, q_lo: jnp.ndarray,
+    q_hi: jnp.ndarray, q_lo: jnp.ndarray, q_cls: jnp.ndarray = None,
 ) -> jnp.ndarray:
-    """conflicts[b] = any_u(valid[u] & w[u] == q[b]).  [B] int32."""
+    """conflicts[b] = any_u(valid[u] & w[u] == q[b] & classes conflict).
+
+    ``w_valid`` packs the window entry's op class (0 = invalid, else
+    1 + class; legacy callers passing 0/1 get class SET, which conflicts
+    with everything — the original key-equality scan).  ``q_cls`` is the
+    per-query class (default SET).  [B] int32.
+    """
+    if q_cls is None:
+        q_cls = jnp.zeros(q_hi.shape, jnp.int32)
+    w_valid = w_valid.astype(jnp.int32)
+    wcls = jnp.maximum(w_valid - 1, 0)
+    mrow = matrix_rows(q_cls)
     eq = (
         (w_hi[None, :] == q_hi[:, None].astype(U32))
         & (w_lo[None, :] == q_lo[:, None].astype(U32))
-        & (w_valid[None, :] == 1)
+        & (w_valid[None, :] > 0)
+        & (((mrow[:, None] >> wcls[None, :]) & 1) == 1)
     )
     return jnp.any(eq, axis=1).astype(jnp.int32)
 
@@ -251,7 +328,7 @@ class GangTable(NamedTuple):
     """
     keys_hi: jnp.ndarray   # [L*S, W] uint32
     keys_lo: jnp.ndarray   # [L*S, W] uint32
-    occ: jnp.ndarray       # [L*S, W] int32 (0/1)
+    occ: jnp.ndarray       # [L*S, W] int32 (0 = empty, else 1 + op class)
     rpc_hi: jnp.ndarray    # [L*S, W] uint32 (client id)
     rpc_lo: jnp.ndarray    # [L*S, W] uint32 (sequence number)
     age: jnp.ndarray       # [L*S, W] int32 (gc rounds survived)
@@ -278,36 +355,41 @@ def ref_gang_record(table: GangTable, n_sets: int, groups):
     """Pure-Python oracle for the gang record kernels.
 
     ``groups`` is a sequence of ``(lane, (rpc_hi, rpc_lo), keys)`` where
-    ``keys`` is a list of mixed ``(q_hi, q_lo)`` lane pairs — ONE group is
-    one op (single-key ops are groups of size 1).  Semantics transcribe
-    ``repro.core.witness.Witness.record`` exactly, including the
-    pre-state-way placement quirk (every key's way is chosen against the
-    pre-op table; writes land sequentially, last wins).
+    ``keys`` is a list of ``(q_hi, q_lo)`` or ``(q_hi, q_lo, cls)`` lane
+    triples (``cls`` defaults to SET) — ONE group is one op (single-key ops
+    are groups of size 1).  Semantics transcribe
+    ``repro.core.witness.Witness.record`` exactly: a same-key hit under a
+    foreign rpc conflicts only when the merge lattice says the classes
+    conflict, and free ways are RESERVED as the placement loop claims them,
+    so two same-set keys of one op take distinct ways.
 
     Returns (reasons per group, new GangTable) with numpy state.
     """
     khi, klo, occ, rhi, rlo, age = _gang_np(table)
+    matrix = conflict_matrix_np()
     W = occ.shape[1]
     reasons = []
     for lane, (rc, rs), keys in groups:
         rc, rs = np.uint32(rc), np.uint32(rs)
         placements = []
+        claimed = set()
         reason = None
-        for qh, ql in keys:
+        for entry in keys:
+            qh, ql, cls = entry if len(entry) == 3 else (*entry, 0)
             qh, ql = np.uint32(qh), np.uint32(ql)
             row = lane * n_sets + (int(ql) & (n_sets - 1))
             free_way = None
             conflicted = False
             for w in range(W):
-                if occ[row, w] == 1:
+                if occ[row, w] > 0:
                     same = khi[row, w] == qh and klo[row, w] == ql
-                    if same and not (rhi[row, w] == rc and rlo[row, w] == rs):
-                        conflicted = True
-                        break
-                    if same:
+                    if same and rhi[row, w] == rc and rlo[row, w] == rs:
                         free_way = w           # idempotent duplicate hit
                         break
-                elif free_way is None:
+                    if same and (int(matrix[cls]) >> (int(occ[row, w]) - 1)) & 1:
+                        conflicted = True
+                        break
+                elif free_way is None and (row, w) not in claimed:
                     free_way = w
             if conflicted:
                 reason = REASON_CONFLICT
@@ -315,15 +397,16 @@ def ref_gang_record(table: GangTable, n_sets: int, groups):
             if free_way is None:
                 reason = REASON_FULL
                 break
-            placements.append((row, free_way, qh, ql,
-                               occ[row, free_way] == 1))
+            claimed.add((row, free_way))
+            placements.append((row, free_way, qh, ql, cls,
+                               occ[row, free_way] > 0))
         if reason is None:
-            all_dup = all(p[4] for p in placements) and len(placements) > 0
+            all_dup = all(p[5] for p in placements) and len(placements) > 0
             reason = REASON_DUP if all_dup else REASON_INSERT
-            for row, w, qh, ql, _dup in placements:
+            for row, w, qh, ql, cls, _dup in placements:
                 khi[row, w] = qh
                 klo[row, w] = ql
-                occ[row, w] = 1
+                occ[row, w] = 1 + cls
                 rhi[row, w] = rc
                 rlo[row, w] = rs
                 age[row, w] = 0
@@ -348,7 +431,7 @@ def ref_gang_gc(table: GangTable, n_sets: int, entries, aged_lanes):
         row = lane * n_sets + (int(ql) & (n_sets - 1))
         hit = False
         for w in range(W):
-            if (occ[row, w] == 1 and khi[row, w] == qh and klo[row, w] == ql
+            if (occ[row, w] > 0 and khi[row, w] == qh and klo[row, w] == ql
                     and rhi[row, w] == np.uint32(rc)
                     and rlo[row, w] == np.uint32(rs)):
                 occ[row, w] = 0
@@ -357,6 +440,6 @@ def ref_gang_gc(table: GangTable, n_sets: int, entries, aged_lanes):
         cleared.append(hit)
     for lane in aged_lanes:
         rows = slice(lane * n_sets, (lane + 1) * n_sets)
-        age[rows] = np.where(occ[rows] == 1, age[rows] + 1, 0)
+        age[rows] = np.where(occ[rows] > 0, age[rows] + 1, 0)
     return cleared, GangTable(*(jnp.asarray(a) for a in
                                 (khi, klo, occ, rhi, rlo, age)))

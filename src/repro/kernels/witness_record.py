@@ -50,9 +50,22 @@ what it does not:
     Cross-call in-place reuse is a TPU deployment follow-up (ROADMAP), wired
     by donating the table argument at the caller's jit boundary.
 
+Op-class plane / merge-lattice consult (CRDT-CURP)
+--------------------------------------------------
+Occupancy packs the held op's merge-lattice class (repro.core.merge):
+``occ == 0`` is empty, ``occ == 1 + class`` is occupied; class SET == 0, so
+all-SET tables keep the legacy 0/1 encoding bit-exactly.  Record queries
+carry a ``q_cls`` lane; a same-key hit conflicts only when
+``(CONFLICT_MATRIX[q_cls] >> (occ - 1)) & 1`` is set — the matrix is a
+static 16-entry constant that inlines into the kernel as a where-sum
+(``ref.matrix_rows``), so the in-dispatch decision is bit-exact with the
+Python ``Witness.record`` lattice check.  README.md details the encoding
+and its VMEM cost (zero extra table bytes; one extra [B] query lane).
+
 The sequential reference kernel (`witness_record_seq_pallas`, the pre-refactor
 fori_loop design) is kept for the old-vs-new comparison in
-benchmarks/fig_fastpath.py and for differential testing.
+benchmarks/fig_fastpath.py and for differential testing; it predates the
+op-class plane (classless all-SET semantics, unchanged).
 """
 from __future__ import annotations
 
@@ -62,7 +75,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .ref import U32, GangTable, WitnessTable
+from .ref import U32, GangTable, WitnessTable, matrix_rows
 
 # Default number of table rows (sets) handled by one grid cell.  At the
 # paper's 1024x4 geometry one tile is the whole table (48 KiB — trivially
@@ -77,8 +90,8 @@ DEFAULT_TILE_SETS = 1024
 # Set-parallel record kernel (optionally fused with the conflict scan)
 # ---------------------------------------------------------------------------
 def _setpar_kernel_body(
-    tile_lo, r_blk, nrounds_ref, qhi_ref, qlo_ref, sets_ref, rstart_ref,
-    khi_in, klo_in, occ_in, acc_ref, khi_ref, klo_ref, occ_ref,
+    tile_lo, r_blk, nrounds_ref, qhi_ref, qlo_ref, sets_ref, qcls_ref,
+    rstart_ref, khi_in, klo_in, occ_in, acc_ref, khi_ref, klo_ref, occ_ref,
 ):
     """Resolve every set's (short, ordered) query run for one table tile.
 
@@ -102,6 +115,7 @@ def _setpar_kernel_body(
         qhi_c = pl.load(qhi_ref, (pl.ds(base, r_blk),))
         qlo_c = pl.load(qlo_ref, (pl.ds(base, r_blk),))
         sets_c = pl.load(sets_ref, (pl.ds(base, r_blk),))
+        qcls_c = pl.load(qcls_ref, (pl.ds(base, r_blk),))
         pos = base + jax.lax.iota(jnp.int32, r_blk)
         valid = (pos >= start) & (pos < end)
         row = sets_c - tile_lo
@@ -111,10 +125,17 @@ def _setpar_kernel_body(
         row_hi = khi[rowc]                        # [r_blk, W] gathers
         row_lo = klo[rowc]
         row_occ = occ[rowc]
+        # Merge-lattice consult: a same-key hit conflicts only when the
+        # matrix row of the query's class has the held class's bit set
+        # (occ packs 1 + class; all-SET tables reproduce the old any-hit
+        # conflict exactly).
+        mrow = matrix_rows(qcls_c)                # [r_blk] matrix rows
+        wcls = jnp.maximum(row_occ - 1, 0)
         conflict = jnp.any(
-            (row_occ == 1)
+            (row_occ > 0)
             & (row_hi == qhi_c[:, None])
-            & (row_lo == qlo_c[:, None]),
+            & (row_lo == qlo_c[:, None])
+            & (((mrow[:, None] >> wcls) & 1) == 1),
             axis=1,
         )
         free = row_occ == 0
@@ -124,7 +145,7 @@ def _setpar_kernel_body(
         sel = (way_iota == way[:, None]) & accq[:, None]
         new_hi = jnp.where(sel, qhi_c[:, None], row_hi)
         new_lo = jnp.where(sel, qlo_c[:, None], row_lo)
-        new_occ = jnp.where(sel, 1, row_occ)
+        new_occ = jnp.where(sel, 1 + qcls_c[:, None], row_occ)
         # Distinct sets within a round => distinct rows: scatter is race-free.
         # Non-accepted lanes are routed out of range and dropped.
         srow = jnp.where(accq, rowc, TILE_S)
@@ -145,7 +166,7 @@ def _setpar_kernel_body(
 
 
 def _make_record_kernel(r_blk: int, tile_s: int):
-    def kernel(nrounds_ref, qhi_ref, qlo_ref, sets_ref, rstart_ref,
+    def kernel(nrounds_ref, qhi_ref, qlo_ref, sets_ref, qcls_ref, rstart_ref,
                khi_in, klo_in, occ_in,
                acc_ref, khi_ref, klo_ref, occ_ref):
         g = pl.program_id(0)
@@ -158,7 +179,7 @@ def _make_record_kernel(r_blk: int, tile_s: int):
 
         _setpar_kernel_body(
             g * tile_s, r_blk, nrounds_ref, qhi_ref, qlo_ref, sets_ref,
-            rstart_ref, khi_in, klo_in, occ_in,
+            qcls_ref, rstart_ref, khi_in, klo_in, occ_in,
             acc_ref, khi_ref, klo_ref, occ_ref,
         )
     return kernel
@@ -167,7 +188,7 @@ def _make_record_kernel(r_blk: int, tile_s: int):
 def _make_fused_kernel(r_blk: int, tile_s: int):
     """Record kernel fused with the §4.3 conflict scan: one pallas_call per
     batch resolves witness accept bits AND master-window conflicts."""
-    def kernel(nrounds_ref, qhi_ref, qlo_ref, sets_ref, rstart_ref,
+    def kernel(nrounds_ref, qhi_ref, qlo_ref, sets_ref, qcls_ref, rstart_ref,
                whi_ref, wlo_ref, wval_ref,
                khi_in, klo_in, occ_in,
                acc_ref, con_ref, khi_ref, klo_ref, occ_ref):
@@ -178,18 +199,24 @@ def _make_fused_kernel(r_blk: int, tile_s: int):
             acc_ref[...] = jnp.zeros_like(acc_ref)
             # Conflict scan touches the whole (tiny) unsynced window, so a
             # single cell computes it; the window stays VMEM-resident.
+            # wval packs the window entry's class (0 invalid, else
+            # 1 + class); the same matrix consult as the record path.
             qhi = qhi_ref[...]
             qlo = qlo_ref[...]
+            wval = wval_ref[...]
+            mrow = matrix_rows(qcls_ref[...])
+            wcls = jnp.maximum(wval - 1, 0)
             eq = (
                 (whi_ref[...][None, :] == qhi[:, None])
                 & (wlo_ref[...][None, :] == qlo[:, None])
-                & (wval_ref[...][None, :] == 1)
+                & (wval[None, :] > 0)
+                & (((mrow[:, None] >> wcls[None, :]) & 1) == 1)
             )
             con_ref[...] = jnp.any(eq, axis=1).astype(jnp.int32)
 
         _setpar_kernel_body(
             g * tile_s, r_blk, nrounds_ref, qhi_ref, qlo_ref, sets_ref,
-            rstart_ref, khi_in, klo_in, occ_in,
+            qcls_ref, rstart_ref, khi_in, klo_in, occ_in,
             acc_ref, khi_ref, klo_ref, occ_ref,
         )
     return kernel
@@ -211,15 +238,17 @@ def _grid_and_specs(S: int, W: int, B: int, tile_s: int):
 def witness_record_setpar_pallas(
     table: WitnessTable,
     qhi_f: jnp.ndarray, qlo_f: jnp.ndarray, sets_f: jnp.ndarray,
-    round_start: jnp.ndarray, n_rounds: jnp.ndarray,
+    qcls_f: jnp.ndarray, round_start: jnp.ndarray, n_rounds: jnp.ndarray,
     *, tile_sets: int = DEFAULT_TILE_SETS, interpret: bool = True,
 ):
     """Set-parallel batched record over prep-sorted queries.
 
     Inputs must come from ``ops._setpar_prep`` (sorted by (rank, set) with
-    round offsets); returns (accepted-in-sorted-order [B], new table).  The
-    table inputs are aliased to the table outputs (input_output_aliases);
-    see the module docstring for the exact donation contract.
+    round offsets); ``qcls_f`` is the per-query merge-lattice op class in
+    the same sorted order.  Returns (accepted-in-sorted-order [B], new
+    table).  The table inputs are aliased to the table outputs
+    (input_output_aliases); see the module docstring for the exact donation
+    contract.
     """
     S, W = table.occ.shape
     (B,) = qhi_f.shape
@@ -230,7 +259,8 @@ def witness_record_setpar_pallas(
         _make_record_kernel(r_blk, tile_s),
         grid=grid,
         in_specs=[
-            full((1,)), full((B,)), full((B,)), full((B,)), full((B + 1,)),
+            full((1,)), full((B,)), full((B,)), full((B,)), full((B,)),
+            full((B + 1,)),
             tile, tile, tile,
         ],
         out_specs=[full((B,)), tile, tile, tile],
@@ -240,9 +270,9 @@ def witness_record_setpar_pallas(
             jax.ShapeDtypeStruct((S, W), U32),
             jax.ShapeDtypeStruct((S, W), jnp.int32),
         ],
-        input_output_aliases={5: 1, 6: 2, 7: 3},
+        input_output_aliases={6: 1, 7: 2, 8: 3},
         interpret=interpret,
-    )(n_rounds, qhi_f, qlo_f, sets_f, round_start,
+    )(n_rounds, qhi_f, qlo_f, sets_f, qcls_f.astype(jnp.int32), round_start,
       table.keys_hi, table.keys_lo, table.occ)
     acc, khi, klo, occ = out
     return acc, WitnessTable(khi, klo, occ)
@@ -254,13 +284,16 @@ def witness_record_setpar_pallas(
 def fastpath_record_scan_pallas(
     table: WitnessTable,
     qhi_f: jnp.ndarray, qlo_f: jnp.ndarray, sets_f: jnp.ndarray,
-    round_start: jnp.ndarray, n_rounds: jnp.ndarray,
+    qcls_f: jnp.ndarray, round_start: jnp.ndarray, n_rounds: jnp.ndarray,
     w_hi: jnp.ndarray, w_lo: jnp.ndarray, w_valid: jnp.ndarray,
     *, tile_sets: int = DEFAULT_TILE_SETS, interpret: bool = True,
 ):
     """Fused fast-path kernel: set-parallel record + conflict scan in ONE
     pallas_call.  Same prep contract as witness_record_setpar_pallas; the
-    window (w_hi/w_lo/w_valid) is the master's unsynced-op keyhash window.
+    window (w_hi/w_lo/w_valid) is the master's unsynced-op keyhash window,
+    with ``w_valid`` packing each entry's op class (0 invalid, else
+    1 + class) and ``qcls_f`` the per-query class, so the in-dispatch
+    commutativity decision consults the same merge lattice as the record.
 
     Returns (accepted [B], conflicts [B], new table), accepted/conflicts in
     sorted order.
@@ -275,7 +308,8 @@ def fastpath_record_scan_pallas(
         _make_fused_kernel(r_blk, tile_s),
         grid=grid,
         in_specs=[
-            full((1,)), full((B,)), full((B,)), full((B,)), full((B + 1,)),
+            full((1,)), full((B,)), full((B,)), full((B,)), full((B,)),
+            full((B + 1,)),
             full((U,)), full((U,)), full((U,)),
             tile, tile, tile,
         ],
@@ -287,10 +321,10 @@ def fastpath_record_scan_pallas(
             jax.ShapeDtypeStruct((S, W), U32),
             jax.ShapeDtypeStruct((S, W), jnp.int32),
         ],
-        input_output_aliases={8: 2, 9: 3, 10: 4},
+        input_output_aliases={9: 2, 10: 3, 11: 4},
         interpret=interpret,
-    )(n_rounds, qhi_f, qlo_f, sets_f, round_start,
-      w_hi, w_lo, w_valid,
+    )(n_rounds, qhi_f, qlo_f, sets_f, qcls_f.astype(jnp.int32), round_start,
+      w_hi, w_lo, w_valid.astype(jnp.int32),
       table.keys_hi, table.keys_lo, table.occ)
     acc, con, khi, klo, occ = out
     return acc, con, WitnessTable(khi, klo, occ)
@@ -373,14 +407,17 @@ def _record_txn_kernel(qhi_ref, qlo_ref, own_ref, valid_ref,
     updates, without the record-then-rollback second dispatch).
 
     Decision pass (vectorized over K): every key probes the PRE-op table —
-    conflict (same-key hit under a foreign rpc, i.e. ``own == 0``) or a
-    capacity-full set anywhere vetoes the whole op.  Write pass (tiny
-    fori_loop over K, predicated on the op-level accept bit): non-hit keys
-    insert at their pre-state first-free way, sequential in key order so
-    same-set placement collisions resolve exactly like the Python
-    reference's placement-then-write loop.
+    conflict (same-key hit under a foreign rpc, i.e. ``own == 0``) vetoes
+    the whole op, and each inserting key must SEAT: ranked among the op's
+    earlier same-set inserters, it claims the set's (rank+1)-th free way, so
+    two same-set keys of one op land in distinct ways (the old first-free
+    placement aliased them and the second write clobbered the first) and
+    the op rejects as full when a set cannot seat all of its keys.  Write
+    pass (tiny fori_loop over K, predicated on the op-level accept bit):
+    non-hit keys insert at their reserved way.
     """
     S, W = khi_in.shape
+    K = qhi_ref.shape[0]
     set_mask = jnp.uint32(S - 1)
     qhi = qhi_ref[...]
     qlo = qlo_ref[...]
@@ -394,13 +431,24 @@ def _record_txn_kernel(qhi_ref, qlo_ref, own_ref, valid_ref,
     row_lo = klo0[sets]
     row_occ = occ0[sets]
     hit = jnp.any(
-        (row_occ == 1) & (row_hi == qhi[:, None]) & (row_lo == qlo[:, None]),
+        (row_occ > 0) & (row_hi == qhi[:, None]) & (row_lo == qlo[:, None]),
         axis=1,
     )
     free = row_occ == 0
-    has_free = jnp.any(free, axis=1)
-    way = jnp.argmax(free, axis=1)                             # first free way
-    ok = jnp.where(own == 1, hit | has_free, ~hit & has_free)
+    claim = (valid == 1) & ~hit
+    k_iota = jax.lax.iota(jnp.int32, K)
+    earlier = k_iota[None, :] < k_iota[:, None]                # [K, K] j < k
+    rank = jnp.sum(
+        ((sets[:, None] == sets[None, :]) & earlier
+         & claim[None, :]).astype(jnp.int32),
+        axis=1,
+    )
+    n_free = jnp.sum(free.astype(jnp.int32), axis=1)
+    seat = n_free > rank
+    cfree = jnp.cumsum(free.astype(jnp.int32), axis=1)
+    selw = free & (cfree == (rank + 1)[:, None])
+    way = jnp.argmax(selw, axis=1)                             # reserved way
+    ok = jnp.where(own == 1, hit | seat, ~hit & seat)
     accepted = jnp.all(ok | (valid == 0))
     write = accepted & (valid == 1) & ~hit
     acc_ref[...] = accepted.astype(jnp.int32).reshape((1,))
@@ -477,7 +525,7 @@ def _gc_kernel(ghi_ref, glo_ref, khi_in, klo_in, occ_in, occ_ref):
     m = (
         (khi[:, :, None] == ghi[None, None, :])
         & (klo[:, :, None] == glo[None, None, :])
-        & (occ[:, :, None] == 1)
+        & (occ[:, :, None] > 0)
     )
     occ_ref[...] = jnp.where(jnp.any(m, axis=-1), 0, occ)
 
@@ -497,7 +545,7 @@ def _gc_kernel(ghi_ref, glo_ref, khi_in, klo_in, occ_in, occ_ref):
 
 def _gang_setpar_body(
     tile_lo, r_blk, nrounds_ref,
-    qhi_ref, qlo_ref, qrh_ref, qrl_ref, sets_ref, rstart_ref,
+    qhi_ref, qlo_ref, qrh_ref, qrl_ref, qcls_ref, sets_ref, rstart_ref,
     khi_in, klo_in, occ_in, rh_in, rl_in, age_in,
     rsn_ref, khi_ref, klo_ref, occ_ref, rh_ref, rl_ref, age_ref,
 ):
@@ -518,6 +566,7 @@ def _gang_setpar_body(
         qlo_c = pl.load(qlo_ref, (pl.ds(base, r_blk),))
         qrh_c = pl.load(qrh_ref, (pl.ds(base, r_blk),))
         qrl_c = pl.load(qrl_ref, (pl.ds(base, r_blk),))
+        qcls_c = pl.load(qcls_ref, (pl.ds(base, r_blk),))
         sets_c = pl.load(sets_ref, (pl.ds(base, r_blk),))
         pos = base + jax.lax.iota(jnp.int32, r_blk)
         valid = (pos >= start) & (pos < end)
@@ -532,13 +581,18 @@ def _gang_setpar_body(
         row_rl = rl[rowc]
         row_age = age[rowc]
         keym = (
-            (row_occ == 1)
+            (row_occ > 0)
             & (row_hi == qhi_c[:, None])
             & (row_lo == qlo_c[:, None])
         )
         rpcm = (row_rh == qrh_c[:, None]) & (row_rl == qrl_c[:, None])
         dupm = keym & rpcm                            # idempotent retry hit
-        confm = keym & ~rpcm                          # foreign-rpc conflict
+        # Foreign-rpc same-key hit conflicts only when the merge lattice
+        # says so (occ packs 1 + class; matrix bit test as in the plain
+        # record kernel) — commuting classes stack in sibling ways.
+        mrow = matrix_rows(qcls_c)
+        wcls = jnp.maximum(row_occ - 1, 0)
+        confm = keym & ~rpcm & (((mrow[:, None] >> wcls) & 1) == 1)
         is_dup = jnp.any(dupm, axis=1)
         is_conf = jnp.any(confm, axis=1)
         free = row_occ == 0
@@ -553,7 +607,7 @@ def _gang_setpar_body(
         sel = (way_iota == way[:, None]) & accq[:, None]
         new_hi = jnp.where(sel, qhi_c[:, None], row_hi)
         new_lo = jnp.where(sel, qlo_c[:, None], row_lo)
-        new_occ = jnp.where(sel, 1, row_occ)
+        new_occ = jnp.where(sel, 1 + qcls_c[:, None], row_occ)
         new_rh = jnp.where(sel, qrh_c[:, None], row_rh)
         new_rl = jnp.where(sel, qrl_c[:, None], row_rl)
         new_age = jnp.where(sel, 0, row_age)          # accept resets age
@@ -583,7 +637,7 @@ def _gang_setpar_body(
 
 
 def _make_gang_record_kernel(r_blk: int, tile_s: int):
-    def kernel(nrounds_ref, qhi_ref, qlo_ref, qrh_ref, qrl_ref,
+    def kernel(nrounds_ref, qhi_ref, qlo_ref, qrh_ref, qrl_ref, qcls_ref,
                sets_ref, rstart_ref,
                khi_in, klo_in, occ_in, rh_in, rl_in, age_in,
                rsn_ref, khi_ref, klo_ref, occ_ref, rh_ref, rl_ref, age_ref):
@@ -595,7 +649,8 @@ def _make_gang_record_kernel(r_blk: int, tile_s: int):
 
         _gang_setpar_body(
             g * tile_s, r_blk, nrounds_ref,
-            qhi_ref, qlo_ref, qrh_ref, qrl_ref, sets_ref, rstart_ref,
+            qhi_ref, qlo_ref, qrh_ref, qrl_ref, qcls_ref, sets_ref,
+            rstart_ref,
             khi_in, klo_in, occ_in, rh_in, rl_in, age_in,
             rsn_ref, khi_ref, klo_ref, occ_ref, rh_ref, rl_ref, age_ref,
         )
@@ -606,7 +661,7 @@ def _make_gang_record_kernel(r_blk: int, tile_s: int):
 def gang_record_setpar_pallas(
     table: GangTable,
     qhi_f: jnp.ndarray, qlo_f: jnp.ndarray,
-    qrh_f: jnp.ndarray, qrl_f: jnp.ndarray,
+    qrh_f: jnp.ndarray, qrl_f: jnp.ndarray, qcls_f: jnp.ndarray,
     sets_f: jnp.ndarray, round_start: jnp.ndarray, n_rounds: jnp.ndarray,
     *, tile_sets: int = DEFAULT_TILE_SETS, interpret: bool = True,
 ):
@@ -614,8 +669,9 @@ def gang_record_setpar_pallas(
 
     Same prep contract as ``witness_record_setpar_pallas`` except the set
     ids are *global* rows (lane * S + local set) and each query carries its
-    rpc identity.  Returns (reasons-in-sorted-order [B], new gang table);
-    all six table buffers alias their outputs.
+    rpc identity plus its merge-lattice op class (``qcls_f``).  Returns
+    (reasons-in-sorted-order [B], new gang table); all six table buffers
+    alias their outputs.
     """
     R, W = table.occ.shape
     (B,) = qhi_f.shape
@@ -627,7 +683,7 @@ def gang_record_setpar_pallas(
         grid=grid,
         in_specs=[
             full((1,)), full((B,)), full((B,)), full((B,)), full((B,)),
-            full((B,)), full((B + 1,)),
+            full((B,)), full((B,)), full((B + 1,)),
             tile, tile, tile, tile, tile, tile,
         ],
         out_specs=[full((B,)), tile, tile, tile, tile, tile, tile],
@@ -640,9 +696,10 @@ def gang_record_setpar_pallas(
             jax.ShapeDtypeStruct((R, W), U32),
             jax.ShapeDtypeStruct((R, W), jnp.int32),
         ],
-        input_output_aliases={7: 1, 8: 2, 9: 3, 10: 4, 11: 5, 12: 6},
+        input_output_aliases={8: 1, 9: 2, 10: 3, 11: 4, 12: 5, 13: 6},
         interpret=interpret,
-    )(n_rounds, qhi_f, qlo_f, qrh_f, qrl_f, sets_f, round_start,
+    )(n_rounds, qhi_f, qlo_f, qrh_f, qrl_f, qcls_f.astype(jnp.int32),
+      sets_f, round_start,
       table.keys_hi, table.keys_lo, table.occ,
       table.rpc_hi, table.rpc_lo, table.age)
     rsn = out[0]
@@ -652,10 +709,11 @@ def gang_record_setpar_pallas(
 def _make_gang_groups_kernel(K: int):
     """Sequential per-group all-or-nothing record: one fori_loop over G
     groups; each group's K (padded) keys decide together against the
-    current table and, on accept, write sequentially in key order (the
-    Python reference's placement-then-write loop, pre-state-way quirk
-    included)."""
-    def kernel(qhi_ref, qlo_ref, qrow_ref, qval_ref,
+    current table and, on accept, write sequentially in key order.  Free
+    ways are RESERVED in key order (the k-th same-row inserter takes the
+    row's (rank+1)-th free way), matching the fixed Python placement loop —
+    same-row keys of one group land in distinct ways instead of aliasing."""
+    def kernel(qhi_ref, qlo_ref, qrow_ref, qval_ref, qcls_ref,
                grh_ref, grl_ref, gval_ref,
                khi_in, klo_in, occ_in, rh_in, rl_in, age_in,
                rsn_ref, khi_ref, klo_ref, occ_ref, rh_ref, rl_ref, age_ref):
@@ -668,12 +726,15 @@ def _make_gang_groups_kernel(K: int):
         rl_ref[...] = rl_in[...]
         age_ref[...] = age_in[...]
         way_iota = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+        k_iota = jax.lax.iota(jnp.int32, K)
+        earlier = k_iota[None, :] < k_iota[:, None]            # [K, K] j < k
 
         def body(g, _):
             qhi_g = pl.load(qhi_ref, (pl.ds(g, 1), slice(None)))[0]   # [K]
             qlo_g = pl.load(qlo_ref, (pl.ds(g, 1), slice(None)))[0]
             qrow_g = pl.load(qrow_ref, (pl.ds(g, 1), slice(None)))[0]
             qval_g = pl.load(qval_ref, (pl.ds(g, 1), slice(None)))[0]
+            qcls_g = pl.load(qcls_ref, (pl.ds(g, 1), slice(None)))[0]
             rc = pl.load(grh_ref, (pl.ds(g, 1),))[0]
             rs = pl.load(grl_ref, (pl.ds(g, 1),))[0]
             gv = pl.load(gval_ref, (pl.ds(g, 1),))[0]
@@ -693,20 +754,35 @@ def _make_gang_groups_kernel(K: int):
             row_rh = jnp.concatenate([r[3] for r in rows], axis=0)
             row_rl = jnp.concatenate([r[4] for r in rows], axis=0)
             keym = (
-                (row_occ == 1)
+                (row_occ > 0)
                 & (row_hi == qhi_g[:, None])
                 & (row_lo == qlo_g[:, None])
             )
             rpcm = (row_rh == rc) & (row_rl == rs)
             dupm = keym & rpcm
-            confm = keym & ~rpcm
+            # Merge-lattice consult, same bit test as the setpar kernels.
+            mrow = matrix_rows(qcls_g)
+            wcls = jnp.maximum(row_occ - 1, 0)
+            confm = keym & ~rpcm & (((mrow[:, None] >> wcls) & 1) == 1)
             dup_k = jnp.any(dupm, axis=1)
             conf_k = jnp.any(confm, axis=1)
             free = row_occ == 0
-            has_free = jnp.any(free, axis=1)
+            # Way reservation: rank each inserting key among the group's
+            # earlier same-row inserters; it seats iff free ways remain
+            # and takes the (rank+1)-th free way.
+            claim = (qval_g == 1) & ~dup_k
+            rank = jnp.sum(
+                ((qrow_g[:, None] == qrow_g[None, :]) & earlier
+                 & claim[None, :]).astype(jnp.int32),
+                axis=1,
+            )
+            n_free = jnp.sum(free.astype(jnp.int32), axis=1)
+            seat = n_free > rank
+            cfree = jnp.cumsum(free.astype(jnp.int32), axis=1)
+            selw = free & (cfree == (rank + 1)[:, None])
             way_k = jnp.where(dup_k, jnp.argmax(dupm, axis=1),
-                              jnp.argmax(free, axis=1))
-            ok_k = ~conf_k & (dup_k | has_free)
+                              jnp.argmax(selw, axis=1))
+            ok_k = ~conf_k & (dup_k | seat)
             vk = qval_g == 1
             acc = jnp.all(ok_k | ~vk) & (gv == 1)
             all_dup = jnp.all(dup_k | ~vk) & jnp.any(vk)
@@ -719,8 +795,8 @@ def _make_gang_groups_kernel(K: int):
             )
             reason = jnp.where(gv == 1, reason, 0).astype(jnp.int32)
             pl.store(rsn_ref, (pl.ds(g, 1),), reason.reshape((1,)))
-            # Write pass: sequential in key order so same-set placement
-            # collisions resolve last-wins; rows reload because an earlier
+            # Write pass: sequential in key order; ways are pre-reserved so
+            # same-row keys never alias.  Rows reload because an earlier
             # key of this group may share the row.
             for k in range(K):
                 r = qrow_g[k]
@@ -736,7 +812,7 @@ def _make_gang_groups_kernel(K: int):
                 pl.store(klo_ref, (pl.ds(r, 1), slice(None)),
                          jnp.where(sel, qlo_g[k], lo_k))
                 pl.store(occ_ref, (pl.ds(r, 1), slice(None)),
-                         jnp.where(sel, 1, oc_k))
+                         jnp.where(sel, 1 + qcls_g[k], oc_k))
                 pl.store(rh_ref, (pl.ds(r, 1), slice(None)),
                          jnp.where(sel, rc, rh_k))
                 pl.store(rl_ref, (pl.ds(r, 1), slice(None)),
@@ -753,17 +829,17 @@ def _make_gang_groups_kernel(K: int):
 def gang_record_groups_pallas(
     table: GangTable,
     qhi: jnp.ndarray, qlo: jnp.ndarray,
-    qrow: jnp.ndarray, qval: jnp.ndarray,
+    qrow: jnp.ndarray, qval: jnp.ndarray, qcls: jnp.ndarray,
     grh: jnp.ndarray, grl: jnp.ndarray, gval: jnp.ndarray,
     *, interpret: bool = True,
 ):
     """One-dispatch batch of per-group all-or-nothing records.
 
-    ``qhi/qlo/qrow/qval`` are [G, K] padded key arrays (mixed lanes, global
-    rows); ``grh/grl/gval`` are the per-group rpc identity and validity.
-    Groups resolve sequentially in index order — single-key ops are groups
-    of size 1, bit-exact with ``Witness.record``.  Returns (reason per
-    group [G], new gang table).
+    ``qhi/qlo/qrow/qval/qcls`` are [G, K] padded key arrays (mixed lanes,
+    global rows, merge-lattice classes); ``grh/grl/gval`` are the per-group
+    rpc identity and validity.  Groups resolve sequentially in index order —
+    single-key ops are groups of size 1, bit-exact with ``Witness.record``.
+    Returns (reason per group [G], new gang table).
     """
     R, W = table.occ.shape
     G, K = qhi.shape
@@ -778,10 +854,10 @@ def gang_record_groups_pallas(
             jax.ShapeDtypeStruct((R, W), U32),
             jax.ShapeDtypeStruct((R, W), jnp.int32),
         ],
-        input_output_aliases={7: 1, 8: 2, 9: 3, 10: 4, 11: 5, 12: 6},
+        input_output_aliases={8: 1, 9: 2, 10: 3, 11: 4, 12: 5, 13: 6},
         interpret=interpret,
     )(qhi.astype(U32), qlo.astype(U32),
-      qrow.astype(jnp.int32), qval.astype(jnp.int32),
+      qrow.astype(jnp.int32), qval.astype(jnp.int32), qcls.astype(jnp.int32),
       grh.astype(U32), grl.astype(U32), gval.astype(jnp.int32),
       table.keys_hi, table.keys_lo, table.occ,
       table.rpc_hi, table.rpc_lo, table.age)
@@ -810,7 +886,7 @@ def _make_gang_gc_kernel(tile_s: int, do_age: bool):
             & (klo[:, :, None] == glo_ref[...][None, None, :])
             & (rh[:, :, None] == grh_ref[...][None, None, :])
             & (rl[:, :, None] == grl_ref[...][None, None, :])
-            & (occ[:, :, None] == 1)
+            & (occ[:, :, None] > 0)
             & (rows[:, None, None] == grow_ref[...][None, None, :])
             & (gval_ref[...][None, None, :] == 1)
         )
@@ -821,7 +897,7 @@ def _make_gang_gc_kernel(tile_s: int, do_age: bool):
             aged_t = aged_ref[...]                 # [T] per-row age mask
             age_new = jnp.where(
                 aged_t[:, None] == 1,
-                jnp.where(occ_new == 1, age_new + 1, 0),
+                jnp.where(occ_new > 0, age_new + 1, 0),
                 age_new,
             )
         occ_ref[...] = occ_new

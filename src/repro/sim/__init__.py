@@ -27,6 +27,7 @@ from .network import Network, Node, Sim
 from .params import DEFAULT, SimParams
 from .workload import (
     BatchedWorkload,
+    HotKeyWorkload,
     ShardSkewedWorkload,
     TxnWorkload,
     UniformWriteWorkload,
@@ -43,6 +44,6 @@ __all__ = [
     "SimTxnClient", "TimedTxnResult", "run_timed_txn_scenario",
     "check_linearizable", "check_linearizable_strict",
     "Network", "Node", "Sim", "DEFAULT", "SimParams",
-    "BatchedWorkload", "ShardSkewedWorkload", "TxnWorkload",
+    "BatchedWorkload", "HotKeyWorkload", "ShardSkewedWorkload", "TxnWorkload",
     "UniformWriteWorkload", "YcsbWorkload", "ZipfianGenerator",
 ]

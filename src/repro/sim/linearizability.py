@@ -34,11 +34,36 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Dict, FrozenSet, List, Optional, Tuple
 
+from repro.core.store import merge_append, merge_max, merge_sadd
 from repro.core.types import Op, OpType
 
-# Op types the checkers model.
-_SINGLE = (OpType.SET, OpType.GET, OpType.INCR, OpType.DEL)
+# Op types the checkers model.  The merge classes (INCR/SADD/APPEND/MAX/
+# HMSET) use the STORE's own merge functions as their legality model —
+# imported, not re-implemented, so checker and state machine cannot drift.
+_SINGLE = (OpType.SET, OpType.GET, OpType.INCR, OpType.DEL,
+           OpType.SADD, OpType.APPEND, OpType.MAX, OpType.HMSET)
 _MULTI = (OpType.MSET, OpType.TXN)
+
+# Merge ops whose argument is args[0] and whose externalized value is the
+# uninformative "OK" (no per-op contradiction check; legality is the state).
+_MERGE_ARG0 = (OpType.SADD, OpType.APPEND, OpType.MAX)
+
+
+def _canon(v):
+    """Hashable canonical form of a store value (the Wing & Gong memo keys
+    on state, so dict values from HMSET must canonicalize)."""
+    if isinstance(v, dict):
+        return ("#H", tuple(sorted(v.items(), key=repr)))
+    return v
+
+
+def _canon_hmset(cur, fields):
+    """Apply HMSET fields over a canonicalized prior hash value."""
+    h = (dict(cur[1]) if isinstance(cur, tuple) and len(cur) == 2
+         and cur[0] == "#H" else {})
+    for f, v in fields:
+        h[f] = v
+    return _canon(h)
 
 
 @dataclass(frozen=True)
@@ -95,6 +120,10 @@ def _project(history: List[dict]) -> Dict[Any, List[HEvent]]:
                 arg = op.args[0]
             elif op.op_type == OpType.INCR:
                 arg = op.args[0] if op.args else 1
+            elif op.op_type in _MERGE_ARG0:
+                arg = op.args[0]
+            elif op.op_type == OpType.HMSET:
+                arg = tuple(op.args[0]) if op.args else ()
             else:
                 arg = None
             add(key, h["invoke"], complete,
@@ -124,9 +153,21 @@ def _check_key(events: List[HEvent]) -> bool:
             if e.complete is not None and e.value is not None and e.value != new:
                 return None
             return ("V", new)
+        if e.op_type == OpType.SADD:
+            return ("V", merge_sadd(state[1] if state[0] == "V" else None,
+                                    e.arg))
+        if e.op_type == OpType.APPEND:
+            return ("V", merge_append(state[1] if state[0] == "V" else None,
+                                      e.arg))
+        if e.op_type == OpType.MAX:
+            return ("V", merge_max(state[1] if state[0] == "V" else None,
+                                   e.arg))
+        if e.op_type == OpType.HMSET:
+            return ("V", _canon_hmset(state[1] if state[0] == "V" else None,
+                                      e.arg))
         if e.op_type == OpType.GET:
             cur = state[1] if state[0] == "V" else None
-            if e.complete is not None and e.value != cur:
+            if e.complete is not None and _canon(e.value) != _canon(cur):
                 return None
             return state
         return state
@@ -195,6 +236,9 @@ class _GEvent:
     incrs: Tuple[Tuple[Any, int], ...]
     reads: Tuple[Tuple[Any, Any], ...]
     incr_expect: Any = None      # externalized INCR result (None: unchecked)
+    # Merge-class effects: (key, op_type, arg) folded through the store's
+    # own merge functions (SADD/APPEND/MAX) or the canonical hash (HMSET).
+    merges: Tuple[Tuple[Any, Any, Any], ...] = ()
 
 
 def _global_events(history: List[dict]) -> List[_GEvent]:
@@ -208,6 +252,7 @@ def _global_events(history: List[dict]) -> List[_GEvent]:
         writes: Tuple = ()
         incrs: Tuple = ()
         reads: Tuple = ()
+        merges: Tuple = ()
         incr_expect = None
         if op.op_type is OpType.SET:
             writes = ((op.keys[0], op.args[0]),)
@@ -217,6 +262,11 @@ def _global_events(history: List[dict]) -> List[_GEvent]:
             incrs = ((op.keys[0], op.args[0] if op.args else 1),)
             if complete is not None:
                 incr_expect = value
+        elif op.op_type in _MERGE_ARG0:
+            merges = ((op.keys[0], op.op_type, op.args[0]),)
+        elif op.op_type is OpType.HMSET:
+            merges = ((op.keys[0], OpType.HMSET,
+                       tuple(op.args[0]) if op.args else ()),)
         elif op.op_type is OpType.GET:
             if complete is not None:
                 reads = ((op.keys[0], value),)
@@ -230,7 +280,7 @@ def _global_events(history: List[dict]) -> List[_GEvent]:
         events.append(_GEvent(
             idx=len(events), invoke=h["invoke"], complete=complete,
             writes=writes, incrs=incrs, reads=reads,
-            incr_expect=incr_expect,
+            incr_expect=incr_expect, merges=merges,
         ))
     return events
 
@@ -259,7 +309,7 @@ def check_linearizable_strict(
     def apply(state: Tuple[Tuple[Any, Any], ...], e: _GEvent):
         d = dict(state)
         for k, expect in e.reads:
-            if d.get(k) != expect:
+            if _canon(d.get(k)) != _canon(expect):
                 return None
         for k, delta in e.incrs:
             base = d.get(k)
@@ -267,6 +317,16 @@ def check_linearizable_strict(
             if e.incr_expect is not None and e.incr_expect != new:
                 return None
             d[k] = new
+        for k, t, arg in e.merges:
+            cur = d.get(k)
+            if t is OpType.SADD:
+                d[k] = merge_sadd(cur, arg)
+            elif t is OpType.APPEND:
+                d[k] = merge_append(cur, arg)
+            elif t is OpType.MAX:
+                d[k] = merge_max(cur, arg)
+            else:   # HMSET over the canonical hashable hash value
+                d[k] = _canon_hmset(cur, arg)
         for k, v in e.writes:
             d[k] = v
         return tuple(sorted(d.items(), key=lambda kv: repr(kv[0])))
@@ -307,7 +367,7 @@ def check_linearizable_strict(
     offender = None
     if blamed:
         e = blamed[0]
-        for group in (e.reads, e.writes, e.incrs):
+        for group in (e.reads, e.writes, e.incrs, e.merges):
             if group:
                 offender = group[0][0]
                 break

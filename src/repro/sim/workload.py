@@ -125,6 +125,47 @@ class BatchedWorkload:
 
 
 @dataclass
+class HotKeyWorkload:
+    """Contended-counter workload for the CRDT-CURP merge lattice: ``skew``
+    is the probability an op targets the ONE hot key (skew -> 1.0 is the
+    all-ops-one-key worst case), the rest spread over a cold keyspace.
+
+    ``kind`` picks the op type on the hot path: ``"INCR"`` ops commute under
+    the merge lattice (witnesses keep accepting, the fast path survives the
+    skew), ``"SET"`` ops conflict pairwise (classic CURP collapses to the
+    sync path).  SADD/APPEND/MAX are also accepted for the merge-class
+    sweep scenarios.
+    """
+    skew: float = 1.0
+    kind: str = "INCR"
+    hot_key: str = "hot"
+    n_items: int = 100_000
+    seed: int = 0
+    value_size: int = 16
+
+    def __post_init__(self) -> None:
+        self.rng = random.Random(self.seed)
+        self._value = "x" * self.value_size
+        self._seq = 0
+
+    def __call__(self, session: ClientSession) -> Op:
+        self._seq += 1
+        if self.rng.random() < self.skew:
+            key = self.hot_key
+        else:
+            key = f"c{self.rng.randrange(self.n_items)}"
+        if self.kind == "INCR":
+            return session.op_incr(key, 1)
+        if self.kind == "SADD":
+            return session.op_sadd(key, f"m{self._seq}")
+        if self.kind == "APPEND":
+            return session.op_append(key, f"a{self._seq}")
+        if self.kind == "MAX":
+            return session.op_max(key, self._seq)
+        return session.op_set(key, self._value)
+
+
+@dataclass
 class TxnWorkload:
     """Mini-transaction generator for the txn subsystem (repro.core.txn).
 
