@@ -1,4 +1,4 @@
-.PHONY: check test bench-scaling bench-fastpath bench-txn bench-migration bench-crdt
+.PHONY: check test bench-scaling bench-fastpath bench-txn bench-migration bench-crdt bench-slo
 
 check:
 	bash scripts/check.sh
@@ -20,3 +20,6 @@ bench-migration:
 
 bench-crdt:
 	PYTHONPATH=src python -m benchmarks.fig_crdt
+
+bench-slo:
+	PYTHONPATH=src python -m benchmarks.fig_slo

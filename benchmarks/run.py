@@ -110,6 +110,7 @@ def main() -> None:
         fig_fastpath,
         fig_migration,
         fig_scaling,
+        fig_slo,
         fig_txn,
         roofline_table,
     )
@@ -127,6 +128,7 @@ def main() -> None:
         ("fig_txn", fig_txn.main),
         ("fig_migration", fig_migration.main),
         ("fig_crdt", fig_crdt.main),
+        ("fig_slo", fig_slo.main),
         ("roofline_table", roofline_table.main),
     ]
     results = []

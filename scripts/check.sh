@@ -18,8 +18,11 @@
 # assertions; fig_crdt keeps the merge-lattice separation — hot-counter
 # INCR fast-frac >=0.95 vs plain SET <=0.2 at skew 1.0 — the 16x16
 # matrix/scalar and record-kernel/oracle bit-exact parity checks, and the
-# merge-aware strict-linearizability assertion on every scenario), not the
-# measured numbers.
+# merge-aware strict-linearizability assertion on every scenario; fig_slo
+# keeps its armor assertions — bounded admission queue, >=5x goodput over
+# the naked 2x-overload baseline, heartbeat-detected failover with zero
+# lost acked writes, and strict-checked migration/crash storm companions),
+# not the measured numbers.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -30,4 +33,5 @@ python -m benchmarks.fig_fastpath --smoke
 python -m benchmarks.fig_txn --smoke
 python -m benchmarks.fig_migration --smoke
 python -m benchmarks.fig_crdt --smoke
+python -m benchmarks.fig_slo --smoke
 echo "check.sh: all green"

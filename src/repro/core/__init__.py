@@ -18,11 +18,21 @@ from .client import (
     decide_commit,
     decide_multi,
 )
-from .config import ConfigManager, WitnessGeometry
+from .config import ConfigManager, HeartbeatDetector, WitnessGeometry
 from .consensus import ConsensusCluster, replay_threshold, superquorum
 from .device_witness import DeviceWitness
 from .local import LocalCluster, OpOutcome
 from .master import DUP, ERROR, FAST, SYNCED, Master
+from .overload import (
+    AdmissionQueue,
+    ArmorConfig,
+    BreakerState,
+    CircuitBreaker,
+    ClientThrottle,
+    DegradeLevel,
+    TokenBucket,
+    degrade_level,
+)
 from .migration import (
     MigrationManager,
     MigrationReport,
@@ -70,7 +80,9 @@ from .witness import Witness
 __all__ = [
     "Backup", "LogEntry", "ClientSession", "Decision", "decide",
     "decide_multi", "decide_commit", "combine_decisions",
-    "ConfigManager", "WitnessGeometry", "DeviceWitness",
+    "ConfigManager", "HeartbeatDetector", "WitnessGeometry", "DeviceWitness",
+    "AdmissionQueue", "ArmorConfig", "BreakerState", "CircuitBreaker",
+    "ClientThrottle", "DegradeLevel", "TokenBucket", "degrade_level",
     "ConsensusCluster", "replay_threshold", "superquorum",
     "LocalCluster", "OpOutcome", "Master", "FAST", "SYNCED", "DUP", "ERROR",
     "RecoveryReport", "recover_master", "RiflTable", "KVStore",

@@ -46,6 +46,55 @@ class WitnessGeometry:
         return 3 * 4 * self.slots
 
 
+class HeartbeatDetector:
+    """ConfigManager-side failure detector: timeout-count heartbeats.
+
+    Masters send a heartbeat every ``interval`` time units over the same
+    (lossy, jittery) transport as everything else; the detector declares a
+    shard's master suspect once no beat has arrived for ``miss_threshold``
+    consecutive intervals.  The threshold trades detection latency against
+    false positives under jitter/drops — with drop probability p the false-
+    suspect probability per check is ~p^miss_threshold.
+
+    Pure state machine (caller supplies ``now``), so the discrete-event sim
+    drives it deterministically.  ``check`` returns each newly suspected
+    shard exactly once; ``reset`` re-arms a shard after its failover
+    completes (the new master's beats then keep it alive).
+    """
+
+    def __init__(self, interval: float, miss_threshold: int = 5) -> None:
+        self.interval = interval
+        self.miss_threshold = miss_threshold
+        self._last: Dict[int, float] = {}
+        self._suspected: set = set()
+        self.detections: Dict[int, float] = {}  # shard -> detection time
+
+    def beat(self, shard_id: int, now: float) -> None:
+        if shard_id not in self._suspected:
+            self._last[shard_id] = now
+
+    def watch(self, shard_id: int, now: float) -> None:
+        """Start (or restart) monitoring a shard, treating ``now`` as a beat."""
+        self._suspected.discard(shard_id)
+        self._last[shard_id] = now
+
+    def check(self, now: float):
+        """Return shards newly declared suspect as of ``now``."""
+        newly = []
+        deadline = self.miss_threshold * self.interval
+        for shard_id, last in self._last.items():
+            if shard_id in self._suspected:
+                continue
+            if now - last >= deadline:
+                self._suspected.add(shard_id)
+                self.detections[shard_id] = now
+                newly.append(shard_id)
+        return newly
+
+    def suspected(self, shard_id: int) -> bool:
+        return shard_id in self._suspected
+
+
 class ConfigManager:
     def __init__(self) -> None:
         self._configs: Dict[int, ClusterConfig] = {}  # shard_id -> config

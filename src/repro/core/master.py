@@ -71,15 +71,22 @@ class Master:
         # RIFL completion records that arrived WITH migrated data (§3.6 slot
         # handover, RAMCloud-style per-object RIFL): keyed by (rpc_id,
         # key_hashes) so a moved op's retry dedups here while this master's
-        # native records stay untouched.  Not truncated by client acks (the
-        # ack sweep only walks the native table); bounded by what handovers
-        # carry — ack-driven gc of this overlay is a ROADMAP follow-on.
+        # native records stay untouched.  Truncated by client acks like the
+        # native table: a piggybacked (client, first_incomplete) frontier
+        # proves the client saw results for every seq below it, so those
+        # moved completions can never be retried again and are dropped
+        # (see _gc_migrated).
         self.migrated_rifl: Dict[Tuple[RpcId, Tuple[int, ...]], Any] = {}
+        # Per-client ack frontier already swept over migrated_rifl, so the
+        # overlay scan runs only when a client's frontier advances — steady
+        # traffic with no new acks pays a dict lookup, not a table walk.
+        self._migrated_ack_seen: Dict[int, int] = {}
         self.stats = {
             "fast": 0, "conflict_syncs": 0, "dups": 0, "batch_syncs": 0,
             "reads_fast": 0, "reads_blocked": 0, "hot_key_syncs": 0,
             "txn_prepares": 0, "txn_commits": 0, "txn_aborts": 0,
             "txn_vote_no": 0, "migrated_in_keys": 0, "migrated_out_keys": 0,
+            "migrated_rifl_gcd": 0,
         }
 
     # ------------------------------------------------------------------ utils
@@ -156,6 +163,8 @@ class Master:
                                      error="NOT_OWNER")
 
         self.rifl.apply_client_acks(client_acks)
+        if self.migrated_rifl and client_acks:
+            self._gc_migrated(client_acks)
         # §3.6 slot handover: a retry of an op that completed on the DONOR
         # before its slot moved here dedups against the migrated completion
         # records (checked first and key-scoped: this master's own records
@@ -230,11 +239,32 @@ class Master:
         return FAST, ExecResult(result, synced=False)
 
     # ----------------------------------------------- migration (migration.py)
+    def _gc_migrated(self, client_acks: Sequence[Tuple[int, int]]) -> None:
+        """Ack-driven gc of the migrated-completion overlay: a client ack
+        frontier (client_id, first_incomplete) proves every seq below it has
+        been seen by the client, so the retry window for those moved ops is
+        closed — drop their completion records.  Mirrors the native table's
+        apply_client_acks sweep, which cannot see this overlay (its entries
+        are keyed (rpc_id, key_hashes), not rpc_id)."""
+        for cid, first in client_acks:
+            if self._migrated_ack_seen.get(cid, 0) >= first:
+                continue
+            self._migrated_ack_seen[cid] = first
+            dead = [k for k in self.migrated_rifl
+                    if k[0][0] == cid and k[0][1] < first]
+            for k in dead:
+                del self.migrated_rifl[k]
+            self.stats["migrated_rifl_gcd"] += len(dead)
+
     def _install_migrated(self, op: Op) -> None:
         """Install the RIFL completion records riding a MIGRATE_IN op (the
         moved ops' exactly-once identities; see handle_update's dedup)."""
         _kvs, records = op.args
         for rpc_id, key_hashes, result in records:
+            if self._migrated_ack_seen.get(rpc_id[0], 0) > rpc_id[1]:
+                # Already below this client's acked frontier: the client can
+                # never retry it, so don't resurrect the record.
+                continue
             self.migrated_rifl[(rpc_id, tuple(key_hashes))] = result
 
     # --------------------------------------------------- transactions (txn.py)

@@ -1,0 +1,241 @@
+"""Serving-layer survival kit: admission control, throttling, circuit
+breaking, and graceful degradation for overloaded CURP servers.
+
+These are the protocol-agnostic policy objects behind the "production
+traffic armor" scenarios (repro.sim's open-loop storms, benchmarks/fig_slo):
+
+* ``AdmissionQueue`` — queue-based load leveling in front of a single-server
+  node: a bounded count of delivered-but-not-yet-served messages.  Arrivals
+  beyond the bound are shed *immediately* (fail fast) instead of joining a
+  queue whose wait already exceeds any useful deadline.  The shed reply is
+  explicit, so clients back off rather than timing out and retrying into
+  the same overload.
+* ``TokenBucket`` / ``ClientThrottle`` — per-client rate limiting at the
+  server: one misbehaving (or retry-storming) client cannot claim more than
+  its provisioned share of admission slots.
+* ``CircuitBreaker`` — client-side per-shard failure accounting: trips OPEN
+  after consecutive failures (timeouts, NOT_OWNER on a mid-migration slot,
+  crashed-master silence), fails fast while OPEN, and re-probes with a
+  bounded number of HALF_OPEN trial requests after a cooldown.
+* ``DegradeLevel``/``degrade_level`` — graceful degradation policy: under
+  pressure the server sheds *slow-path* work first (defer batched backup
+  syncs and witness gc), keeping the witness-backed 1-RTT write path alive;
+  conflict-path syncs that gate withheld client replies are never deferred.
+
+All times are caller-supplied floats (the discrete-event sim passes
+``sim.now`` in µs); nothing here reads a wall clock, so the objects are
+deterministic under simulation and trivially unit-testable.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+
+# --------------------------------------------------------------------------
+# Admission control (queue-based load leveling)
+# --------------------------------------------------------------------------
+class AdmissionQueue:
+    """Bounded admission in front of a single-server queue.
+
+    ``admit()`` reserves a slot (returns False when the bound is hit —
+    caller sheds the request), ``release()`` frees it when the request
+    finishes service.  ``depth``/``max_depth``/``shed`` expose the load
+    signal the degradation policy and the benchmarks read.
+    """
+
+    def __init__(self, capacity: int) -> None:
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.depth = 0
+        self.max_depth = 0
+        self.admitted = 0
+        self.shed = 0
+
+    def admit(self) -> bool:
+        if self.depth >= self.capacity:
+            self.shed += 1
+            return False
+        self.depth += 1
+        self.admitted += 1
+        if self.depth > self.max_depth:
+            self.max_depth = self.depth
+        return True
+
+    def release(self) -> None:
+        assert self.depth > 0, "release without admit"
+        self.depth -= 1
+
+    def frac(self) -> float:
+        """Current fill fraction — the pressure signal for degradation."""
+        return self.depth / self.capacity
+
+
+# --------------------------------------------------------------------------
+# Per-client throttling
+# --------------------------------------------------------------------------
+class TokenBucket:
+    """Classic token bucket: ``rate`` tokens per time unit, ``burst`` cap.
+
+    Lazy refill — tokens accrue on each ``allow`` call from the elapsed
+    time, so idle buckets cost nothing.
+    """
+
+    __slots__ = ("rate", "burst", "tokens", "t_last")
+
+    def __init__(self, rate: float, burst: float, now: float = 0.0) -> None:
+        self.rate = rate
+        self.burst = burst
+        self.tokens = burst
+        self.t_last = now
+
+    def allow(self, now: float, cost: float = 1.0) -> bool:
+        if now > self.t_last:
+            self.tokens = min(self.burst, self.tokens + (now - self.t_last) * self.rate)
+            self.t_last = now
+        if self.tokens >= cost:
+            self.tokens -= cost
+            return True
+        return False
+
+
+class ClientThrottle:
+    """Per-client token buckets, materialized lazily (an open-loop storm has
+    10^5–10^6 client ids; only active ones pay memory)."""
+
+    def __init__(self, rate: float, burst: float) -> None:
+        self.rate = rate
+        self.burst = burst
+        self._buckets: Dict[int, TokenBucket] = {}
+        self.throttled = 0
+
+    def allow(self, client_id: int, now: float) -> bool:
+        b = self._buckets.get(client_id)
+        if b is None:
+            b = self._buckets[client_id] = TokenBucket(self.rate, self.burst, now)
+        if b.allow(now):
+            return True
+        self.throttled += 1
+        return False
+
+
+# --------------------------------------------------------------------------
+# Circuit breaker (client side, per shard)
+# --------------------------------------------------------------------------
+class BreakerState(enum.Enum):
+    CLOSED = "CLOSED"
+    OPEN = "OPEN"
+    HALF_OPEN = "HALF_OPEN"
+
+
+class CircuitBreaker:
+    """Trip after ``failure_threshold`` consecutive failures; while OPEN all
+    requests fail fast (no network attempt).  After ``reset_timeout`` the
+    breaker admits up to ``half_open_probes`` trial requests: one success
+    closes it, one failure re-opens it (and restarts the cooldown).
+    """
+
+    def __init__(self, failure_threshold: int = 5,
+                 reset_timeout: float = 2000.0,
+                 half_open_probes: int = 1) -> None:
+        self.failure_threshold = failure_threshold
+        self.reset_timeout = reset_timeout
+        self.half_open_probes = half_open_probes
+        self.state = BreakerState.CLOSED
+        self.failures = 0
+        self.opened_at: Optional[float] = None
+        self._probes_out = 0
+        self.stats = {"trips": 0, "fast_fails": 0, "probes": 0, "closes": 0}
+
+    def allow(self, now: float) -> bool:
+        """May a request be sent now?  (HALF_OPEN admissions count as probes
+        until an outcome is recorded.)"""
+        if self.state is BreakerState.CLOSED:
+            return True
+        if self.state is BreakerState.OPEN:
+            if now - self.opened_at >= self.reset_timeout:
+                self.state = BreakerState.HALF_OPEN
+                self._probes_out = 0
+            else:
+                self.stats["fast_fails"] += 1
+                return False
+        # HALF_OPEN: bounded concurrent probes.
+        if self._probes_out < self.half_open_probes:
+            self._probes_out += 1
+            self.stats["probes"] += 1
+            return True
+        self.stats["fast_fails"] += 1
+        return False
+
+    def record_success(self) -> None:
+        if self.state is BreakerState.HALF_OPEN:
+            self.stats["closes"] += 1
+        self.state = BreakerState.CLOSED
+        self.failures = 0
+        self._probes_out = 0
+
+    def record_failure(self, now: float) -> None:
+        if self.state is BreakerState.HALF_OPEN:
+            self._trip(now)
+            return
+        self.failures += 1
+        if self.state is BreakerState.CLOSED and \
+                self.failures >= self.failure_threshold:
+            self._trip(now)
+
+    def _trip(self, now: float) -> None:
+        self.state = BreakerState.OPEN
+        self.opened_at = now
+        self.failures = 0
+        self._probes_out = 0
+        self.stats["trips"] += 1
+
+
+# --------------------------------------------------------------------------
+# Graceful degradation
+# --------------------------------------------------------------------------
+class DegradeLevel(enum.IntEnum):
+    NORMAL = 0      # full service
+    DEFER_SLOW = 1  # defer batched backup syncs + witness gc (slow path)
+
+
+def degrade_level(frac: float, level: DegradeLevel,
+                  hi: float, lo: float) -> DegradeLevel:
+    """Hysteresis thresholding of the admission-fill signal: enter
+    DEFER_SLOW at ``hi``, leave it only below ``lo`` (lo < hi), so the
+    server does not flap at the boundary."""
+    if level is DegradeLevel.NORMAL:
+        return DegradeLevel.DEFER_SLOW if frac >= hi else DegradeLevel.NORMAL
+    return DegradeLevel.NORMAL if frac < lo else DegradeLevel.DEFER_SLOW
+
+
+# --------------------------------------------------------------------------
+# Armor configuration bundle
+# --------------------------------------------------------------------------
+@dataclass
+class ArmorConfig:
+    """One knob bundle for a server's survival kit (sim wiring reads this).
+
+    ``throttle_rate`` is in ops per µs per client (e.g. 0.01 = 10k ops/s);
+    rate <= 0 disables the per-client throttle.  ``degrade_hi``/``lo`` are
+    admission-fill fractions with hysteresis (see ``degrade_level``).
+    """
+    queue_capacity: int = 64
+    witness_queue_capacity: int = 128
+    throttle_rate: float = 0.0
+    throttle_burst: float = 8.0
+    degrade_hi: float = 0.75
+    degrade_lo: float = 0.40
+
+    def make_queue(self) -> AdmissionQueue:
+        return AdmissionQueue(self.queue_capacity)
+
+    def make_witness_queue(self) -> AdmissionQueue:
+        return AdmissionQueue(self.witness_queue_capacity)
+
+    def make_throttle(self) -> Optional[ClientThrottle]:
+        if self.throttle_rate <= 0:
+            return None
+        return ClientThrottle(self.throttle_rate, self.throttle_burst)

@@ -43,14 +43,24 @@ class Witness:
     # RPC at a time").
     SUSPECT_AGE = 3
 
-    def __init__(self, n_sets: int = 1024, n_ways: int = 4) -> None:
+    def __init__(self, n_sets: int = 1024, n_ways: int = 4,
+                 class_budget: Optional[int] = None) -> None:
         self.n_sets = n_sets
         self.n_ways = n_ways
+        # Per-class way budget: cap on how many ways of ONE set a single
+        # mergeable (key_hash, class) stack may occupy.  Without it a hot
+        # commuting key (INCR storm) fills all W ways between gc rounds and
+        # every other class mapping to that set rejects as full — the budget
+        # bounds the stack so non-merge traffic keeps a seat.  None (the
+        # default, and the paper's behavior) disables the cap.  Host-witness
+        # knob only: the device kernels implement the uncapped semantics, so
+        # parity checks run with the default.
+        self.class_budget = class_budget
         self.mode = WitnessMode.ENDED
         self.master_id: Optional[int] = None
         self._slots: List[List[_Slot]] = []
         self.stats = {"accepts": 0, "rejects_conflict": 0, "rejects_full": 0,
-                      "rejects_mode": 0, "gc_drops": 0}
+                      "rejects_mode": 0, "rejects_budget": 0, "gc_drops": 0}
 
     # -- lifecycle (Fig. 4: coordinator -> witness) ---------------------------
     def start(self, master_id: int) -> bool:
@@ -96,24 +106,44 @@ class Witness:
         pairs = self._pairs(key_hashes, request)
         placements: List[Tuple[int, int, int, int]] = []  # (set, way, kh, cls)
         claimed: set = set()   # (set_idx, way) taken by earlier pairs of THIS op
+        placed: set = set()    # (kh, cls) pairs of THIS op already seated
         for kh, cls in pairs:
+            if (kh, cls) in placed:
+                # The op lists the same key twice (e.g. MSET a=1 a=2): one
+                # slot covers both occurrences — the conflict check is
+                # identical and recovery dedupes by rpc_id anyway.
+                continue
+            placed.add((kh, cls))
             set_idx = kh % self.n_sets
             ways = self._slots[set_idx]
             free_way = None
+            is_dup = False
+            stack = 0   # occupied ways already holding this (kh, cls) stack
             for w, slot in enumerate(ways):
                 if slot.occupied:
                     if slot.key_hash == kh and slot.rpc_id == rpc_id:
                         # Duplicate record RPC (client retry): idempotent accept.
                         free_way = w
+                        is_dup = True
                         break
-                    if slot.key_hash == kh and conflicts(slot.op_class, cls):
-                        # Non-commutative with a held request: must reject —
-                        # the witness cannot order them (§3.2.2).
-                        self.stats["rejects_conflict"] += 1
-                        self._note_suspect(slot)
-                        return RecordStatus.REJECTED
+                    if slot.key_hash == kh:
+                        if conflicts(slot.op_class, cls):
+                            # Non-commutative with a held request: must reject —
+                            # the witness cannot order them (§3.2.2).
+                            self.stats["rejects_conflict"] += 1
+                            self._note_suspect(slot)
+                            return RecordStatus.REJECTED
+                        if slot.op_class == cls:
+                            stack += 1
                 elif free_way is None and (set_idx, w) not in claimed:
                     free_way = w
+            if not is_dup and self.class_budget is not None \
+                    and stack >= self.class_budget:
+                # The mergeable stack for this (kh, cls) is at its way
+                # budget: reject so the op takes the sync path instead of
+                # starving other classes out of this set.
+                self.stats["rejects_budget"] += 1
+                return RecordStatus.REJECTED
             if free_way is None:
                 self.stats["rejects_full"] += 1
                 return RecordStatus.REJECTED

@@ -8,15 +8,19 @@ from .curp_sim import (
     TXN_CRASH_STAGES,
     BatchedRunResult,
     MigrationScenarioResult,
+    OpenLoopDriver,
+    OpenLoopResult,
     ScenarioResult,
     ShardedScenarioResult,
     ShardedSimCluster,
     SimCluster,
+    SimCoordinator,
     SimTxnClient,
     TimedTxnResult,
     TxnScenarioResult,
     run_batched_throughput,
     run_migration_scenario,
+    run_openloop_scenario,
     run_scenario,
     run_sharded_scenario,
     run_timed_txn_scenario,
@@ -28,6 +32,7 @@ from .params import DEFAULT, SimParams
 from .workload import (
     BatchedWorkload,
     HotKeyWorkload,
+    OpenLoopWorkload,
     ShardSkewedWorkload,
     TxnWorkload,
     UniformWriteWorkload,
@@ -42,8 +47,11 @@ __all__ = [
     "TXN_CRASH_STAGES", "TxnScenarioResult", "run_txn_crash_scenario",
     "MigrationScenarioResult", "run_migration_scenario",
     "SimTxnClient", "TimedTxnResult", "run_timed_txn_scenario",
+    "OpenLoopDriver", "OpenLoopResult", "SimCoordinator",
+    "run_openloop_scenario",
     "check_linearizable", "check_linearizable_strict",
     "Network", "Node", "Sim", "DEFAULT", "SimParams",
-    "BatchedWorkload", "HotKeyWorkload", "ShardSkewedWorkload", "TxnWorkload",
+    "BatchedWorkload", "HotKeyWorkload", "OpenLoopWorkload",
+    "ShardSkewedWorkload", "TxnWorkload",
     "UniformWriteWorkload", "YcsbWorkload", "ZipfianGenerator",
 ]

@@ -25,7 +25,15 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.backup import Backup
 from repro.core.client import ClientSession, Decision, decide
+from repro.core.config import HeartbeatDetector
 from repro.core.master import DUP, ERROR, FAST, SYNCED, Master
+from repro.core.overload import (
+    AdmissionQueue,
+    ArmorConfig,
+    CircuitBreaker,
+    DegradeLevel,
+    degrade_level,
+)
 from repro.core.shard import KeyRouter, ShardedClientSession, SlotRouter
 from repro.core.types import ExecResult, Op, OpType, RecordStatus
 from repro.core.witness import Witness
@@ -111,6 +119,23 @@ class MGcResp:
 
 
 @dataclass
+class MShedResp:
+    """Explicit load-shed reply (admission queue full / client throttled).
+
+    Sent at DELIVERY time, before any service cost — the fail-fast half of
+    queue-based load leveling.  Clients back off on it instead of timing
+    out and retrying into the same overload."""
+    rpc_id: tuple
+    kind: str           # "QUEUE" | "THROTTLE"
+
+
+@dataclass
+class MHeartbeat:
+    shard_id: int
+    master_id: int
+
+
+@dataclass
 class MDoSync:      # master self-message: issue the batched backup sync
     pass
 
@@ -124,11 +149,33 @@ class MDoGc:        # master self-message: issue witness gc after a sync
 # Actors
 # --------------------------------------------------------------------------
 class SimWitness(Node):
-    def __init__(self, sim, net, params, core: Witness, name: str) -> None:
+    def __init__(self, sim, net, params, core: Witness, name: str,
+                 armor: Optional[ArmorConfig] = None) -> None:
         super().__init__(sim, name)
         self.net = net
         self.p = params
         self.core = core
+        self.admission = armor.make_witness_queue() if armor else None
+
+    def deliver(self, msg) -> None:
+        if self.admission is not None and isinstance(msg, MRecord) \
+                and not self.crashed:
+            if not self.admission.admit():
+                # Shed at delivery (no service cost): reply REJECTED so the
+                # client falls back to the 2-RTT sync path — correct, just
+                # slower, which is exactly the graceful-degradation contract.
+                self.net.send(msg.src, MRecordResp(
+                    msg.op.rpc_id, RecordStatus.REJECTED, self, msg.attempt
+                ))
+                return
+            super().deliver(msg)
+            return
+        super().deliver(msg)
+
+    def _run(self, msg) -> None:
+        if self.admission is not None and isinstance(msg, MRecord):
+            self.admission.release()
+        super()._run(msg)
 
     def service_time(self, msg) -> float:
         if isinstance(msg, MRecord):
@@ -171,7 +218,8 @@ class SimBackup(Node):
 class SimMaster(Node):
     def __init__(self, sim, net, params, core: Master, name: str,
                  mode: str, backups: List[SimBackup],
-                 witnesses: List[SimWitness]) -> None:
+                 witnesses: List[SimWitness],
+                 armor: Optional[ArmorConfig] = None) -> None:
         super().__init__(sim, name)
         self.net = net
         self.p = params
@@ -187,6 +235,51 @@ class SimMaster(Node):
         self._per_op_acks: Dict[int, int] = {}
         self._sync_scheduled = False   # an MDoSync is queued but not yet run
         self.stats = {"updates": 0, "reads": 0}
+        # --- traffic armor (core.overload) --------------------------------
+        self.armor = armor
+        self.admission = armor.make_queue() if armor else None
+        self.throttle = armor.make_throttle() if armor else None
+        self.degrade = DegradeLevel.NORMAL
+        self._deferred_gc: List[tuple] = []
+        self._degrade_retry_scheduled = False
+        # Client-RPC queue depth, tracked with or without armor so the
+        # no-armor baseline's unbounded growth is measurable.
+        self.qdepth = 0
+        self.max_qdepth = 0
+        self.armor_stats = {"shed_queue": 0, "shed_throttle": 0,
+                            "deferred_syncs": 0, "deferred_gcs": 0}
+
+    # -- admission (queue-based load leveling; fail fast at delivery) ---------
+    def deliver(self, msg) -> None:
+        if isinstance(msg, (MUpdate, MRead)) and not self.crashed:
+            if self.admission is not None:
+                if not self.admission.admit():
+                    self.armor_stats["shed_queue"] += 1
+                    self.net.send(msg.src,
+                                  MShedResp(msg.op.rpc_id, "QUEUE"))
+                    return
+                if self.throttle is not None and not self.throttle.allow(
+                        msg.op.rpc_id[0], self.sim.now):
+                    self.admission.release()
+                    self.armor_stats["shed_throttle"] += 1
+                    self.net.send(msg.src,
+                                  MShedResp(msg.op.rpc_id, "THROTTLE"))
+                    return
+            self.qdepth += 1
+            if self.qdepth > self.max_qdepth:
+                self.max_qdepth = self.qdepth
+        super().deliver(msg)
+
+    def _run(self, msg) -> None:
+        if isinstance(msg, (MUpdate, MRead)):
+            self.qdepth -= 1
+            if self.admission is not None:
+                self.admission.release()
+                self.degrade = degrade_level(
+                    self.admission.frac(), self.degrade,
+                    self.armor.degrade_hi, self.armor.degrade_lo,
+                )
+        super()._run(msg)
 
     # -- service costs ----------------------------------------------------------
     def service_time(self, msg) -> float:
@@ -301,7 +394,14 @@ class SimMaster(Node):
                 gc_entries = self.core.complete_sync()
                 self._release(self.core.synced_index)
                 if self.witnesses and gc_entries:
-                    self.deliver(MDoGc(gc_entries))
+                    if self.degrade is DegradeLevel.DEFER_SLOW:
+                        # Degraded: witness gc is slow-path work — batch it
+                        # up for when the queue drains (records age a bit
+                        # longer; §4.5 suspicion handles true garbage).
+                        self._deferred_gc.extend(gc_entries)
+                        self.armor_stats["deferred_gcs"] += 1
+                    else:
+                        self.deliver(MDoGc(gc_entries))
                 self._maybe_sync()   # more batched work may be pending
 
         elif isinstance(msg, MDoGc):
@@ -349,7 +449,28 @@ class SimMaster(Node):
                 self._sync_scheduled = True
                 self.deliver(MDoSync())
             return
+        if self.degrade is not DegradeLevel.DEFER_SLOW and self._deferred_gc:
+            # Pressure lifted: flush the witness gc batched up while degraded.
+            entries = tuple(self._deferred_gc)
+            self._deferred_gc = []
+            self.deliver(MDoGc(entries))
         if self.core.want_sync and self.core.sync_in_progress is None:
+            if self.degrade is DegradeLevel.DEFER_SLOW and not self._withheld:
+                # Graceful degradation: the batch-full sync is deferrable
+                # slow-path work (nobody's reply is gated on it — conflict
+                # and read syncs withhold responses and are never deferred).
+                # The 1-RTT witness-backed fast path stays fully alive; the
+                # unsynced window just grows until pressure drops.
+                self.armor_stats["deferred_syncs"] += 1
+                if not self._degrade_retry_scheduled:
+                    # Bounded staleness: re-check even if traffic stops.
+                    self._degrade_retry_scheduled = True
+
+                    def retry() -> None:
+                        self._degrade_retry_scheduled = False
+                        self._maybe_sync()
+                    self.sim.after(2 * self.p.rpc_timeout_us, retry)
+                return
             self._sync_scheduled = True
             self.deliver(MDoSync())
 
@@ -485,6 +606,21 @@ class SimClient(Node):
         pend = self.pending
         if pend is None or pend.done:
             return
+        if isinstance(msg, MShedResp) and msg.rpc_id == pend.op.rpc_id:
+            # Explicit load-shed: back off (linearly growing, jittered)
+            # instead of hammering the overloaded server until timeout.
+            pend.retries += 1
+            if pend.retries > 40:
+                self._record_history(pend, value=None, failed=True)
+                self.pending = None
+                self._issue_next()
+                return
+            delay = min(self.p.ol_shed_backoff_us * pend.retries,
+                        self.p.ol_backoff_cap_us)
+            delay *= 1.0 + self.p.ol_backoff_jitter * (
+                2 * self.sim.rng.random() - 1)
+            self.sim.after(delay, self._resend)
+            return
         if isinstance(msg, MUpdateResp) and msg.rpc_id == pend.op.rpc_id:
             if not msg.result.ok:
                 # Stale config (witness list version): refetch + retry.
@@ -563,12 +699,14 @@ class SimClient(Node):
 # --------------------------------------------------------------------------
 class SimCluster:
     def __init__(self, sim: Sim, net: Network, params: SimParams, mode: str,
-                 f: int, backup_service_us: Optional[float] = None) -> None:
+                 f: int, backup_service_us: Optional[float] = None,
+                 armor: Optional[ArmorConfig] = None) -> None:
         self.sim = sim
         self.net = net
         self.p = params
         self.mode = mode
         self.f = f
+        self.armor = armor
         self.epoch = 0
         self.wlv = 0
         self._id = 0
@@ -589,21 +727,33 @@ class SimCluster:
             hot_key_window=params.hot_key_window_us,
         )
         self.witness_cores = [
-            Witness(params.witness_sets, params.witness_ways) for _ in range(f)
+            Witness(params.witness_sets, params.witness_ways,
+                    class_budget=params.witness_class_budget)
+            for _ in range(f)
         ] if use_witnesses else []
         self.witness_nodes = [
-            SimWitness(sim, net, params, w, f"witness{i}")
+            SimWitness(sim, net, params, w, f"witness{i}", armor=armor)
             for i, w in enumerate(self.witness_cores)
         ]
         for w in self.witness_cores:
             w.start(self.master_id)
         self.master_node = SimMaster(
             sim, net, params, core_master, "master", mode,
-            self.backup_nodes, self.witness_nodes,
+            self.backup_nodes, self.witness_nodes, armor=armor,
         )
         self.clients: List[SimClient] = []
         self.completions: List[float] = []
         self.recovery_report: Optional[dict] = None
+        # Optional key-ownership filter installed on every master this
+        # cluster creates (incl. post-recovery ones); the sharded wrapper
+        # uses it for timed slot migration (NOT_OWNER on frozen slots).
+        self.owned_filter = None
+        # Heartbeat failover (SimCoordinator.watch wires these):
+        self.coordinator: Optional["SimCoordinator"] = None
+        self.hb_shard_id: Optional[int] = None
+        self._recovering = False
+        self._detect_source = "harness"
+        self.master_nodes_retired: List[SimMaster] = []  # armor stats survive failover
 
     def _next_id(self) -> int:
         self._id += 1
@@ -616,12 +766,61 @@ class SimCluster:
     def on_completion(self, t: float) -> None:
         self.completions.append(t)
 
+    def set_owned_filter(self, fn) -> None:
+        """Install a key-ownership predicate on the current AND every future
+        master core (timed migration: frozen/moved slots draw NOT_OWNER)."""
+        self.owned_filter = fn
+        self.master_node.core.owned_partition = fn
+
+    # -- heartbeat failover (SimCoordinator-driven) -----------------------------
+    def attach_heartbeat(self, shard_id: int,
+                         coordinator: "SimCoordinator") -> None:
+        self.coordinator = coordinator
+        self.hb_shard_id = shard_id
+        self._start_heartbeat_loop(self.master_node)
+
+    def _start_heartbeat_loop(self, node: SimMaster) -> None:
+        """Self-rescheduling beat from ``node`` over the (lossy, jittery)
+        timed transport.  The loop dies silently with its master: beats just
+        stop, and only the coordinator's miss-count detector notices."""
+        def beat() -> None:
+            if node.crashed or node is not self.master_node:
+                return
+            self.net.send(self.coordinator,
+                          MHeartbeat(self.hb_shard_id, self.master_id),
+                          size_bytes=32)
+            self.sim.after(self.p.heartbeat_interval_us, beat)
+        # Desynchronize shard beats slightly.
+        self.sim.after(self.sim.rng.random() * self.p.heartbeat_interval_us,
+                       beat)
+
+    def begin_failover(self, source: str) -> None:
+        """Entry point for DETECTED failures (heartbeat silence): run the
+        standard recovery path exactly once."""
+        if self._recovering:
+            return
+        self._recovering = True
+        self._detect_source = source
+        self._recover()
+
     # -- crash + recovery (timed mirror of core.recovery) -------------------------
     def crash_master_at(self, t: float) -> None:
         self.sim.at(t, self._crash)
 
+    def fail_master_at(self, t: float) -> None:
+        """Kill the master SILENTLY: no harness-scheduled recovery.  The
+        node stops serving and stops heartbeating; failover happens iff a
+        SimCoordinator's failure detector notices the silence."""
+        def fail() -> None:
+            self.master_node.crashed = True
+        self.sim.at(t, fail)
+
     def _crash(self) -> None:
         self.master_node.crashed = True
+        if self._recovering:
+            return
+        self._recovering = True
+        self._detect_source = "harness"
         self.sim.after(self.p.crash_detect_us, self._recover)
 
     def _recover(self) -> None:
@@ -665,27 +864,89 @@ class SimCluster:
                     self.master_id = new_master_core.master_id
                     self.wlv += 1
                     new_master_core.witness_list_version = self.wlv
+                    if self.owned_filter is not None:
+                        new_master_core.owned_partition = self.owned_filter
                     self.witness_cores = [
-                        Witness(p.witness_sets, p.witness_ways)
+                        Witness(p.witness_sets, p.witness_ways,
+                                class_budget=p.witness_class_budget)
                         for _ in range(self.f)
                     ] if self.mode == "curp" else []
                     self.witness_nodes = [
-                        SimWitness(self.sim, self.net, p, w, f"witness'{i}")
+                        SimWitness(self.sim, self.net, p, w, f"witness'{i}",
+                                   armor=self.armor)
                         for i, w in enumerate(self.witness_cores)
                     ]
                     for w in self.witness_cores:
                         w.start(self.master_id)
+                    self.master_nodes_retired.append(self.master_node)
                     self.master_node = SimMaster(
                         self.sim, self.net, p, new_master_core, "master'",
                         self.mode, self.backup_nodes, self.witness_nodes,
+                        armor=self.armor,
                     )
                     self.recovery_report = {
                         "restored": len(entries), "replayed": replayed,
                         "recovered_at": self.sim.now,
+                        "detected_by": self._detect_source,
                     }
+                    self._recovering = False
+                    if self.coordinator is not None:
+                        # Re-arm the failure detector and start the new
+                        # master's beat loop.
+                        self.coordinator.detector.watch(
+                            self.hb_shard_id, self.sim.now)
+                        self._start_heartbeat_loop(self.master_node)
                 self.sim.after(sync_us, finish)
             self.sim.after(replay_us, after_replay)
         self.sim.after(restore_us, after_restore)
+
+
+class SimCoordinator(Node):
+    """ConfigManager-side failure detector in the timed transport (§3.6).
+
+    Masters heartbeat every ``heartbeat_interval_us`` over the same lossy
+    network as client traffic; the HeartbeatDetector (repro.core.config)
+    declares a master suspect after ``heartbeat_miss_threshold`` silent
+    intervals, and the coordinator then drives the shard's standard
+    recovery path (backup restore -> witness freeze/replay -> epoch+WLV
+    bump -> fresh witnesses) with NO harness intervention.  The epoch/WLV
+    fences make a falsely-suspected (or zombie) old master harmless: its
+    syncs are refused by backups and clients' stale configs draw
+    WRONG_WITNESS_VERSION."""
+
+    def __init__(self, sim, net, params, name: str = "coordinator") -> None:
+        super().__init__(sim, name)
+        self.net = net
+        self.p = params
+        self.detector = HeartbeatDetector(
+            params.heartbeat_interval_us, params.heartbeat_miss_threshold
+        )
+        self.watched: Dict[int, SimCluster] = {}
+        self.failovers: List[dict] = []
+        self._loop_started = False
+
+    def service_time(self, msg) -> float:
+        return self.p.heartbeat_service_us
+
+    def watch(self, shard_id: int, cluster: SimCluster) -> None:
+        self.watched[shard_id] = cluster
+        self.detector.watch(shard_id, self.sim.now)
+        cluster.attach_heartbeat(shard_id, self)
+        if not self._loop_started:
+            self._loop_started = True
+            self.sim.after(self.p.heartbeat_interval_us, self._check)
+
+    def handle(self, msg) -> None:
+        if isinstance(msg, MHeartbeat):
+            self.detector.beat(msg.shard_id, self.sim.now)
+
+    def _check(self) -> None:
+        for shard_id in self.detector.check(self.sim.now):
+            self.failovers.append({
+                "shard": shard_id, "detected_at": self.sim.now,
+            })
+            self.watched[shard_id].begin_failover("heartbeat")
+        self.sim.after(self.p.heartbeat_interval_us, self._check)
 
 
 class ShardedSimCluster:
@@ -699,7 +960,9 @@ class ShardedSimCluster:
     def __init__(self, sim: Sim, net: Network, params: SimParams, mode: str,
                  f: int, n_shards: int,
                  backup_service_us: Optional[float] = None,
-                 router: Optional[SlotRouter] = None) -> None:
+                 router: Optional[SlotRouter] = None,
+                 armor: Optional[ArmorConfig] = None,
+                 enforce_ownership: bool = False) -> None:
         self.sim = sim
         self.net = net
         self.p = params
@@ -712,11 +975,110 @@ class ShardedSimCluster:
         self.router = router if router is not None else KeyRouter(n_shards)
         self.shards = [
             SimCluster(sim, net, params, mode, f,
-                       backup_service_us=backup_service_us)
+                       backup_service_us=backup_service_us, armor=armor)
             for _ in range(n_shards)
         ]
         self.clients: List[SimClient] = []
         self.completions: List[float] = []
+        # -- timed slot migration state ------------------------------------
+        self._frozen: set = set()           # slots mid-handover (NOT_OWNER)
+        self.migrations: List[dict] = []
+        self._mig_session = ClientSession(client_id=1)  # migration RPC ids
+        if enforce_ownership:
+            # Masters answer NOT_OWNER for keys their shard does not own
+            # under the LIVE map (or that are frozen mid-handover) — this is
+            # what makes client-cached slot maps observable: a stale cache
+            # draws NOT_OWNER instead of silently landing on the old owner.
+            for i, s in enumerate(self.shards):
+                s.set_owned_filter(self._make_owned_filter(i))
+
+    def _make_owned_filter(self, shard_id: int):
+        def owns(key) -> bool:
+            slot = self.router.slot_of(key)
+            return self.router.slot_map[slot] == shard_id \
+                and slot not in self._frozen
+        return owns
+
+    # -- timed slot migration (freeze -> transfer -> flip) ---------------------
+    def migrate_slot_at(self, t: float, slot: int, dst: int) -> None:
+        """Schedule a live handover of ``slot`` to shard ``dst`` inside the
+        timed transport: the slot freezes (donor answers NOT_OWNER; clients
+        with the stale map pay the §3.6 refetch), the resident keys + live
+        RIFL completions transfer after a size-dependent delay as one
+        MIGRATE_IN absorb on the receiver, then the map flips (version
+        bump) and the slot thaws.  Requires enforce_ownership=True."""
+        self.sim.at(t, lambda: self._migrate_slot(slot, dst))
+
+    def _migrate_slot(self, slot: int, dst: int) -> None:
+        src = self.router.slot_map[slot]
+        if src == dst or slot in self._frozen:
+            return
+        donor = self.shards[src]
+        recv = self.shards[dst]
+        self._frozen.add(slot)
+        t_freeze = self.sim.now
+        n_resident = sum(
+            1 for k in donor.master_node.core.store.keys()
+            if self.router.slot_of(k) == slot
+        )
+        transfer_us = 20.0 + n_resident * self.p.restore_per_entry_us \
+            + 4 * self.p.one_way_delay_us
+
+        def transfer() -> None:
+            # Freeze held while the delay elapsed, so this state is exactly
+            # what was durable when clients stopped landing on the donor.
+            d_core = donor.master_node.core
+            kvs = tuple(
+                (k, d_core.store.get(k)) for k in d_core.store.keys()
+                if self.router.slot_of(k) == slot
+            )
+            records: Dict[tuple, tuple] = {}
+            for e in d_core.log:
+                op = e.op
+                if op.op_type in (OpType.MIGRATE_IN, OpType.MIGRATE_OUT):
+                    continue
+                if not op.keys or not all(
+                        self.router.slot_of(k) == slot for k in op.keys):
+                    continue
+                rec = d_core.rifl.check_duplicate(op.rpc_id)
+                if rec is None:
+                    continue
+                records[(op.rpc_id, op.key_hashes())] = (
+                    op.rpc_id, op.key_hashes(), rec.result
+                )
+            for (rpc_id, khs), result in d_core.migrated_rifl.items():
+                if all(self.router.slot_of_hash(kh) == slot for kh in khs):
+                    records[(rpc_id, khs)] = (rpc_id, khs, result)
+            # Commit point: flip the map (bumps router.version) and thaw,
+            # then absorb — all inside this one callback, so no client event
+            # can interleave between the flip and the MIGRATE_IN apply.  The
+            # flip must come first or the receiver's own ownership filter
+            # would reject the still-frozen slot.
+            self.router.assign([slot], dst)
+            self._frozen.discard(slot)
+            if kvs or records:
+                op = Op(
+                    OpType.MIGRATE_IN,
+                    tuple(k for k, _ in kvs),
+                    (kvs, tuple(records.values())),
+                    self._mig_session.next_rpc_id(),
+                )
+                r_core = recv.master_node.core
+                verdict, result = r_core.handle_update(
+                    op, r_core.witness_list_version, (), now=self.sim.now
+                )
+                assert verdict in (FAST, SYNCED, DUP), (verdict, result.error)
+                # The absorb is one log entry; charge the receiver for it.
+                recv.master_node.occupy(
+                    1.0 + len(kvs) * self.p.restore_per_entry_us
+                )
+            self.migrations.append({
+                "slot": slot, "src": src, "dst": dst,
+                "frozen_at": t_freeze, "committed_at": self.sim.now,
+                "keys_moved": len(kvs) if (kvs or records) else 0,
+                "rifl_moved": len(records),
+            })
+        self.sim.after(transfer_us, transfer)
 
     def route(self, op: Op) -> SimCluster:
         sids = {self.router.shard_of(k) for k in op.keys}
@@ -952,6 +1314,492 @@ def run_batched_throughput(
         ops=ops, wall_s=wall, ops_per_sec=ops / wall if wall > 0 else 0.0,
         fast_fraction=fast / max(1, fast + slow),
         witness_accepts=accepts,
+    )
+
+
+# --------------------------------------------------------------------------
+# Open-loop timed workload (production traffic armor)
+# --------------------------------------------------------------------------
+@dataclass
+class _OlOp:
+    """In-flight state for one open-loop op (the hub's PendingOp)."""
+    op: Op
+    session: ClientSession
+    is_update: bool
+    t_invoke: float
+    shard_idx: int = 0
+    attempts: int = 0
+    master_result: Optional[ExecResult] = None
+    witness_statuses: List[RecordStatus] = field(default_factory=list)
+    want_witnesses: int = 0
+    sync_requested: bool = False
+    done: bool = False
+
+
+class OpenLoopDriver(Node):
+    """Open-loop client tier: ops arrive on a nonhomogeneous-Poisson clock
+    (diurnal ramps, flash crowds) and are issued IMMEDIATELY — no op ever
+    waits for another's response, so offered load is set by the arrival
+    process, not by server latency.  That is what makes overload visible:
+    a closed loop self-throttles, an open loop buries a slow server.
+
+    One hub node stands in for 10^5–10^6 client machines (sessions are
+    materialized lazily per client id); its service time is ~0 so the
+    client tier is never the bottleneck being measured.  Retries use
+    capped exponential backoff + jitter (ol_* params); explicit MShedResp
+    replies back off on a separate (linear, jittered) schedule.  The hub
+    caches the slot map and pays the §3.6 config refetch only when a
+    master answers NOT_OWNER, and runs one client-side circuit breaker
+    per shard (armor runs only)."""
+
+    def __init__(self, sim, net, params, cluster, workload,
+                 use_breakers: bool = False,
+                 record_history: bool = False) -> None:
+        super().__init__(sim, "openloop-hub")
+        self.net = net
+        self.p = params
+        self.cluster = cluster
+        self.workload = workload
+        self.record_history = record_history
+        self.sessions: Dict[int, ClientSession] = {}
+        self.inflight: Dict[tuple, _OlOp] = {}
+        # Client-cached routing state (§3.6): a stale map draws NOT_OWNER
+        # and only then pays config_fetch_us for a fresh snapshot.
+        self._router = getattr(cluster, "router", None)
+        self._slot_map = list(self._router.slot_map) if self._router else None
+        self._map_version = self._router.version if self._router else 0
+        self._refetching = False
+        n_shards = getattr(cluster, "n_shards", 1)
+        self.breakers: Dict[int, CircuitBreaker] = {
+            i: CircuitBreaker(params.breaker_failures,
+                              params.breaker_reset_us,
+                              params.breaker_probes)
+            for i in range(n_shards)
+        } if use_breakers else {}
+        self._t_end = 0.0
+        self.stats = {
+            "issued": 0, "completed": 0, "failed": 0, "timeouts": 0,
+            "sheds_seen": 0, "breaker_fast_fails": 0, "refetches": 0,
+            "not_owner": 0, "stale_config": 0, "sync_paths": 0,
+        }
+        self.fast_completions = 0
+        self.rtt2_completions = 0
+        self.latencies: List[Tuple[float, float, bool]] = []
+        self.issue_times: List[float] = []
+        self.history: List[dict] = []
+
+    def service_time(self, msg) -> float:
+        return 0.0   # the hub aggregates many machines; never the bottleneck
+
+    # -- arrivals ---------------------------------------------------------------
+    def start(self, t_end: float) -> None:
+        self._t_end = t_end
+        self.sim.after(self.workload.next_interarrival(self.sim.now),
+                       self._arrive)
+
+    def _arrive(self) -> None:
+        if self.sim.now >= self._t_end:
+            return
+        self._issue()
+        self.sim.after(self.workload.next_interarrival(self.sim.now),
+                       self._arrive)
+
+    def _issue(self) -> None:
+        cid = self.workload.next_client()
+        session = self.sessions.get(cid)
+        if session is None:
+            session = self.sessions[cid] = ClientSession(
+                client_id=1_000_000 + cid)
+        op = self.workload.make_op(session)
+        st = _OlOp(op=op, session=session, is_update=op.is_update,
+                   t_invoke=self.sim.now)
+        self.inflight[op.rpc_id] = st
+        self.stats["issued"] += 1
+        self.issue_times.append(self.sim.now)
+        self._attempt(st)
+
+    # -- routing (cached slot map) -----------------------------------------------
+    def _shard_of(self, op: Op) -> int:
+        if self._router is None:
+            return 0
+        return self._slot_map[self._router.slot_of(op.keys[0])]
+
+    def _target(self, shard_idx: int):
+        shards = getattr(self.cluster, "shards", None)
+        return shards[shard_idx] if shards is not None else self.cluster
+
+    def _refetch_map(self) -> None:
+        if self._refetching or self._router is None:
+            return
+        self._refetching = True
+
+        def done() -> None:
+            self._refetching = False
+            self._slot_map = list(self._router.slot_map)
+            self._map_version = self._router.version
+            self.stats["refetches"] += 1
+        self.sim.after(self.p.config_fetch_us, done)
+
+    # -- attempts -----------------------------------------------------------------
+    def _attempt(self, st: _OlOp) -> None:
+        if st.done:
+            return
+        st.shard_idx = self._shard_of(st.op)
+        br = self.breakers.get(st.shard_idx)
+        if br is not None and not br.allow(self.sim.now):
+            # Breaker OPEN: fail fast locally — no packet, no server work —
+            # and come back after a backoff instead of piling onto a shard
+            # that is down or mid-handover.
+            self.stats["breaker_fast_fails"] += 1
+            self._backoff(st, self.p.ol_backoff_base_us)
+            return
+        target = self._target(st.shard_idx)
+        master = target.master_node
+        op = st.op
+        t0 = self.sim.now
+        if st.is_update and self.cluster.mode == "curp":
+            wits = target.witness_nodes
+            st.want_witnesses = len(wits)
+            st.witness_statuses = []
+            att = st.attempts
+            for k, w in enumerate(wits):
+                self.sim.at(
+                    t0 + (k + 1) * self.p.client_record_send_cost_us,
+                    lambda w=w, op=op, att=att: self.net.send(
+                        w, MRecord(self, target.master_id, op, att)
+                    ),
+                )
+            t0 += len(wits) * self.p.client_record_send_cost_us
+        else:
+            st.want_witnesses = 0
+            st.witness_statuses = []
+        t0 += self.p.client_send_cost_us
+        if st.is_update:
+            msg = MUpdate(self, op, target.wlv, st.session.acks())
+        else:
+            msg = MRead(self, op)
+        self.sim.at(t0, lambda: self.net.send(master, msg, size_bytes=256))
+        rpc_id, attempt = op.rpc_id, st.attempts
+        self.sim.after(self.p.rpc_timeout_us,
+                       lambda: self._check_timeout(rpc_id, attempt))
+
+    def _check_timeout(self, rpc_id, attempt) -> None:
+        st = self.inflight.get(rpc_id)
+        if st is None or st.done or st.attempts != attempt:
+            return
+        self.stats["timeouts"] += 1
+        br = self.breakers.get(st.shard_idx)
+        if br is not None:
+            br.record_failure(self.sim.now)
+        self._backoff(st, self.p.ol_backoff_base_us, exponential=True)
+
+    def _backoff(self, st: _OlOp, base_us: float,
+                 exponential: bool = False) -> None:
+        """Count an attempt; give up past ol_max_attempts, else schedule a
+        jittered retry (capped exponential for timeouts, capped linear for
+        explicit sheds and breaker fast-fails)."""
+        st.attempts += 1
+        if st.attempts >= self.p.ol_max_attempts:
+            self._give_up(st)
+            return
+        if exponential:
+            delay = min(base_us * (2 ** (st.attempts - 1)),
+                        self.p.ol_backoff_cap_us)
+        else:
+            delay = min(base_us * st.attempts, self.p.ol_backoff_cap_us)
+        delay *= 1.0 + self.p.ol_backoff_jitter * (
+            2 * self.sim.rng.random() - 1)
+        self.sim.after(delay, lambda: self._resend(st))
+
+    def _resend(self, st: _OlOp) -> None:
+        if st.done:
+            return
+        st.master_result = None
+        st.sync_requested = False
+        self._attempt(st)
+
+    def _give_up(self, st: _OlOp) -> None:
+        st.done = True
+        self.inflight.pop(st.op.rpc_id, None)
+        self.stats["failed"] += 1
+        # The client walks away: RIFL may reclaim the completion record (the
+        # op stays a "maybe" for the checker — it may or may not have run).
+        st.session.abandon(st.op.rpc_id)
+        if self.record_history:
+            self._record(st, value=None, failed=True)
+
+    # -- responses -----------------------------------------------------------------
+    def handle(self, msg) -> None:
+        rpc_id = getattr(msg, "rpc_id", None)
+        st = self.inflight.get(rpc_id)
+        if st is None or st.done:
+            return
+        if isinstance(msg, MShedResp):
+            # Explicit backpressure: the server is alive but full.  Back off
+            # harder than a normal retry, and do NOT count it against the
+            # breaker (a shed is a healthy signal, not a dead shard).
+            self.stats["sheds_seen"] += 1
+            self._backoff(st, self.p.ol_shed_backoff_us)
+            return
+        if isinstance(msg, MUpdateResp):
+            if not msg.result.ok:
+                br = self.breakers.get(st.shard_idx)
+                if msg.result.error == "NOT_OWNER":
+                    # Stale cached slot map (§3.6): refetch, then retry
+                    # against the fresh map.
+                    self.stats["not_owner"] += 1
+                    if br is not None:
+                        br.record_failure(self.sim.now)
+                    self._refetch_map()
+                else:
+                    self.stats["stale_config"] += 1
+                st.attempts += 1
+                if st.attempts >= self.p.ol_max_attempts:
+                    self._give_up(st)
+                    return
+                self.sim.after(self.p.config_fetch_us,
+                               lambda: self._resend(st))
+                return
+            st.master_result = msg.result
+        elif isinstance(msg, MRecordResp):
+            if msg.attempt != st.attempts:
+                return   # stale response from a pre-retry witness set
+            st.witness_statuses.append(msg.status)
+        elif isinstance(msg, MSyncResp):
+            if st.master_result is None:
+                return
+            self._complete(st, st.master_result, rtts=3)
+            return
+        else:
+            return
+        self._evaluate(st)
+
+    def _evaluate(self, st: _OlOp) -> None:
+        if st.master_result is None:
+            return
+        if not st.is_update or self.cluster.mode != "curp":
+            self._complete(st, st.master_result,
+                           rtts=2 if st.master_result.synced else 1)
+            return
+        if st.master_result.synced:
+            self._complete(st, st.master_result, rtts=2)
+            return
+        if len(st.witness_statuses) < st.want_witnesses:
+            return
+        d = decide(st.master_result, st.witness_statuses)
+        if d is Decision.COMPLETE:
+            self._complete(st, st.master_result, rtts=1)
+        elif not st.sync_requested:
+            st.sync_requested = True
+            self.stats["sync_paths"] += 1
+            self.sim.after(
+                self.p.client_send_cost_us,
+                lambda: self.net.send(
+                    self._target(st.shard_idx).master_node,
+                    MSyncReq(self, st.op.rpc_id),
+                ),
+            )
+
+    def _complete(self, st: _OlOp, result, rtts: int) -> None:
+        st.done = True
+        self.inflight.pop(st.op.rpc_id, None)
+        lat = self.sim.now - st.t_invoke
+        self.latencies.append((lat, self.sim.now, st.is_update))
+        if rtts == 1:
+            self.fast_completions += 1
+        else:
+            self.rtt2_completions += 1
+        st.session.mark_completed(st.op.rpc_id)
+        br = self.breakers.get(st.shard_idx)
+        if br is not None:
+            br.record_success()
+        self.stats["completed"] += 1
+        if self.record_history:
+            self._record(st, value=result.value if result else None)
+
+    def _record(self, st: _OlOp, value, failed: bool = False) -> None:
+        self.history.append({
+            "client": st.session.client_id,
+            "op": st.op,
+            "invoke": st.t_invoke,
+            "complete": None if failed else self.sim.now,
+            "value": value,
+            "failed": failed,
+        })
+
+
+@dataclass
+class OpenLoopResult:
+    mode: str
+    armored: bool
+    duration_us: float
+    issued: int
+    completed: int
+    failed: int
+    offered_ops_per_sec: float      # arrivals in the measure window
+    goodput_ops_per_sec: float      # completions in-window AND under SLO
+    completed_ops_per_sec: float    # completions in-window (any latency)
+    slo_us: float
+    p50_us: float
+    p99_us: float
+    p999_us: float
+    fast_fraction: float
+    client_stats: dict              # OpenLoopDriver.stats
+    breaker_stats: dict             # summed across per-shard breakers
+    armor_stats: dict               # summed across masters (incl. retired)
+    witness_sheds: int
+    max_qdepth: int                 # deepest master RPC queue seen anywhere
+    recoveries: Dict[int, dict]
+    failovers: List[dict]           # coordinator-detected (heartbeat)
+    migrations: List[dict]
+    history: list
+    sim_time_us: float
+
+
+def _percentile(sorted_vals, q: float) -> float:
+    if not sorted_vals:
+        return float("nan")
+    idx = min(len(sorted_vals) - 1, int(q * len(sorted_vals)))
+    return sorted_vals[idx]
+
+
+def run_openloop_scenario(
+    workload=None,
+    duration_us: float = 20_000.0,
+    mode: str = "curp",
+    f: int = 1,
+    n_shards: int = 1,
+    armor: Any = None,               # None/False, True, or an ArmorConfig
+    params: Optional[SimParams] = None,
+    seed: int = 0,
+    slo_us: float = 50.0,
+    heartbeat: bool = False,
+    fail_master_at: Optional[Dict[int, float]] = None,
+    migrate_slots: Optional[List[Tuple[float, int, int]]] = None,
+    warmup_frac: float = 0.2,
+    record_history: bool = False,
+) -> OpenLoopResult:
+    """Drive an open-loop timed workload against a (possibly sharded,
+    possibly armored) cluster and measure SLO survival.
+
+    ``armor=True`` builds an ArmorConfig from params and also enables the
+    client-side circuit breakers; ``armor=None/False`` is the naked
+    baseline (unbounded queues, no shedding, no breakers).
+    ``fail_master_at`` maps shard index -> silent-kill time; with
+    ``heartbeat=True`` a SimCoordinator detects the silence and drives
+    failover — the harness never schedules recovery itself.
+    ``migrate_slots`` is a list of (t_us, slot, dst_shard) live handovers
+    (sharded runs only; implies ownership enforcement)."""
+    from .workload import OpenLoopWorkload
+
+    p = params or DEFAULT
+    sim = Sim(seed=seed)
+    net = Network(sim, p)
+    if isinstance(armor, ArmorConfig):
+        armor_cfg = armor
+    elif armor:
+        armor_cfg = ArmorConfig(
+            queue_capacity=p.admit_queue_depth,
+            witness_queue_capacity=p.admit_queue_depth_witness,
+            throttle_rate=p.throttle_rate_ops_per_us,
+            throttle_burst=p.throttle_burst,
+            degrade_hi=p.degrade_hi_frac,
+            degrade_lo=p.degrade_lo_frac,
+        )
+    else:
+        armor_cfg = None
+
+    if n_shards > 1:
+        cluster = ShardedSimCluster(
+            sim, net, p, mode, f, n_shards, armor=armor_cfg,
+            enforce_ownership=bool(migrate_slots),
+        )
+        shard_clusters = cluster.shards
+    else:
+        cluster = SimCluster(sim, net, p, mode, f, armor=armor_cfg)
+        shard_clusters = [cluster]
+
+    coord = None
+    if heartbeat:
+        coord = SimCoordinator(sim, net, p)
+        for i, s in enumerate(shard_clusters):
+            coord.watch(i, s)
+    for shard_idx, t in (fail_master_at or {}).items():
+        shard_clusters[shard_idx].fail_master_at(t)
+    for t, slot, dst in (migrate_slots or []):
+        cluster.migrate_slot_at(t, slot, dst)
+
+    wl = workload or OpenLoopWorkload(rate_ops_per_us=0.5, seed=seed)
+    driver = OpenLoopDriver(sim, net, p, cluster, wl,
+                            use_breakers=armor_cfg is not None,
+                            record_history=record_history)
+    driver.start(duration_us)
+    # Arrivals stop at duration_us; leave room for retries/backoff to drain
+    # and for any in-flight failover to finish.
+    drain_us = max(20 * p.rpc_timeout_us,
+                   p.ol_max_attempts * p.ol_backoff_cap_us / 4)
+    sim.run(until=duration_us + drain_us)
+
+    # -- measure window: [warmup, end of arrivals] ---------------------------
+    w_lo, w_hi = duration_us * warmup_frac, duration_us
+    window_s = (w_hi - w_lo) / 1e6
+    offered = sum(1 for t in driver.issue_times if w_lo <= t < w_hi)
+    in_window = [(lat, t) for lat, t, _ in driver.latencies
+                 if w_lo <= t < w_hi]
+    good = sum(1 for lat, _ in in_window if lat <= slo_us)
+    lats = sorted(lat for lat, _ in in_window)
+
+    armor_stats: Dict[str, int] = {}
+    max_qdepth = 0
+    witness_sheds = 0
+    for s in shard_clusters:
+        for m in [s.master_node] + s.master_nodes_retired:
+            for k, v in m.armor_stats.items():
+                armor_stats[k] = armor_stats.get(k, 0) + v
+            max_qdepth = max(max_qdepth, m.max_qdepth)
+        for w in s.witness_nodes:
+            if w.admission is not None:
+                witness_sheds += w.admission.shed
+    breaker_stats: Dict[str, int] = {}
+    for br in driver.breakers.values():
+        for k, v in br.stats.items():
+            breaker_stats[k] = breaker_stats.get(k, 0) + v
+
+    if n_shards > 1:
+        recoveries = cluster.recovery_reports
+        migrations = cluster.migrations
+    else:
+        recoveries = ({0: cluster.recovery_report}
+                      if cluster.recovery_report else {})
+        migrations = []
+
+    return OpenLoopResult(
+        mode=mode,
+        armored=armor_cfg is not None,
+        duration_us=duration_us,
+        issued=driver.stats["issued"],
+        completed=driver.stats["completed"],
+        failed=driver.stats["failed"],
+        offered_ops_per_sec=offered / window_s if window_s > 0 else 0.0,
+        goodput_ops_per_sec=good / window_s if window_s > 0 else 0.0,
+        completed_ops_per_sec=(len(in_window) / window_s
+                               if window_s > 0 else 0.0),
+        slo_us=slo_us,
+        p50_us=_percentile(lats, 0.50),
+        p99_us=_percentile(lats, 0.99),
+        p999_us=_percentile(lats, 0.999),
+        fast_fraction=driver.fast_completions / max(
+            1, driver.fast_completions + driver.rtt2_completions),
+        client_stats=dict(driver.stats),
+        breaker_stats=breaker_stats,
+        armor_stats=armor_stats,
+        witness_sheds=witness_sheds,
+        max_qdepth=max_qdepth,
+        recoveries=recoveries,
+        failovers=list(coord.failovers) if coord else [],
+        migrations=migrations,
+        history=driver.history,
+        sim_time_us=sim.now,
     )
 
 

@@ -32,7 +32,7 @@ ratios and RTT counts (see DESIGN.md §5).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Dict, Optional
 
 
 @dataclass
@@ -79,6 +79,29 @@ class SimParams:
     fsync_us: float = 75.0               # NVMe fsync 50–100 µs (paper §5.4)
     redis_op_cost_us: float = 2.5        # syscall-heavy TCP path per RPC
 
+    # --- open-loop client retry (capped exponential backoff + jitter) ---------
+    ol_backoff_base_us: float = 200.0    # first retry delay
+    ol_backoff_cap_us: float = 8000.0    # exponential backoff ceiling
+    ol_backoff_jitter: float = 0.3       # +/- fractional jitter on each delay
+    ol_max_attempts: int = 10            # give up (op becomes a "maybe")
+    ol_shed_backoff_us: float = 400.0    # extra pause after an explicit shed
+
+    # --- traffic armor (core.overload; see ArmorConfig) ------------------------
+    admit_queue_depth: int = 64          # master admission bound
+    admit_queue_depth_witness: int = 128
+    throttle_rate_ops_per_us: float = 0.0   # per-client token rate (0 = off)
+    throttle_burst: float = 8.0
+    degrade_hi_frac: float = 0.75        # enter DEFER_SLOW at this fill
+    degrade_lo_frac: float = 0.40        # leave it below this fill
+    breaker_failures: int = 5            # consecutive failures to trip OPEN
+    breaker_reset_us: float = 3000.0     # OPEN -> HALF_OPEN cooldown
+    breaker_probes: int = 1              # concurrent HALF_OPEN trials
+
+    # --- heartbeat failure detection (ConfigManager-side, §3.6-fenced) ---------
+    heartbeat_interval_us: float = 100.0
+    heartbeat_miss_threshold: int = 5    # intervals silent before suspect
+    heartbeat_service_us: float = 0.05   # coordinator cost per beat
+
     # --- failure handling -------------------------------------------------------
     crash_detect_us: float = 500.0
     restore_per_entry_us: float = 0.1    # backup log replay during recovery
@@ -88,6 +111,11 @@ class SimParams:
     sync_batch: int = 50                 # §4.4 (max ops between syncs)
     witness_sets: int = 1024
     witness_ways: int = 4                # §B.1: 4096 slots, 4-way
+    # Per-class way budget: max ways of one set a single mergeable
+    # (key_hash, class) stack may occupy, so a hot INCR storm cannot
+    # monopolize a set and starve conflicting classes (None = no cap,
+    # the paper's behavior).
+    witness_class_budget: Optional[int] = None
     hot_key_window_us: float = 0.0       # §4.4 heuristic (off by default)
 
 

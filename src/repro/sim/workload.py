@@ -54,6 +54,96 @@ class ZipfianGenerator:
 
 
 @dataclass
+class OpenLoopWorkload:
+    """Open-loop arrival process for the production-armor storms.
+
+    Unlike the closed-loop workloads (one outstanding op per client, arrival
+    rate throttled by completions), this models a POPULATION of
+    ``n_clients`` independent clients whose aggregate arrivals form a
+    nonhomogeneous Poisson process: arrivals keep coming at ``rate_at(t)``
+    whether or not earlier ops completed — the regime where overload
+    actually happens.  The driver (repro.sim.curp_sim.OpenLoopDriver)
+    materializes per-client RIFL sessions lazily, so 10^5–10^6 client ids
+    cost memory only for clients that actually issued an op.
+
+    Shape knobs:
+      * ``rate_ops_per_us`` — base λ of the Poisson process.
+      * ``diurnal_amplitude``/``diurnal_period_us`` — sinusoidal rate ramp
+        (λ(t) = λ·(1 + A·sin(2πt/T))), the slow daily swell.
+      * ``flash_crowds`` — ((t_start, duration, multiplier), ...): rate
+        multiplied during the window, the sudden-hotspot case.
+      * heavy-tailed op mix: zipfian keys (``theta``) and Pareto-tailed
+        value sizes (``value_alpha``; most writes small, rare huge ones).
+      * ``read_fraction``/``incr_fraction`` — op-type mix (the INCR share
+        exercises the merge-lattice fast path under skew).
+      * ``hot_client_frac`` — fraction of arrivals issued by client 0 (the
+        misbehaving-tenant case per-client throttling exists for).
+    """
+    rate_ops_per_us: float
+    n_clients: int = 100_000
+    read_fraction: float = 0.0
+    incr_fraction: float = 0.0
+    n_items: int = 100_000
+    theta: float = 0.99
+    value_alpha: float = 1.5
+    value_min: int = 16
+    value_cap: int = 1024
+    diurnal_amplitude: float = 0.0
+    diurnal_period_us: float = 50_000.0
+    flash_crowds: tuple = ()
+    hot_client_frac: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        self.zipf = ZipfianGenerator(self.n_items, self.theta, self.seed)
+        self.rng = random.Random(self.seed + 17)
+        self._max_rate = self.rate_ops_per_us * (1 + self.diurnal_amplitude)
+        for _t0, _dur, mult in self.flash_crowds:
+            self._max_rate = max(self._max_rate, self.rate_ops_per_us * mult)
+
+    # -- arrival process ----------------------------------------------------
+    def rate_at(self, t: float) -> float:
+        r = self.rate_ops_per_us
+        if self.diurnal_amplitude > 0:
+            r *= 1.0 + self.diurnal_amplitude * math.sin(
+                2 * math.pi * t / self.diurnal_period_us
+            )
+        for t0, dur, mult in self.flash_crowds:
+            if t0 <= t < t0 + dur:
+                r *= mult
+        return max(r, 1e-9)
+
+    def next_interarrival(self, t: float) -> float:
+        """Thinning (Lewis–Shedler): exact for the piecewise rate function —
+        sample candidate arrivals at the peak rate, accept with
+        rate(t)/peak.  Returns the gap to the next ACCEPTED arrival."""
+        gap = 0.0
+        while True:
+            gap += self.rng.expovariate(self._max_rate)
+            if self.rng.random() * self._max_rate <= self.rate_at(t + gap):
+                return gap
+
+    # -- per-arrival op shape ----------------------------------------------
+    def next_client(self) -> int:
+        if self.hot_client_frac > 0 and self.rng.random() < self.hot_client_frac:
+            return 0
+        return self.rng.randrange(self.n_clients)
+
+    def _value(self) -> str:
+        size = int(self.value_min * self.rng.paretovariate(self.value_alpha))
+        return "x" * min(size, self.value_cap)
+
+    def make_op(self, session: ClientSession) -> Op:
+        key = self.zipf.next_key()
+        u = self.rng.random()
+        if u < self.read_fraction:
+            return session.op_get(key)
+        if u < self.read_fraction + self.incr_fraction:
+            return session.op_incr(key, 1)
+        return session.op_set(key, self._value())
+
+
+@dataclass
 class YcsbWorkload:
     """op_factory for run_scenario: mixed reads/updates over a zipfian keyspace."""
     read_fraction: float

@@ -153,6 +153,14 @@ class TestSlotHandover:
         c, cl, _ = self._seeded()
         op = cl.op_incr("counter")
         assert c.update(cl, op).value == 1
+        # Model the lost-response retry RIFL actually permits: the client
+        # never saw the first result, so its piggybacked ack frontier must
+        # still sit AT the op's seq (an acked op is by contract never
+        # retried, and ack-driven gc is free to forget its moved completion
+        # record).  Rewind the completion state the harness advanced when it
+        # delivered the response the "client" supposedly lost.
+        cl._ids.first_incomplete = min(cl._ids.first_incomplete, op.rpc_id[1])
+        cl._ids._completed.discard(op.rpc_id[1])
         slot = c.slot_of("counter")
         src = c.shard_of("counter")
         dst = 1 - src
@@ -164,6 +172,14 @@ class TestSlotHandover:
         assert c.shards[dst].master.stats["dups"] == dups_before + 1
         assert len(c.shards[dst].master.log) == log_before
         assert c.read(cl, cl.op_get("counter")).value == 1
+        # The retry completed and acked; the next op to reach THIS master
+        # piggybacks the advanced frontier, which gc's the moved record
+        # (the ack-driven overlay truncation).
+        k_dst = next(f"after{i}" for i in range(10_000)
+                     if c.shard_of(f"after{i}") == dst)
+        assert c.update(cl, cl.op_set(k_dst, "1")).value is not None
+        assert c.shards[dst].master.migrated_rifl == {}
+        assert c.shards[dst].master.stats["migrated_rifl_gcd"] >= 1
         ok, key = check_linearizable_strict(c.history)
         assert ok, f"violation on {key}"
 

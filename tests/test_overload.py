@@ -1,0 +1,279 @@
+"""Production traffic armor: overload policy units (core.overload), the
+heartbeat failure detector, migrated-RIFL ack gc, witness per-class budgets,
+and open-loop storm scenarios through the linearizability checkers."""
+from repro.core.client import ClientSession
+from repro.core.config import HeartbeatDetector
+from repro.core.master import DUP, Master
+from repro.core.overload import (
+    AdmissionQueue,
+    ArmorConfig,
+    BreakerState,
+    CircuitBreaker,
+    DegradeLevel,
+    TokenBucket,
+    degrade_level,
+)
+from repro.core.types import Op, OpType, keyhash
+from repro.core.witness import RecordStatus, Witness
+from repro.sim import (
+    OpenLoopWorkload,
+    SimParams,
+    check_linearizable,
+    check_linearizable_strict,
+    run_openloop_scenario,
+)
+
+
+# ---------------------------------------------------------------------------
+# policy units
+# ---------------------------------------------------------------------------
+class TestAdmissionQueue:
+    def test_bound_and_shed_accounting(self):
+        q = AdmissionQueue(2)
+        assert q.admit() and q.admit()
+        assert not q.admit()            # full -> shed
+        assert q.shed == 1 and q.admitted == 2 and q.frac() == 1.0
+        q.release()
+        assert q.admit()                # slot freed
+        assert q.max_depth == 2
+
+
+class TestTokenBucket:
+    def test_rate_and_burst(self):
+        b = TokenBucket(rate=1.0, burst=2.0, now=0.0)   # 1 token/us
+        assert b.allow(0.0) and b.allow(0.0)            # burst
+        assert not b.allow(0.0)                         # drained
+        assert b.allow(1.0)                             # refilled 1 token
+        assert not b.allow(1.0)
+
+
+class TestCircuitBreaker:
+    def test_trip_half_open_reopen_close_cycle(self):
+        br = CircuitBreaker(failure_threshold=3, reset_timeout=100.0,
+                            half_open_probes=1)
+        for _ in range(3):
+            br.record_failure(now=0.0)
+        assert br.state is BreakerState.OPEN
+        assert not br.allow(50.0)                  # cooling down: fast fail
+        assert br.allow(150.0)                     # HALF_OPEN probe admitted
+        assert not br.allow(150.0)                 # probe budget spent
+        br.record_failure(now=150.0)               # probe failed: re-OPEN
+        assert br.state is BreakerState.OPEN
+        assert br.allow(260.0)                     # second probe window
+        br.record_success()
+        assert br.state is BreakerState.CLOSED
+        assert br.allow(260.0)
+        assert br.stats["trips"] == 2 and br.stats["closes"] == 1
+
+    def test_consecutive_not_total_failures(self):
+        br = CircuitBreaker(failure_threshold=3)
+        br.record_failure(0.0)
+        br.record_failure(0.0)
+        br.record_success()                        # resets the streak
+        br.record_failure(0.0)
+        br.record_failure(0.0)
+        assert br.state is BreakerState.CLOSED
+
+
+class TestDegradeHysteresis:
+    def test_enter_high_leave_low(self):
+        lvl = DegradeLevel.NORMAL
+        lvl = degrade_level(0.5, lvl, hi=0.75, lo=0.40)
+        assert lvl is DegradeLevel.NORMAL
+        lvl = degrade_level(0.8, lvl, hi=0.75, lo=0.40)
+        assert lvl is DegradeLevel.DEFER_SLOW
+        lvl = degrade_level(0.5, lvl, hi=0.75, lo=0.40)   # between lo and hi
+        assert lvl is DegradeLevel.DEFER_SLOW             # no flap
+        lvl = degrade_level(0.3, lvl, hi=0.75, lo=0.40)
+        assert lvl is DegradeLevel.NORMAL
+
+
+class TestHeartbeatDetector:
+    def test_suspect_after_silent_intervals_once(self):
+        d = HeartbeatDetector(interval=100.0, miss_threshold=5)
+        d.watch(0, 0.0)
+        d.beat(0, 250.0)
+        assert d.check(700.0) == []           # deadline is 250 + 500
+        assert d.check(800.0) == [0]
+        assert d.suspected(0)
+        assert d.check(900.0) == []           # reported exactly once
+        d.beat(0, 950.0)                      # zombie beats are ignored
+        assert d.suspected(0)
+        d.watch(0, 1000.0)                    # failover done: re-arm
+        assert not d.suspected(0)
+        assert d.check(1400.0) == []
+        assert d.check(1500.0) == [0]
+
+
+# ---------------------------------------------------------------------------
+# migrated-RIFL ack-driven gc (satellite regression)
+# ---------------------------------------------------------------------------
+class TestMigratedRiflGc:
+    def _master_with_overlay(self):
+        m = Master(1, epoch=0, sync_batch=50)
+        kh = (keyhash("a"),)
+        m.migrated_rifl[((7, 1), kh)] = "r1"
+        m.migrated_rifl[((7, 5), kh)] = "r5"
+        m.migrated_rifl[((8, 2), kh)] = "x2"
+        return m, kh
+
+    def test_ack_frontier_prunes_only_below(self):
+        m, kh = self._master_with_overlay()
+        s = ClientSession(client_id=9)
+        m.handle_update(s.op_set("zz", "v"), m.witness_list_version,
+                        client_acks=((7, 4),), now=0.0)
+        # seq 1 < frontier 4: the client can never retry it -> dropped;
+        # seq 5 and the other client's record must survive.
+        assert ((7, 1), kh) not in m.migrated_rifl
+        assert ((7, 5), kh) in m.migrated_rifl
+        assert ((8, 2), kh) in m.migrated_rifl
+        assert m.stats["migrated_rifl_gcd"] == 1
+
+    def test_surviving_record_still_dedups(self):
+        m, kh = self._master_with_overlay()
+        s = ClientSession(client_id=9)
+        m.handle_update(s.op_set("zz", "v"), m.witness_list_version,
+                        client_acks=((7, 4),), now=0.0)
+        retry = Op(OpType.SET, ("a",), ("v",), (7, 5))
+        verdict, result = m.handle_update(retry, m.witness_list_version,
+                                          now=1.0)
+        assert verdict == DUP and result.value == "r5"
+
+    def test_install_skips_below_acked_frontier(self):
+        m, kh = self._master_with_overlay()
+        s = ClientSession(client_id=9)
+        m.handle_update(s.op_set("zz", "v"), m.witness_list_version,
+                        client_acks=((7, 4),), now=0.0)
+        # A later (chained) migration tries to re-install seq 2 and seq 4:
+        # 2 is below the acked frontier and must NOT be resurrected; 4 is
+        # the first incomplete seq and must land.
+        mig = Op(OpType.MIGRATE_IN, (), ((), (((7, 2), kh, "r2"),
+                                              ((7, 4), kh, "r4"))), (1, 99))
+        m._install_migrated(mig)
+        assert ((7, 2), kh) not in m.migrated_rifl
+        assert ((7, 4), kh) in m.migrated_rifl
+
+
+# ---------------------------------------------------------------------------
+# witness per-class way budget (satellite)
+# ---------------------------------------------------------------------------
+class TestWitnessClassBudget:
+    def _incrs(self, n, key="hot"):
+        s = ClientSession(client_id=3)
+        return [s.op_incr(key) for _ in range(n)]
+
+    def test_budget_caps_merge_stack_but_not_other_classes(self):
+        # One set, 4 ways, budget 3: the INCR storm may hold at most 3 ways,
+        # so a SET on another key still finds a seat in the same set.
+        w = Witness(n_sets=1, n_ways=4, class_budget=3)
+        w.start(1)
+        sts = [w.record(1, op.key_hashes(), op.rpc_id, op)
+               for op in self._incrs(4)]
+        assert sts[:3] == [RecordStatus.ACCEPTED] * 3
+        assert sts[3] is RecordStatus.REJECTED
+        assert w.stats["rejects_budget"] == 1
+        other = ClientSession(client_id=4).op_set("cold", "v")
+        assert w.record(1, other.key_hashes(), other.rpc_id, other) \
+            is RecordStatus.ACCEPTED
+
+    def test_without_budget_storm_starves_the_set(self):
+        # Paper behavior (default): 4 INCRs fill all 4 ways; the SET rejects
+        # as full and must take the 2-RTT sync path.
+        w = Witness(n_sets=1, n_ways=4)
+        w.start(1)
+        for op in self._incrs(4):
+            assert w.record(1, op.key_hashes(), op.rpc_id, op) \
+                is RecordStatus.ACCEPTED
+        other = ClientSession(client_id=4).op_set("cold", "v")
+        assert w.record(1, other.key_hashes(), other.rpc_id, other) \
+            is RecordStatus.REJECTED
+        assert w.stats["rejects_full"] == 1
+        assert w.stats["rejects_budget"] == 0
+
+    def test_duplicate_record_rpc_not_budget_rejected(self):
+        # A client retry of an already-held record is an idempotent accept
+        # even when the stack is at budget.
+        w = Witness(n_sets=1, n_ways=4, class_budget=3)
+        w.start(1)
+        ops = self._incrs(3)
+        for op in ops:
+            w.record(1, op.key_hashes(), op.rpc_id, op)
+        assert w.record(1, ops[0].key_hashes(), ops[0].rpc_id, ops[0]) \
+            is RecordStatus.ACCEPTED
+
+
+# ---------------------------------------------------------------------------
+# open-loop storms through the checkers
+# ---------------------------------------------------------------------------
+class TestOpenLoopStorms:
+    def test_overload_bounded_queue_vs_naked(self):
+        wl = dict(rate_ops_per_us=1.5, n_clients=2000)
+        naked = run_openloop_scenario(
+            workload=OpenLoopWorkload(seed=2, **wl), duration_us=3000.0,
+            f=1, armor=None, seed=2)
+        armored = run_openloop_scenario(
+            workload=OpenLoopWorkload(seed=2, **wl), duration_us=3000.0,
+            f=1, armor=ArmorConfig(queue_capacity=16), seed=2)
+        assert armored.max_qdepth <= 16
+        assert naked.max_qdepth > 160           # unbounded growth
+        assert armored.client_stats["sheds_seen"] > 0
+        assert armored.witness_sheds >= 0       # witness bound wired in
+
+    def test_drops_and_duplicate_delivery_strict(self):
+        # Lossy, jittery transport: dropped MUpdate/MRecordResp force
+        # timeouts; the retry re-delivers to a master that may have already
+        # executed (RIFL dedups).  The STRICT checker must still pass.
+        p = SimParams(drop_prob=0.03, delay_jitter_sigma=0.4, tail_prob=0.05)
+        r = run_openloop_scenario(
+            workload=OpenLoopWorkload(rate_ops_per_us=0.04, n_clients=5,
+                                      n_items=8, seed=7),
+            duration_us=8000.0, f=1, armor=True, params=p, seed=7,
+            record_history=True)
+        assert r.client_stats["timeouts"] > 0   # duplicates actually flew
+        ok, key = check_linearizable_strict(r.history)
+        assert ok, f"violation on {key}"
+
+    def test_heartbeat_failover_with_inflight_ops_strict(self):
+        # Silent master kill, NO harness recovery: the coordinator's
+        # detector must drive failover, acked writes survive, and the
+        # strict checker passes over the full storm.
+        r = run_openloop_scenario(
+            workload=OpenLoopWorkload(rate_ops_per_us=0.05, n_clients=6,
+                                      n_items=8, seed=5),
+            duration_us=8000.0, f=1, armor=True, seed=5, heartbeat=True,
+            fail_master_at={0: 3000.0}, record_history=True)
+        assert r.failovers and r.failovers[0]["shard"] == 0
+        assert all(rep["detected_by"] == "heartbeat"
+                   for rep in r.recoveries.values())
+        rec_at = max(rep["recovered_at"] for rep in r.recoveries.values())
+        assert any(h["complete"] is not None and h["complete"] > rec_at
+                   for h in r.history)          # service resumed
+        ok, key = check_linearizable_strict(r.history)
+        assert ok, f"violation on {key}"
+
+    def test_migration_storm_cached_map_strict(self):
+        # Live slot handovers under open-loop traffic: cached slot maps go
+        # stale, NOT_OWNER redirects force the §3.6 refetch, and nothing is
+        # lost or duplicated across the handover.
+        r = run_openloop_scenario(
+            workload=OpenLoopWorkload(rate_ops_per_us=0.04, n_clients=5,
+                                      n_items=10, seed=19),
+            duration_us=6000.0, f=1, n_shards=2,
+            armor=ArmorConfig(queue_capacity=16), seed=19,
+            migrate_slots=[(2000.0, 0, 1), (3000.0, 2, 1)],
+            record_history=True)
+        assert len(r.migrations) == 2
+        ok, key = check_linearizable_strict(r.history)
+        assert ok, f"violation on {key}"
+
+    def test_per_key_checker_on_bigger_mixed_run(self):
+        # theta 0.6 keeps the hottest key's concurrent window small enough
+        # for the per-key checker's search to stay fast across the crash.
+        r = run_openloop_scenario(
+            workload=OpenLoopWorkload(rate_ops_per_us=0.2, n_clients=300,
+                                      n_items=500, read_fraction=0.3,
+                                      theta=0.6, seed=23),
+            duration_us=4000.0, f=1, armor=True, seed=23,
+            heartbeat=True, fail_master_at={0: 1500.0}, record_history=True)
+        ok, key = check_linearizable(r.history)
+        assert ok, f"violation on {key}"
