@@ -1,0 +1,220 @@
+"""Flight-recorder figure: where does tail latency go, and what does
+watching cost?
+
+Two halves, both asserted:
+
+1. **Stage attribution** — re-run the three fig_slo storms (overload ramp,
+   silent-crash failover, migration burst) with a full-sampling ``Tracer``
+   attached to the sim and the metrics registry reset per storm.  Every
+   storm must emit a Perfetto-loadable Chrome-trace JSON
+   (``benchmarks/out/trace_<storm>.json``) with zero leaked (unclosed)
+   spans and fully-resolvable parent ids, plus a registry snapshot.  The
+   report body is ``stage_attribution``: per-stage µs attributed to the
+   p99 tail cohort vs the full population, so "p99 is queueing, not
+   witness work" is a number, not a guess.
+
+2. **Overhead** — the whole point of keeping telemetry on by default is
+   that it is nearly free.  Measure the wall-clock device fast path
+   (``run_batched_throughput``, the fig_fastpath ``proto_device_kops``
+   quantity) in three modes — registry disabled, registry on, registry on
+   + tracing at 5% sampling — best-of-N interleaved, and assert the
+   registry-only and sampled-tracing modes keep >=95% of the disabled
+   throughput (<5% overhead).  Smoke mode keeps the assertion but loosens
+   the bar: single short reps on a shared CI box measure noise, not cost.
+
+All simulated latencies are µs; the overhead half is real wall clock.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.core import telemetry
+from repro.core.overload import ArmorConfig
+from repro.core.telemetry import Tracer, stage_attribution
+from repro.sim import (
+    OpenLoopWorkload,
+    run_batched_throughput,
+    run_openloop_scenario,
+)
+
+from .common import emit
+
+OUT_DIR = pathlib.Path(__file__).resolve().parent / "out"
+ARMOR = ArmorConfig(queue_capacity=16)
+SLO_US = 200.0
+
+
+# ---------------------------------------------------------------------------
+# 1. storm traces + stage attribution
+# ---------------------------------------------------------------------------
+def _storm_configs(smoke: bool):
+    """The fig_slo storms, armored variants only (the traced production
+    configuration; the naked baseline has nothing to attribute)."""
+    dur_o = 4_000.0 if smoke else 10_000.0
+    dur_c = 6_000.0 if smoke else 12_000.0
+    dur_m = 6_000.0 if smoke else 12_000.0
+    return {
+        "overload": dict(
+            workload=OpenLoopWorkload(
+                rate_ops_per_us=1.5, n_clients=200_000,
+                diurnal_amplitude=0.25, diurnal_period_us=dur_o,
+                flash_crowds=((0.45 * dur_o, 0.55 * dur_o, 3.0),), seed=11,
+            ),
+            duration_us=dur_o, f=1, armor=ARMOR, seed=11, slo_us=SLO_US,
+        ),
+        "crash": dict(
+            workload=OpenLoopWorkload(rate_ops_per_us=0.2, n_clients=50_000,
+                                      seed=13),
+            duration_us=dur_c, f=1, armor=ARMOR, seed=13, slo_us=SLO_US,
+            heartbeat=True, fail_master_at={0: 0.4 * dur_c},
+        ),
+        "migration": dict(
+            workload=OpenLoopWorkload(rate_ops_per_us=0.4, n_clients=50_000,
+                                      seed=17),
+            duration_us=dur_m, f=1, n_shards=2, armor=ARMOR, seed=17,
+            migrate_slots=[(0.3 * dur_m + 200.0 * i, 2 * i, (2 * i + 1) % 2)
+                           for i in range(6)],
+            slo_us=SLO_US,
+        ),
+    }
+
+
+def _check_trace(tracer: Tracer, storm: str) -> None:
+    """Well-formedness: no leaked spans, every parent id resolves."""
+    leaked = tracer.open_spans()
+    assert not leaked, (
+        f"{storm}: {len(leaked)} spans leaked unclosed "
+        f"(first: {leaked[0].name})")
+    ids = {s.span_id for s in tracer.spans}
+    for s in tracer.spans:
+        assert s.parent is None or s.parent in ids, \
+            f"{storm}: span {s.span_id} ({s.name}) has dangling parent"
+
+
+def storm_traces(smoke: bool = False) -> dict:
+    OUT_DIR.mkdir(exist_ok=True)
+    rows, derived = [], {}
+    for storm, cfg in _storm_configs(smoke).items():
+        telemetry.reset_registry()
+        tracer = Tracer(sample=1.0)
+        r = run_openloop_scenario(tracer=tracer, **cfg)
+        _check_trace(tracer, storm)
+
+        path = OUT_DIR / f"trace_{storm}.json"
+        tracer.export_chrome(str(path))
+        # Round-trip: the artifact a human loads into Perfetto must parse.
+        doc = json.loads(path.read_text())
+        assert doc["traceEvents"], f"{storm}: empty trace export"
+
+        att = stage_attribution(tracer, tail_q=0.99)
+        snap = telemetry.registry().snapshot()
+        rows.append(({
+            "storm": storm,
+            "ops": att["n_ops"],
+            "p99_us": att["p99_us"],
+            "spans": len(tracer.spans),
+            "events": len(doc["traceEvents"]),
+        }, att["stages_tail"]))
+        derived[f"{storm}_p99_us"] = att["p99_us"]
+        derived[f"{storm}_spans"] = len(tracer.spans)
+        # Tail attribution: which stage dominates the p99 cohort.
+        if att["stages_tail"]:
+            top = max(att["stages_tail"].items(), key=lambda kv: kv[1])
+            derived[f"{storm}_tail_stage"] = top[0]
+            derived[f"{storm}_tail_stage_us"] = top[1]
+        derived[f"{storm}_snapshot"] = snap
+        # Every storm must exercise the full pipeline: client root spans
+        # plus witness + master child stages.
+        names = {s.name for s in tracer.spans}
+        assert {"op", "witness_record", "master_update"} <= names, \
+            f"{storm}: missing pipeline stages (saw {sorted(names)})"
+    # Normalize stage columns across storms (emit assumes uniform keys).
+    stage_names = sorted({k for _fixed, st in rows for k in st})
+    emit([{**fixed, **{f"tail_{k}_us": st.get(k, 0.0) for k in stage_names}}
+          for fixed, st in rows],
+         "fig_obs: p99 attribution by stage (tail cohort, us)")
+    return derived
+
+
+# ---------------------------------------------------------------------------
+# 2. telemetry overhead on the device fast path
+# ---------------------------------------------------------------------------
+def _device_kops(tracer=None) -> float:
+    from repro.core import WitnessGeometry
+
+    r = run_batched_throughput(
+        n_shards=2, batch_size=64, n_batches=4, witness_backend="device",
+        geometry=WitnessGeometry(1024, 4), tracer=tracer,
+    )
+    return r.ops_per_sec / 1e3
+
+
+def overhead(smoke: bool = False) -> dict:
+    reps = 2 if smoke else 4
+    modes = {"off": None, "registry": None, "traced": None}
+    best = {m: 0.0 for m in modes}
+    # Interleave reps across modes so drift (thermal, noisy neighbours)
+    # hits all three alike; keep best-of-N per mode (canonical wall-clock
+    # discipline: minimum is the least-noise estimate of the true cost).
+    for _ in range(reps):
+        for mode in modes:
+            if mode == "off":
+                telemetry.disable()
+                kops = _device_kops()
+                telemetry.enable()
+            elif mode == "registry":
+                kops = _device_kops()
+            else:
+                kops = _device_kops(tracer=Tracer(sample=0.05))
+            best[mode] = max(best[mode], kops)
+    reg_ratio = best["registry"] / max(best["off"], 1e-9)
+    trc_ratio = best["traced"] / max(best["off"], 1e-9)
+    emit([{"mode": m, "best_kops": v,
+           "vs_off": v / max(best["off"], 1e-9)} for m, v in best.items()],
+         "fig_obs: telemetry overhead on device fast path (wall clock)")
+    # <5% overhead budget.  Smoke runs 2 short reps on shared CI — the
+    # spread there is scheduler noise, so only a gross regression fails.
+    floor = 0.70 if smoke else 0.95
+    assert reg_ratio >= floor, (
+        f"registry overhead too high: {best['registry']:.1f} vs "
+        f"{best['off']:.1f} kops ({(1 - reg_ratio) * 100:.1f}%)")
+    assert trc_ratio >= floor, (
+        f"sampled tracing overhead too high: {best['traced']:.1f} vs "
+        f"{best['off']:.1f} kops ({(1 - trc_ratio) * 100:.1f}%)")
+    return {
+        "off_kops": best["off"],
+        "registry_kops": best["registry"],
+        "traced_kops": best["traced"],
+        "registry_ratio": reg_ratio,
+        "traced_ratio": trc_ratio,
+    }
+
+
+def main(smoke: bool = False) -> dict:
+    storms = storm_traces(smoke=smoke)
+    ovh = overhead(smoke=smoke)
+    derived = {**ovh}
+    for k, v in storms.items():
+        if k.endswith("_snapshot"):
+            continue  # full snapshots are too wide for the CSV line
+        derived[k] = v
+    # Registry snapshots ride along in BENCH_curp.json under one key so the
+    # counters (sheds, breaker trips, dup hits, reason codes...) are
+    # machine-diffable across PRs without polluting the summary CSV.
+    derived["snapshots"] = {
+        k[: -len("_snapshot")]: v
+        for k, v in storms.items() if k.endswith("_snapshot")
+    }
+    print("derived:", {k: v for k, v in derived.items() if k != "snapshots"})
+    return derived
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short storms + loose overhead bar (assertions "
+                         "still run; not a measurement)")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

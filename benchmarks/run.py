@@ -43,6 +43,14 @@ def write_bench_json(results, path: pathlib.Path = BENCH_JSON) -> None:
             prior_time = prior.get("unix_time")
         except (json.JSONDecodeError, OSError):
             figures = {}
+    # Backfill: entries written before per-figure stamping landed carry no
+    # unix_time, so the staleness guard below can never fire for them.
+    # Stamp them with the file-level time (the best known lower bound on
+    # when they last ran) so every preserved entry is staleness-checkable.
+    for entry in figures.values():
+        if "unix_time" not in entry:
+            entry["unix_time"] = prior_time if prior_time is not None \
+                else time.time()
     # Perf trajectory: for every numeric metric that already had a recorded
     # value, keep the previous number next to the new one so a driver can
     # read deltas (e.g. fig_fastpath proto_device_kops across PRs) without
@@ -109,6 +117,7 @@ def main() -> None:
         fig_crdt,
         fig_fastpath,
         fig_migration,
+        fig_obs,
         fig_scaling,
         fig_slo,
         fig_txn,
@@ -129,6 +138,7 @@ def main() -> None:
         ("fig_migration", fig_migration.main),
         ("fig_crdt", fig_crdt.main),
         ("fig_slo", fig_slo.main),
+        ("fig_obs", fig_obs.main),
         ("roofline_table", roofline_table.main),
     ]
     results = []

@@ -20,9 +20,13 @@
 # matrix/scalar and record-kernel/oracle bit-exact parity checks, and the
 # merge-aware strict-linearizability assertion on every scenario; fig_slo
 # keeps its armor assertions — bounded admission queue, >=5x goodput over
-# the naked 2x-overload baseline, heartbeat-detected failover with zero
-# lost acked writes, and strict-checked migration/crash storm companions),
-# not the measured numbers.
+# the naked 2x-overload baseline, AIMD adaptive bound not regressing the
+# static one, heartbeat-detected failover with zero lost acked writes, and
+# strict-checked migration/crash storm companions; fig_obs keeps the flight
+# recorder honest — every storm exports a Perfetto-loadable trace with zero
+# leaked spans and resolvable parents, and registry/sampled-tracing
+# overhead on the device fast path stays bounded), not the measured
+# numbers.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -34,4 +38,12 @@ python -m benchmarks.fig_txn --smoke
 python -m benchmarks.fig_migration --smoke
 python -m benchmarks.fig_crdt --smoke
 python -m benchmarks.fig_slo --smoke
+python -m benchmarks.fig_obs --smoke
+
+# Observability discipline: production layers report through the metrics
+# registry / tracer, never bare print() (benchmarks and scripts may print).
+if grep -rnE '^[[:space:]]*print\(' src/repro/core src/repro/sim; then
+    echo "check.sh: bare print() in src/repro/{core,sim} — use telemetry" >&2
+    exit 1
+fi
 echo "check.sh: all green"

@@ -25,6 +25,7 @@ from .local import LocalCluster, OpOutcome
 from .master import DUP, ERROR, FAST, SYNCED, Master
 from .overload import (
     AdmissionQueue,
+    AimdBound,
     ArmorConfig,
     BreakerState,
     CircuitBreaker,
@@ -81,7 +82,8 @@ __all__ = [
     "Backup", "LogEntry", "ClientSession", "Decision", "decide",
     "decide_multi", "decide_commit", "combine_decisions",
     "ConfigManager", "HeartbeatDetector", "WitnessGeometry", "DeviceWitness",
-    "AdmissionQueue", "ArmorConfig", "BreakerState", "CircuitBreaker",
+    "AdmissionQueue", "AimdBound", "ArmorConfig", "BreakerState",
+    "CircuitBreaker",
     "ClientThrottle", "DegradeLevel", "TokenBucket", "degrade_level",
     "ConsensusCluster", "replay_threshold", "superquorum",
     "LocalCluster", "OpOutcome", "Master", "FAST", "SYNCED", "DUP", "ERROR",

@@ -55,6 +55,13 @@ _R_DUP = 2
 _R_CONFLICT = 3
 _R_FULL = 4
 
+_REASON_STAT = {
+    _R_INSERT: "reason_insert",
+    _R_DUP: "reason_dup",
+    _R_CONFLICT: "reason_conflict",
+    _R_FULL: "reason_full",
+}
+
 
 @dataclass
 class _Held:
@@ -98,15 +105,38 @@ class WitnessGang:
 
     def __init__(self, n_sets: int = 1024, n_ways: int = 4,
                  n_lanes: int = 4) -> None:
-        from repro.kernels import GangTable   # deferred: keeps jax import lazy
+        import jax.numpy as jnp
+
+        from repro.kernels import (  # deferred: keeps jax import lazy
+            N_REASON_CODES,
+            GangTable,
+        )
 
         assert n_lanes & (n_lanes - 1) == 0, "n_lanes must be a power of two"
         self.n_sets = n_sets
         self.n_ways = n_ways
         self.n_lanes = n_lanes
         self.table = GangTable.empty(n_sets, n_ways, n_lanes)
+        # In-dispatch telemetry plane: [n_lanes, 5] reason-code counters the
+        # record kernels scatter-accumulate into (flight recorder).  Drained
+        # and zeroed host-side by ``drain_counters``.
+        self.counters = jnp.zeros((n_lanes, N_REASON_CODES), jnp.int32)
         self._free = list(range(n_lanes - 1, -1, -1))
         self._dirty: set = set()
+
+    def drain_counters(self) -> np.ndarray:
+        """Materialize the per-lane reason-code counters and zero the plane.
+
+        Returns an [n_lanes, 5] int32 numpy array (columns indexed by the
+        kernel reason codes; column 0 is unused).  Bit-exact with the host
+        ``DeviceWitness.stats["reason_*"]`` accounting over the same drain
+        interval — tests assert the parity.
+        """
+        import jax.numpy as jnp
+
+        out = np.asarray(self.counters)
+        self.counters = jnp.zeros_like(self.counters)
+        return out
 
     def alloc(self) -> int:
         if not self._free:
@@ -132,6 +162,9 @@ class WitnessGang:
         self.table = GangTable(*(
             jnp.asarray(np.pad(np.asarray(a), pad)) for a in self.table
         ))
+        self.counters = jnp.asarray(
+            np.pad(np.asarray(self.counters), ((0, old), (0, 0)))
+        )
         self._free.extend(range(self.n_lanes - 1, old - 1, -1))
 
     def _zero(self, lane: int) -> None:
@@ -147,6 +180,11 @@ class WitnessGang:
         self.table = self.table._replace(
             occ=jnp.asarray(occ), age=jnp.asarray(age)
         )
+        # A recycled lane starts its telemetry from zero too, so per-lane
+        # counters always describe the CURRENT tenant.
+        cnt = np.asarray(self.counters).copy()
+        cnt[lane] = 0
+        self.counters = jnp.asarray(cnt)
 
 
 class DeviceWitness:
@@ -168,7 +206,14 @@ class DeviceWitness:
         # records of one key coexist (one device slot each, one rpc each).
         self._held: Dict[Tuple[int, int], Dict[RpcId, _Held]] = {}
         self.stats = {"accepts": 0, "rejects_conflict": 0, "rejects_full": 0,
-                      "rejects_mode": 0, "gc_drops": 0, "kernel_batches": 0}
+                      "rejects_mode": 0, "gc_drops": 0, "kernel_batches": 0,
+                      # Host-side mirror of the device reason-counter plane
+                      # (same granularity as the kernel's accumulation: one
+                      # count per settled outcome).  Parity-asserted against
+                      # ``WitnessGang.drain_counters`` by the telemetry
+                      # tests.
+                      "reason_insert": 0, "reason_dup": 0,
+                      "reason_conflict": 0, "reason_full": 0}
 
     # -- lifecycle (Fig. 4: coordinator -> witness) ---------------------------
     def start(self, master_id: int) -> bool:
@@ -226,10 +271,12 @@ class DeviceWitness:
         hi, lo = _lanes(khs)
         rhi, rlo = _rpc_lanes([op.rpc_id for op in ops])
         lanes = np.full(len(ops), self.lane, np.int32)
-        rsn, qh, ql, table = gang_record(
-            self.gang.table, self.n_sets, hi, lo, lanes, rhi, rlo, kcls
+        rsn, qh, ql, table, counters = gang_record(
+            self.gang.table, self.n_sets, hi, lo, lanes, rhi, rlo, kcls,
+            counters=self.gang.counters,
         )
         self.gang.table = table
+        self.gang.counters = counters
         self.stats["kernel_batches"] += 1
         return [
             self._settle(int(rsn[i]), [(int(qh[i]), int(ql[i]))],
@@ -262,9 +309,10 @@ class DeviceWitness:
         lanes = np.full(G, self.lane, np.int32)
         res = gang_record_groups(
             self.gang.table, self.n_sets, khi, klo, kval, lanes, rhi, rlo,
-            kcls,
+            kcls, counters=self.gang.counters,
         )
         self.gang.table = res.table
+        self.gang.counters = res.counters
         self.stats["kernel_batches"] += 1
         out = []
         for g, op in enumerate(ops):
@@ -284,6 +332,7 @@ class DeviceWitness:
         any accept (fresh insert or idempotent dup) every key's entry is
         re-stamped with age 0.  Entries nest per rpc so mergeable same-key
         records (each holding its own device slot) coexist in the mirror."""
+        self.stats[_REASON_STAT[reason]] += 1
         if reason in (_R_INSERT, _R_DUP):
             for key, cls in zip(keys, classes):
                 self._held.setdefault(key, {})[rpc_id] = _Held(
@@ -314,9 +363,10 @@ class DeviceWitness:
             np.array([self.lane], np.int32),
             np.array([rpc_id[0] & _M32], np.uint32),
             np.array([rpc_id[1] & _M32], np.uint32),
-            kcls[None, :],
+            kcls[None, :], counters=self.gang.counters,
         )
         self.gang.table = res.table
+        self.gang.counters = res.counters
         self.stats["kernel_batches"] += 1
         keys = [(int(res.q_hi[0, k]), int(res.q_lo[0, k]))
                 for k in range(len(pairs))]

@@ -314,9 +314,10 @@ class FusedBatchDriver:
             gang.table, gang.n_sets, k_hi, k_lo, r_hi, r_lo, exec_pred,
             np.asarray(cluster.router.slot_map, np.int32), lane_map,
             self.ring.hi, self.ring.lo, self.ring.tail, self.ring.count,
-            key_cls=k_cls, ring_cls=self.ring.cls,
+            key_cls=k_cls, ring_cls=self.ring.cls, counters=gang.counters,
         )
         gang.table = res.table
+        gang.counters = res.counters
         self.ring.hi = res.ring_hi
         self.ring.lo = res.ring_lo
         self.ring.cls = res.ring_cls

@@ -19,6 +19,7 @@ from .backup import LogEntry
 from .merge import conflicts
 from .rifl import RiflTable
 from .store import KVStore
+from .telemetry import get_registry
 from .types import TXN_OPS, BackupSyncReq, ExecResult, Op, OpType, RpcId
 
 # Verdicts for an incoming update.
@@ -88,6 +89,14 @@ class Master:
             "txn_vote_no": 0, "migrated_in_keys": 0, "migrated_out_keys": 0,
             "migrated_rifl_gcd": 0,
         }
+        reg = get_registry()
+        self._m_fast = reg.counter("master.fast")
+        self._m_conflict_syncs = reg.counter("master.conflict_syncs")
+        self._m_dups = reg.counter("master.dups")
+        self._m_batch_syncs = reg.counter("master.batch_syncs")
+        self._m_hot_key_syncs = reg.counter("master.hot_key_syncs")
+        self._h_window = reg.histogram("master.unsynced_window")
+        self._h_sync_batch = reg.histogram("master.sync_batch_ops")
 
     # ------------------------------------------------------------------ utils
     @property
@@ -174,10 +183,12 @@ class Master:
         mig_key = (op.rpc_id, op.key_hashes())
         if mig_key in self.migrated_rifl:
             self.stats["dups"] += 1
+            self._m_dups.inc()
             return DUP, ExecResult(self.migrated_rifl[mig_key], synced=True)
         dup = self.rifl.check_duplicate(op.rpc_id)
         if dup is not None:
             self.stats["dups"] += 1
+            self._m_dups.inc()
             return DUP, ExecResult(dup.result, synced=dup.synced)
 
         if op.op_type in TXN_OPS:
@@ -219,22 +230,26 @@ class Master:
         self.rifl.record_completion(op.rpc_id, result, synced=False)
         self.log.append(LogEntry(op, result))
         self._window_add(op)
+        self._h_window.record(self.unsynced_count)
         if op.op_type is OpType.MIGRATE_OUT:
             self.stats["migrated_out_keys"] += len(op.keys)
 
         if not commutes:
             # §3.2.3: must sync (through this op) before externalizing result.
             self.stats["conflict_syncs"] += 1
+            self._m_conflict_syncs.inc()
             self.want_sync = True
             return SYNCED, ExecResult(result, synced=True)
 
         self.stats["fast"] += 1
+        self._m_fast.inc()
         if self.unsynced_count >= self.sync_batch:
             self.want_sync = True
         if hot:
             # §4.4 heuristic: recently-updated key updated again — sync
             # preemptively (after responding) so future ops don't block.
             self.stats["hot_key_syncs"] += 1
+            self._m_hot_key_syncs.inc()
             self.want_sync = True
         return FAST, ExecResult(result, synced=False)
 
@@ -368,6 +383,7 @@ class Master:
         )
         self.sync_in_progress = PendingSync(through_index=through, req=req)
         self.want_sync = False
+        self._h_sync_batch.record(len(req.entries))
         return req
 
     def complete_sync(self) -> Tuple[Tuple[int, RpcId], ...]:
@@ -389,6 +405,7 @@ class Master:
         self.synced_index = through
         self.sync_in_progress = None
         self.stats["batch_syncs"] += 1
+        self._m_batch_syncs.inc()
         return tuple(gc_entries)
 
     def force_synced_through(self, through: int) -> None:

@@ -54,11 +54,13 @@ benchmarks/fig_scaling.py (see benchmarks/fig_migration.py).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Dict, List, Sequence, Tuple
 
 from .client import ClientSession
 from .master import DUP, ERROR, FAST, SYNCED
+from .telemetry import get_registry
 from .types import Op, OpType
 
 
@@ -131,18 +133,26 @@ class SlotMigration:
     # ------------------------------------------------------------- driving
     def step(self) -> str:
         """Run the next stage; returns the stage now pending (or 'done')."""
-        if self.stage == "freeze":
+        stage = self.stage
+        t0 = time.perf_counter()
+        if stage == "freeze":
             self._freeze()
             self.stage = "sync"
-        elif self.stage == "sync":
+        elif stage == "sync":
             self._sync()
             self.stage = "transfer"
-        elif self.stage == "transfer":
+        elif stage == "transfer":
             self._transfer()
             self.stage = "handover"
-        elif self.stage == "handover":
+        elif stage == "handover":
             self._handover()
             self.stage = "done"
+        if stage != "done":
+            reg = get_registry()
+            reg.histogram(f"migration.stage_us.{stage}").record(
+                (time.perf_counter() - t0) * 1e6
+            )
+            reg.counter("migration.stages").inc()
         return self.stage
 
     def run(self) -> MigrationReport:
@@ -310,6 +320,7 @@ class MigrationManager:
         for s in slots:
             mig = self.active.get(s)
             if mig is not None:
+                get_registry().counter("migration.redirects").inc()
                 raise SlotMoving(s, mig.src, mig.dst)
 
     def check_keys(self, keys) -> None:
@@ -351,6 +362,7 @@ class MigrationManager:
         for s in mig.slots:
             self.active.pop(s, None)
         self.history.append(mig.report())
+        get_registry().counter("migration.handovers").inc()
 
 
 def plan_rebalance(

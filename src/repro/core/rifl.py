@@ -15,6 +15,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, Optional, Tuple
 
+from .telemetry import get_registry
 from .types import CompletionRecord, RpcId
 
 
@@ -27,6 +28,8 @@ class RiflTable:
         self._expired_clients: set[int] = set()
         # §4.8 (1): during witness replay, acks must not delete records.
         self.replay_mode: bool = False
+        self.stats = {"dup_hits": 0}
+        self._m_dup_hits = get_registry().counter("rifl.dup_hits")
 
     # -- duplicate detection -------------------------------------------------
     def check_duplicate(self, rpc_id: RpcId) -> Optional[CompletionRecord]:
@@ -34,14 +37,20 @@ class RiflTable:
         client_id, seq = rpc_id
         rec = self._records.get(client_id, {}).get(seq)
         if rec is not None:
+            self.stats["dup_hits"] += 1
+            self._m_dup_hits.inc()
             return rec
         if client_id in self._expired_clients:
             # Expired client: all records gone; request must be ignored, not
             # re-executed (the paper requires sync-before-expiry so that this
             # can never lose a completed op).
+            self.stats["dup_hits"] += 1
+            self._m_dup_hits.inc()
             return CompletionRecord(rpc_id, None, synced=True)
         if seq < self._acked_below.get(client_id, 0):
             # Acked => client saw the result; duplicates are ignored.
+            self.stats["dup_hits"] += 1
+            self._m_dup_hits.inc()
             return CompletionRecord(rpc_id, None, synced=True)
         return None
 

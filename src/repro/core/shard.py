@@ -856,6 +856,11 @@ class ShardedCluster:
             from .fastbatch import FusedBatchDriver
 
             self._fused = FusedBatchDriver(self)
+        # Optional flight recorder (repro.core.telemetry.Tracer): when
+        # attached, update_batch emits wall-clock batch spans + per-op
+        # sampled spans keyed by RIFL id.
+        self.tracer = None
+        self._batch_seq = 0
 
     def _node_id(self) -> int:
         self._next_node_id += 1
@@ -941,6 +946,36 @@ class ShardedCluster:
         window conflict check, and every shard's every witness record.  The
         driver declines (returns None) whenever any op or shard falls off
         its eligibility envelope, and the per-shard path below runs."""
+        if self.tracer is not None:
+            return self._update_batch_traced(session, ops, now)
+        return self._update_batch(session, ops, now)
+
+    def _update_batch_traced(self, session, ops, now):
+        """Wall-clock batch + sampled per-op spans around the real path
+        (times in µs since an arbitrary perf_counter origin)."""
+        import time as _time
+
+        t0 = _time.perf_counter()
+        fused_before = (self._fused.stats["fused_batches"]
+                        if self._fused is not None else 0)
+        out = self._update_batch(session, ops, now)
+        t1 = _time.perf_counter()
+        tr = self.tracer
+        self._batch_seq += 1
+        fused = (self._fused is not None
+                 and self._fused.stats["fused_batches"] > fused_before)
+        tr.span(("batch", self._batch_seq), "update_batch", t0 * 1e6,
+                (t1 - t0) * 1e6, actor="cluster",
+                args={"ops": len(ops), "fused": fused}, force=True)
+        per_op = (t1 - t0) * 1e6 / max(1, len(ops))
+        for i, op in enumerate(ops):
+            tr.span(op.rpc_id, "op", t0 * 1e6 + i * per_op, per_op,
+                    actor="cluster",
+                    status="fast" if out[i].fast_path else "slow")
+        return out
+
+    def _update_batch(self, session: ShardedClientSession, ops: Sequence[Op],
+                      now: float = 0.0) -> List["OpOutcome"]:
         if self._fused is not None:
             fused = self._fused.try_update_batch(session, ops, now)
             if fused is not None:

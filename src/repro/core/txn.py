@@ -60,6 +60,7 @@ import enum
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from .telemetry import get_registry
 from .types import Op, OpType, RpcId
 
 
@@ -264,6 +265,16 @@ class TxnCoordinator:
         self.wait_retries = wait_retries
         self.wounds = 0          # holders resolved out of the way
         self.waits = 0           # bounded prepare retries spent waiting
+        reg = get_registry()
+        self._m_leg = {
+            "prepare_granted": reg.counter("txn.legs.prepare_granted"),
+            "prepare_refused": reg.counter("txn.legs.prepare_refused"),
+            "commit": reg.counter("txn.legs.commit"),
+            "abort": reg.counter("txn.legs.abort"),
+            "single_1rtt": reg.counter("txn.legs.single_1rtt"),
+            "wounds": reg.counter("txn.wounds"),
+            "waits": reg.counter("txn.waits"),
+        }
 
     def run(
         self,
@@ -283,6 +294,7 @@ class TxnCoordinator:
         group = self.cluster.shards[part.shard_id]
         sub = self.session.session_for(part.shard_id)
         out = group.update(sub, single_shard_op(spec), now)
+        self._m_leg["single_1rtt"].inc()
         _status, read_vals = out.value
         return TxnOutcome(
             status=TxnStatus.COMMITTED,
@@ -308,13 +320,18 @@ class TxnCoordinator:
                 # commits it iff it was already fully prepared).
                 resolve_txn(self.cluster, vote.blocking)
                 self.wounds += 1
+                self._m_leg["wounds"].inc()
             else:
                 # We are younger: wait-by-retry for the older holder.
                 if waited >= self.wait_retries:
                     break
                 waited += 1
                 self.waits += 1
+                self._m_leg["waits"].inc()
             vote = group.txn_prepare(sub, prepare_op(spec, part), now)
+        self._m_leg[
+            "prepare_granted" if vote.granted else "prepare_refused"
+        ].inc()
         return vote
 
     # -- the 2PC proper ------------------------------------------------------
@@ -342,6 +359,7 @@ class TxnCoordinator:
             self.cluster.shards[part.shard_id].txn_decide(
                 op, self.session.session_for(part.shard_id)
             )
+            self._m_leg["commit" if commit else "abort"].inc()
         if not commit:
             return TxnOutcome(
                 status=TxnStatus.ABORTED, reads=None,

@@ -16,6 +16,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from .merge import CLS_OTHER, conflicts
+from .telemetry import get_registry
 from .types import (
     GcResp,
     Op,
@@ -59,8 +60,16 @@ class Witness:
         self.mode = WitnessMode.ENDED
         self.master_id: Optional[int] = None
         self._slots: List[List[_Slot]] = []
-        self.stats = {"accepts": 0, "rejects_conflict": 0, "rejects_full": 0,
-                      "rejects_mode": 0, "rejects_budget": 0, "gc_drops": 0}
+        self.stats = {"accepts": 0, "accepts_dup": 0, "rejects_conflict": 0,
+                      "rejects_full": 0, "rejects_mode": 0,
+                      "rejects_budget": 0, "gc_drops": 0}
+        reg = get_registry()
+        self._m_accepts = reg.counter("witness.accepts")
+        self._m_dups = reg.counter("witness.dups")
+        self._m_rej_conflict = reg.counter("witness.rejects_conflict")
+        self._m_rej_full = reg.counter("witness.rejects_full")
+        self._m_rej_mode = reg.counter("witness.rejects_mode")
+        self._m_gc_drops = reg.counter("witness.gc_drops")
 
     # -- lifecycle (Fig. 4: coordinator -> witness) ---------------------------
     def start(self, master_id: int) -> bool:
@@ -101,12 +110,14 @@ class Witness:
         """
         if self.mode is not WitnessMode.NORMAL or master_id != self.master_id:
             self.stats["rejects_mode"] += 1
+            self._m_rej_mode.inc()
             return RecordStatus.REJECTED
 
         pairs = self._pairs(key_hashes, request)
         placements: List[Tuple[int, int, int, int]] = []  # (set, way, kh, cls)
         claimed: set = set()   # (set_idx, way) taken by earlier pairs of THIS op
         placed: set = set()    # (kh, cls) pairs of THIS op already seated
+        any_dup = False
         for kh, cls in pairs:
             if (kh, cls) in placed:
                 # The op lists the same key twice (e.g. MSET a=1 a=2): one
@@ -125,12 +136,14 @@ class Witness:
                         # Duplicate record RPC (client retry): idempotent accept.
                         free_way = w
                         is_dup = True
+                        any_dup = True
                         break
                     if slot.key_hash == kh:
                         if conflicts(slot.op_class, cls):
                             # Non-commutative with a held request: must reject —
                             # the witness cannot order them (§3.2.2).
                             self.stats["rejects_conflict"] += 1
+                            self._m_rej_conflict.inc()
                             self._note_suspect(slot)
                             return RecordStatus.REJECTED
                         if slot.op_class == cls:
@@ -146,6 +159,7 @@ class Witness:
                 return RecordStatus.REJECTED
             if free_way is None:
                 self.stats["rejects_full"] += 1
+                self._m_rej_full.inc()
                 return RecordStatus.REJECTED
             claimed.add((set_idx, free_way))
             placements.append((set_idx, free_way, kh, cls))
@@ -159,6 +173,10 @@ class Witness:
             slot.gc_age = 0
             slot.op_class = cls
         self.stats["accepts"] += 1
+        self._m_accepts.inc()
+        if any_dup:
+            self.stats["accepts_dup"] += 1
+            self._m_dups.inc()
         return RecordStatus.ACCEPTED
 
     @staticmethod
@@ -195,6 +213,7 @@ class Witness:
                     slot.request = None
                     slot.rpc_id = None
                     self.stats["gc_drops"] += 1
+                    self._m_gc_drops.inc()
         # Age all survivors; collect suspects.
         stale: List[Op] = []
         seen: set = set()

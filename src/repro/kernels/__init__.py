@@ -26,6 +26,7 @@ from .ops import (
     matrix_rows,
     GangFastPathResult,
     GangRecordResult,
+    N_REASON_CODES,
     GangTable,
     TxnProbeResult,
     WitnessTable,
@@ -62,6 +63,7 @@ __all__ = [
     "reset_dispatch_count", "ref_conflict_scan", "ref_keyhash2x32",
     "ref_witness_gc", "ref_witness_record", "ref_witness_record_txn",
     "GangTable", "GangRecordResult", "GangFastPathResult",
+    "N_REASON_CODES",
     "gang_record", "gang_record_groups", "gang_gc", "gang_fastpath_batch",
     "np_keyhash2x32", "ref_gang_record", "ref_gang_gc",
     "matrix_rows", "conflict_matrix_np",

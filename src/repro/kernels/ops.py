@@ -53,10 +53,12 @@ from .ref import (
 )
 from .witness_record import (
     DEFAULT_TILE_SETS,
+    N_REASON_CODES,
     fastpath_record_scan_pallas,
     gang_gc_pallas,
     gang_record_groups_pallas,
     gang_record_setpar_pallas,
+    reason_counts_update,
     witness_gc_pallas,
     witness_record_seq_pallas,
     witness_record_setpar_pallas,
@@ -66,11 +68,18 @@ from .witness_record import (
 # ---------------------------------------------------------------------------
 # Host-side dispatch accounting (benchmarks read this; see module docstring)
 # ---------------------------------------------------------------------------
-_DISPATCHES = {"count": 0}
+# Backed by the telemetry metrics registry ("kernels.dispatches") so the
+# flight recorder sees device-program launches next to the protocol counters;
+# the three functions below are kept as the stable public API.  The import is
+# lazy because repro.core's package __init__ imports this module (device
+# witness) — telemetry itself is a leaf with no repro imports.
+_DISPATCH_COUNTER = "kernels.dispatches"
 
 
 def _count_dispatch(n: int = 1) -> None:
-    _DISPATCHES["count"] += n
+    from repro.core.telemetry import registry
+
+    registry().counter(_DISPATCH_COUNTER).inc(n)
 
 
 def dispatch_count() -> int:
@@ -85,11 +94,15 @@ def dispatch_count() -> int:
     outside this module, nor would it catch a second pallas_call added
     inside an impl (the parity tests pin the impl's behavior instead).
     """
-    return _DISPATCHES["count"]
+    from repro.core.telemetry import registry
+
+    return registry().counter(_DISPATCH_COUNTER).value
 
 
 def reset_dispatch_count() -> None:
-    _DISPATCHES["count"] = 0
+    from repro.core.telemetry import registry
+
+    registry().counter(_DISPATCH_COUNTER).reset()
 
 
 def _on_tpu() -> bool:
@@ -553,11 +566,20 @@ class GangRecordResult(NamedTuple):
     q_hi: np.ndarray         # [G, K] mixed lanes of every key (padding = 0)
     q_lo: np.ndarray         # [G, K]
     table: GangTable         # updated gang table (donated buffers)
+    counters: jnp.ndarray | None = None  # [L, 5] reason-counter plane, if fed
 
 
-@functools.partial(jax.jit, static_argnames=("n_sets", "interpret"))
+def _dummy_counters() -> jnp.ndarray:
+    """Placeholder counters operand for untracked dispatches (track=False
+    is jit-static, so the scatter-add never traces; the buffer just keeps
+    the jitted signature stable)."""
+    return jnp.zeros((1, N_REASON_CODES), jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_sets", "track", "interpret"))
 def _gang_groups_impl(table, k_hi, k_lo, k_cls, k_valid, lanes, r_hi, r_lo,
-                      g_valid, n_sets: int, interpret: bool):
+                      g_valid, counters, n_sets: int, track: bool,
+                      interpret: bool):
     G, K = k_hi.shape
     qh, ql = ref_keyhash2x32(k_hi.reshape(-1), k_lo.reshape(-1))
     qh = qh.reshape(G, K)
@@ -570,13 +592,16 @@ def _gang_groups_impl(table, k_hi, k_lo, k_cls, k_valid, lanes, r_hi, r_lo,
         table, qh, ql, rows, k_valid, k_cls, r_hi, r_lo, g_valid,
         interpret=interpret,
     )
-    return rsn, qh, ql, new_table
+    if track:
+        # One count per GROUP (the host settles grouped ops group-wise).
+        counters = reason_counts_update(counters, lanes, rsn, g_valid)
+    return rsn, qh, ql, new_table, counters
 
 
 def gang_record_groups(
     table: GangTable, n_sets: int,
     key_hi, key_lo, key_valid, lanes, rpc_hi, rpc_lo, key_cls=None,
-    *, interpret: bool | None = None,
+    *, counters=None, interpret: bool | None = None,
 ) -> GangRecordResult:
     """Batched per-group all-or-nothing record: ONE dispatch for a whole
     batch of (possibly multi-key) ops.
@@ -588,6 +613,11 @@ def gang_record_groups(
     index order with the Python reference's exact placement semantics; dup/
     conflict decisions use the kernel-held rpc lanes (no host mirror
     input).  Rebind ``result.table``.
+
+    ``counters`` is the optional [L, 5] device reason-counter plane; when
+    passed, each group's reason code is accumulated at its lane inside the
+    same dispatch and the updated plane comes back as ``result.counters``
+    (rebind it alongside the table).
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -609,20 +639,23 @@ def gang_record_groups(
     rpc_lo = np.pad(np.asarray(rpc_lo, np.uint32), (0, Gp - G))
     g_valid = np.zeros((Gp,), np.int32)
     g_valid[:G] = 1
-    rsn, qh, ql, new_table = _gang_groups_impl(
+    track = counters is not None
+    rsn, qh, ql, new_table, new_counters = _gang_groups_impl(
         table, key_hi, key_lo, jnp.asarray(key_cls), key_valid, lanes,
-        rpc_hi, rpc_lo, jnp.asarray(g_valid), n_sets, interpret,
+        rpc_hi, rpc_lo, jnp.asarray(g_valid),
+        counters if track else _dummy_counters(), n_sets, track, interpret,
     )
     return GangRecordResult(
         np.asarray(rsn)[:G], np.asarray(qh)[:G, :K], np.asarray(ql)[:G, :K],
-        new_table,
+        new_table, new_counters if track else None,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("n_sets", "interpret",
+@functools.partial(jax.jit, static_argnames=("n_sets", "track", "interpret",
                                              "tile_sets"))
 def _gang_record_impl(table, k_hi, k_lo, k_cls, k_valid, lanes, r_hi, r_lo,
-                      n_sets: int, interpret: bool, tile_sets: int):
+                      counters, n_sets: int, track: bool, interpret: bool,
+                      tile_sets: int):
     R, _W = table.occ.shape
     qh, ql = ref_keyhash2x32(k_hi, k_lo)
     rows = (
@@ -635,20 +668,28 @@ def _gang_record_impl(table, k_hi, k_lo, k_cls, k_valid, lanes, r_hi, r_lo,
         table, qhi_f, qlo_f, r_hi[perm], r_lo[perm], k_cls[perm], sets_f,
         rstart, n_rounds, tile_sets=tile_sets, interpret=interpret,
     )
-    return _unsort(perm, rsn_f), qh, ql, new_table
+    rsn = _unsort(perm, rsn_f)
+    if track:
+        # One count per ROW, mirroring the host's per-op settle accounting.
+        counters = reason_counts_update(counters, lanes, rsn, k_valid)
+    return rsn, qh, ql, new_table, counters
 
 
 def gang_record(
     table: GangTable, n_sets: int, key_hi, key_lo, lanes, rpc_hi, rpc_lo,
     key_cls=None,
-    *, interpret: bool | None = None, tile_sets: int = DEFAULT_TILE_SETS,
+    *, counters=None, interpret: bool | None = None,
+    tile_sets: int = DEFAULT_TILE_SETS,
 ):
     """Set-parallel single-key record over the gang: ONE dispatch for a
     batch of [B] single-key ops (each with its own lane + rpc identity).
     ``key_cls`` is the optional [B] merge-lattice class lane (default SET).
 
     Returns (reasons [B], q_hi [B], q_lo [B], table) — numpy outputs,
-    caller order, same reason codes as ``gang_record_groups``.
+    caller order, same reason codes as ``gang_record_groups``.  With the
+    optional ``counters`` plane ([L, 5] int32) the return grows a fifth
+    element: the updated plane with each op's reason accumulated at its
+    lane inside the same dispatch.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -663,12 +704,15 @@ def gang_record(
         np.asarray(lanes, np.int32),
         np.asarray(rpc_hi, np.uint32), np.asarray(rpc_lo, np.uint32),
     )
-    rsn, qh, ql, new_table = _gang_record_impl(
+    track = counters is not None
+    rsn, qh, ql, new_table, new_counters = _gang_record_impl(
         table, key_hi, key_lo, jnp.asarray(key_cls), valid, lanes,
-        rpc_hi, rpc_lo, n_sets, interpret, tile_sets,
+        rpc_hi, rpc_lo, counters if track else _dummy_counters(),
+        n_sets, track, interpret, tile_sets,
     )
-    return (np.asarray(rsn)[:B], np.asarray(qh)[:B], np.asarray(ql)[:B],
-            new_table)
+    out = (np.asarray(rsn)[:B], np.asarray(qh)[:B], np.asarray(ql)[:B],
+           new_table)
+    return out + (new_counters,) if track else out
 
 
 @functools.partial(jax.jit, static_argnames=("n_sets", "do_age", "interpret",
@@ -734,14 +778,16 @@ class GangFastPathResult(NamedTuple):
     ring_lo: jnp.ndarray     # [NS, CAP]
     counts: np.ndarray       # [NS] post-append live-entry count per ring
     ring_cls: jnp.ndarray    # [NS, CAP] merge-lattice class per ring entry
+    counters: jnp.ndarray | None = None  # [L, 5] reason-counter plane, if fed
 
 
 @functools.partial(jax.jit, static_argnames=("n_slots", "n_sets", "f",
-                                             "interpret", "tile_sets"))
+                                             "track", "interpret",
+                                             "tile_sets"))
 def _gang_fastpath_impl(table, k_hi, k_lo, k_cls, k_valid, r_hi, r_lo,
                         exec_pred, slot_map, lane_map, ring_hi, ring_lo,
-                        ring_cls, tail_slot, count,
-                        n_slots: int, n_sets: int, f: int,
+                        ring_cls, tail_slot, count, counters,
+                        n_slots: int, n_sets: int, f: int, track: bool,
                         interpret: bool, tile_sets: int):
     (B,) = k_hi.shape
     R, _W = table.occ.shape
@@ -803,9 +849,16 @@ def _gang_fastpath_impl(table, k_hi, k_lo, k_cls, k_valid, r_hi, r_lo,
         rep(qcls)[perm], sets_f, rstart, n_rounds,
         tile_sets=tile_sets, interpret=interpret,
     )
-    reasons = _unsort(perm, rsn_f).reshape(B, f)
+    rsn_flat = _unsort(perm, rsn_f)                                # [B*f]
+    if track:
+        # One count per (op, witness copy) at the copy's lane — the same
+        # granularity the host settles at (FusedBatchDriver settles every
+        # witness of every op individually).
+        counters = reason_counts_update(
+            counters, lanes_e, rsn_flat, rep(valid))
+    reasons = rsn_flat.reshape(B, f)
     return (reasons, conflicts, shard, qh, ql, new_table,
-            ring_hi, ring_lo, new_count, ring_cls)
+            ring_hi, ring_lo, new_count, ring_cls, counters)
 
 
 def gang_fastpath_batch(
@@ -813,7 +866,7 @@ def gang_fastpath_batch(
     key_hi, key_lo, rpc_hi, rpc_lo, exec_pred,
     slot_map, lane_map,
     ring_hi, ring_lo, tail_slot, count,
-    *, key_cls=None, ring_cls=None,
+    *, key_cls=None, ring_cls=None, counters=None,
     interpret: bool | None = None,
     tile_sets: int = DEFAULT_TILE_SETS,
 ) -> GangFastPathResult:
@@ -834,6 +887,10 @@ def gang_fastpath_batch(
     everything, the legacy behaviour).  Reasons/conflicts come back per op
     as numpy; ring buffers and table stay on device.  Rebind table and
     ring state (including ``ring_cls``) from the result.
+
+    ``counters`` is the optional [L, 5] reason-counter plane: when passed,
+    every (op, witness copy) outcome is accumulated at the copy's lane
+    inside the same dispatch; rebind ``result.counters``.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -853,20 +910,23 @@ def gang_fastpath_batch(
         np.asarray(rpc_hi, np.uint32), np.asarray(rpc_lo, np.uint32),
         np.asarray(exec_pred, np.int32),
     )
+    track = counters is not None
     out = _gang_fastpath_impl(
         table, key_hi, key_lo, jnp.asarray(key_cls), valid, rpc_hi, rpc_lo,
         exec_pred, jnp.asarray(slot_map), jnp.asarray(lane_map),
         ring_hi, ring_lo, ring_cls,
         jnp.asarray(np.asarray(tail_slot, np.int32)),
         jnp.asarray(np.asarray(count, np.int32)),
-        n_slots, n_sets, f, interpret, tile_sets,
+        counters if track else _dummy_counters(),
+        n_slots, n_sets, f, track, interpret, tile_sets,
     )
     (reasons, conflicts, shard, qh, ql, new_table, rh, rl, new_count,
-     rcls) = out
+     rcls, new_counters) = out
     return GangFastPathResult(
         np.asarray(reasons)[:B], np.asarray(conflicts)[:B],
         np.asarray(shard)[:B], np.asarray(qh)[:B], np.asarray(ql)[:B],
         new_table, rh, rl, np.asarray(new_count), rcls,
+        new_counters if track else None,
     )
 
 
@@ -877,7 +937,7 @@ __all__ = [
     "conflict_scan", "fastpath_batch", "txn_probe", "dispatch_count",
     "reset_dispatch_count", "ref_keyhash2x32", "ref_witness_record",
     "ref_witness_gc", "ref_conflict_scan", "ref_witness_record_txn",
-    "GangTable", "GangRecordResult", "GangFastPathResult",
+    "GangTable", "GangRecordResult", "GangFastPathResult", "N_REASON_CODES",
     "gang_record", "gang_record_groups", "gang_gc", "gang_fastpath_batch",
     "np_keyhash2x32", "ref_gang_record", "ref_gang_gc",
     "matrix_rows", "conflict_matrix_np",

@@ -985,3 +985,33 @@ def witness_gc_pallas(
     )(g_hi.astype(U32), g_lo.astype(U32),
       table.keys_hi, table.keys_lo, table.occ)
     return WitnessTable(table.keys_hi, table.keys_lo, occ)
+
+
+# ---------------------------------------------------------------------------
+# In-dispatch reason-code counters plane (flight recorder)
+# ---------------------------------------------------------------------------
+
+N_REASON_CODES = 5  # index 0 unused; 1..4 = INSERT / DUP / CONFLICT / FULL
+
+
+def reason_counts_update(
+    counters: jnp.ndarray, lanes: jnp.ndarray, reasons: jnp.ndarray,
+    valid: jnp.ndarray,
+) -> jnp.ndarray:
+    """Scatter-accumulate per-lane reason-code outcomes on device.
+
+    ``counters`` is the [n_lanes, N_REASON_CODES] int32 telemetry plane owned
+    by the caller's ``WitnessGang``; ``lanes``/``reasons``/``valid`` are flat
+    [N] vectors (lane id, REASON_* code, 0/1 participation mask) for the rows
+    resolved by one record dispatch.  This is plain-XLA scatter-add, not a
+    pallas kernel, on purpose: called inside the jitted record impls it fuses
+    into the same single dispatch as the prep sorts (module docstring's
+    "plain XLA around one pallas_call" layout), so tracking adds zero extra
+    dispatches.  ``mode="drop"`` discards padding rows that carry an
+    out-of-range lane.
+
+    VMEM cost: N_REASON_CODES x 4 B per lane (20 B) — noise next to the six
+    [L*S, W] table planes (kernels/README.md has the full budget table).
+    """
+    return counters.at[lanes, reasons].add(
+        valid.astype(jnp.int32), mode="drop")

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import WitnessGeometry
+from repro.core.telemetry import get_registry
 from repro.models.config import ModelConfig
 from repro.models.transformer import decode_step, init_decode_cache, init_params
 
@@ -68,6 +69,11 @@ class CurpServeDriver:
         )
         self._reset_cache()
         self.tokens_served = 0
+        reg = get_registry()
+        self._m_tokens = reg.counter("serve.tokens")
+        self._h_commit = reg.histogram("serve.commit_sessions")
+        self._m_recoveries = reg.counter("serve.recoveries")
+        self._m_replayed = reg.counter("serve.replayed_ops")
 
     def _reset_cache(self) -> None:
         self.cache = init_decode_cache(
@@ -126,6 +132,7 @@ class CurpServeDriver:
             s.tokens.append(tok)
             out[sid] = tok
             self.tokens_served += 1
+            self._m_tokens.inc()
             if len(s.tokens) % self.serve.commit_every == 0:
                 to_commit.append(s)
         # One batched CURP round for the whole decode step: distinct session
@@ -133,6 +140,7 @@ class CurpServeDriver:
         # With atomic_step_commit the step commits as ONE mini-transaction
         # instead (all-or-nothing across shards; single-shard steps keep the
         # 1-RTT short-circuit).
+        self._h_commit.record(len(to_commit))
         if self.serve.atomic_step_commit:
             self.store.txn(to_commit)
         else:
@@ -161,5 +169,7 @@ class CurpServeDriver:
             self.slots[slot] = sid
             self._replay_tokens(slot, s.tokens[:-1])
             recovered += 1
+        self._m_recoveries.inc()
+        self._m_replayed.inc(report.replayed)
         return {"recovered_sessions": recovered,
                 "replayed_ops": report.replayed}

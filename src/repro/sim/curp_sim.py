@@ -35,6 +35,7 @@ from repro.core.overload import (
     degrade_level,
 )
 from repro.core.shard import KeyRouter, ShardedClientSession, SlotRouter
+from repro.core.telemetry import get_registry
 from repro.core.types import ExecResult, Op, OpType, RecordStatus
 from repro.core.witness import Witness
 
@@ -164,6 +165,9 @@ class SimWitness(Node):
                 # Shed at delivery (no service cost): reply REJECTED so the
                 # client falls back to the 2-RTT sync path — correct, just
                 # slower, which is exactly the graceful-degradation contract.
+                if self.sim.tracer is not None:
+                    self.sim.tracer.instant(msg.op.rpc_id, "witness_shed",
+                                            self.sim.now, actor=self.name)
                 self.net.send(msg.src, MRecordResp(
                     msg.op.rpc_id, RecordStatus.REJECTED, self, msg.attempt
                 ))
@@ -185,15 +189,28 @@ class SimWitness(Node):
         return 0.2
 
     def handle(self, msg) -> None:
+        tr = self.sim.tracer
         if isinstance(msg, MRecord):
             st = self.core.record(
                 msg.master_id, msg.op.key_hashes(), msg.op.rpc_id, msg.op
             )
+            if tr is not None:
+                # The handler runs at service completion; the server span
+                # covers [now - svc, now].
+                svc = self.service_time(msg)
+                tr.span(msg.op.rpc_id, "witness_record", self.sim.now - svc,
+                        svc, actor=self.name, status=st.name.lower())
             self.net.send(
                 msg.src, MRecordResp(msg.op.rpc_id, st, self, msg.attempt)
             )
         elif isinstance(msg, MGc):
             resp = self.core.gc(msg.entries)
+            if tr is not None:
+                svc = self.service_time(msg)
+                tr.span(("gc", self.name), "witness_gc", self.sim.now - svc,
+                        svc, actor=self.name,
+                        args={"entries": len(msg.entries),
+                              "stale": len(resp.stale_requests)}, force=True)
             self.net.send(msg.src, MGcResp(resp.stale_requests))
 
 
@@ -248,6 +265,16 @@ class SimMaster(Node):
         self.max_qdepth = 0
         self.armor_stats = {"shed_queue": 0, "shed_throttle": 0,
                             "deferred_syncs": 0, "deferred_gcs": 0}
+        # --- flight recorder ----------------------------------------------
+        # Measured client-RPC service times feed the adaptive admission
+        # bound (ArmorConfig.adaptive) and the fig_obs stage attribution.
+        self._h_service = get_registry().histogram("sim.master_service_us")
+        self._aimd = (armor.make_aimd(self.admission, self._h_service)
+                      if armor is not None and self.admission is not None
+                      else None)
+        self._aimd_pending = 0
+        self._sync_t0 = 0.0
+        self._sync_n = 0
 
     # -- admission (queue-based load leveling; fail fast at delivery) ---------
     def deliver(self, msg) -> None:
@@ -255,6 +282,10 @@ class SimMaster(Node):
             if self.admission is not None:
                 if not self.admission.admit():
                     self.armor_stats["shed_queue"] += 1
+                    if self.sim.tracer is not None:
+                        self.sim.tracer.instant(
+                            msg.op.rpc_id, "master_shed", self.sim.now,
+                            actor=self.name, args={"reason": "QUEUE"})
                     self.net.send(msg.src,
                                   MShedResp(msg.op.rpc_id, "QUEUE"))
                     return
@@ -262,6 +293,10 @@ class SimMaster(Node):
                         msg.op.rpc_id[0], self.sim.now):
                     self.admission.release()
                     self.armor_stats["shed_throttle"] += 1
+                    if self.sim.tracer is not None:
+                        self.sim.tracer.instant(
+                            msg.op.rpc_id, "master_shed", self.sim.now,
+                            actor=self.name, args={"reason": "THROTTLE"})
                     self.net.send(msg.src,
                                   MShedResp(msg.op.rpc_id, "THROTTLE"))
                     return
@@ -273,12 +308,18 @@ class SimMaster(Node):
     def _run(self, msg) -> None:
         if isinstance(msg, (MUpdate, MRead)):
             self.qdepth -= 1
+            self._h_service.record(self.service_time(msg))
             if self.admission is not None:
                 self.admission.release()
                 self.degrade = degrade_level(
                     self.admission.frac(), self.degrade,
                     self.armor.degrade_hi, self.armor.degrade_lo,
                 )
+                if self._aimd is not None:
+                    self._aimd_pending += 1
+                    if self._aimd_pending >= self.armor.adaptive_interval_ops:
+                        self._aimd_pending = 0
+                        self._aimd.tick()
         super()._run(msg)
 
     # -- service costs ----------------------------------------------------------
@@ -313,11 +354,16 @@ class SimMaster(Node):
 
     # -- logic --------------------------------------------------------------------
     def handle(self, msg) -> None:
+        tr = self.sim.tracer
         if isinstance(msg, MUpdate):
             self.stats["updates"] += 1
             verdict, result = self.core.handle_update(
                 msg.op, msg.wlv, msg.acks, now=self.sim.now
             )
+            if tr is not None:
+                svc = self.service_time(msg)
+                tr.span(msg.op.rpc_id, "master_update", self.sim.now - svc,
+                        svc, actor=self.name, status=verdict)
             resp = MUpdateResp(msg.op.rpc_id, result)
             if verdict == ERROR:
                 self.net.send(msg.src, resp)
@@ -341,6 +387,10 @@ class SimMaster(Node):
         elif isinstance(msg, MRead):
             self.stats["reads"] += 1
             verdict, result = self.core.handle_read(msg.op, now=self.sim.now)
+            if tr is not None:
+                svc = self.service_time(msg)
+                tr.span(msg.op.rpc_id, "master_read", self.sim.now - svc,
+                        svc, actor=self.name, status=verdict)
             resp = MUpdateResp(msg.op.rpc_id, result)
             if verdict == SYNCED and self.mode != "unreplicated":
                 self._withheld.append((len(self.core.log), msg.src, resp))
@@ -365,8 +415,15 @@ class SimMaster(Node):
             req = self.core.begin_sync()
             if req is None:
                 return
+            self._sync_t0 = self.sim.now - self.service_time(msg)
+            self._sync_n = len(req.entries)
             if not self.backups:     # unreplicated: trivially synced
                 gc_entries = self.core.complete_sync()
+                if tr is not None:
+                    tr.span(("sync", self.name), "master_sync",
+                            self._sync_t0, self.sim.now - self._sync_t0,
+                            actor=self.name,
+                            args={"entries": self._sync_n}, force=True)
                 self._release(self.core.synced_index)
                 return
             self._sync_acks_needed = len(self.backups)
@@ -392,6 +449,13 @@ class SimMaster(Node):
             self._sync_acks_needed -= 1
             if self._sync_acks_needed == 0:
                 gc_entries = self.core.complete_sync()
+                if tr is not None:
+                    # One span per batched sync CYCLE (begin_sync -> last
+                    # backup ack), forced: syncs batch many rpc ids.
+                    tr.span(("sync", self.name), "master_sync",
+                            self._sync_t0, self.sim.now - self._sync_t0,
+                            actor=self.name,
+                            args={"entries": self._sync_n}, force=True)
                 self._release(self.core.synced_index)
                 if self.witnesses and gc_entries:
                     if self.degrade is DegradeLevel.DEFER_SLOW:
@@ -1257,6 +1321,7 @@ def run_batched_throughput(
     witness_backend: str = "python",
     geometry=None,
     workload=None,
+    tracer=None,
 ) -> BatchedRunResult:
     """Drive a real ShardedCluster through the batched client path
     (update_batch) with a BatchedWorkload and measure wall-clock throughput
@@ -1278,6 +1343,7 @@ def run_batched_throughput(
         n_shards=n_shards, f=f, seed=seed, witness_backend=witness_backend,
         geometry=geometry,
     )
+    cluster.tracer = tracer
     session = cluster.new_client()
     wl = workload or BatchedWorkload(
         batch_size=batch_size, conflict_frac=conflict_frac, seed=seed
@@ -1334,6 +1400,7 @@ class _OlOp:
     want_witnesses: int = 0
     sync_requested: bool = False
     done: bool = False
+    span_id: Optional[int] = None   # root trace span (tracer attached runs)
 
 
 class OpenLoopDriver(Node):
@@ -1416,6 +1483,12 @@ class OpenLoopDriver(Node):
         self.inflight[op.rpc_id] = st
         self.stats["issued"] += 1
         self.issue_times.append(self.sim.now)
+        if self.sim.tracer is not None:
+            # Root span for the whole op lifetime; every server-side span
+            # for this RIFL id parents to it.
+            st.span_id = self.sim.tracer.begin(
+                op.rpc_id, "op", self.sim.now, actor=self.name,
+                args={"type": op.op_type.name, "update": st.is_update})
         self._attempt(st)
 
     # -- routing (cached slot map) -----------------------------------------------
@@ -1488,6 +1561,10 @@ class OpenLoopDriver(Node):
         if st is None or st.done or st.attempts != attempt:
             return
         self.stats["timeouts"] += 1
+        if self.sim.tracer is not None:
+            self.sim.tracer.instant(rpc_id, "timeout", self.sim.now,
+                                    actor=self.name,
+                                    args={"attempt": attempt})
         br = self.breakers.get(st.shard_idx)
         if br is not None:
             br.record_failure(self.sim.now)
@@ -1522,6 +1599,8 @@ class OpenLoopDriver(Node):
         st.done = True
         self.inflight.pop(st.op.rpc_id, None)
         self.stats["failed"] += 1
+        if self.sim.tracer is not None:
+            self.sim.tracer.end(st.span_id, self.sim.now, status="failed")
         # The client walks away: RIFL may reclaim the completion record (the
         # op stays a "maybe" for the checker — it may or may not have run).
         st.session.abandon(st.op.rpc_id)
@@ -1548,6 +1627,10 @@ class OpenLoopDriver(Node):
                     # Stale cached slot map (§3.6): refetch, then retry
                     # against the fresh map.
                     self.stats["not_owner"] += 1
+                    if self.sim.tracer is not None:
+                        self.sim.tracer.instant(rpc_id, "not_owner",
+                                                self.sim.now,
+                                                actor=self.name)
                     if br is not None:
                         br.record_failure(self.sim.now)
                     self._refetch_map()
@@ -1603,6 +1686,9 @@ class OpenLoopDriver(Node):
     def _complete(self, st: _OlOp, result, rtts: int) -> None:
         st.done = True
         self.inflight.pop(st.op.rpc_id, None)
+        if self.sim.tracer is not None:
+            self.sim.tracer.end(st.span_id, self.sim.now,
+                                status=f"{rtts}rtt")
         lat = self.sim.now - st.t_invoke
         self.latencies.append((lat, self.sim.now, st.is_update))
         if rtts == 1:
@@ -1678,6 +1764,7 @@ def run_openloop_scenario(
     migrate_slots: Optional[List[Tuple[float, int, int]]] = None,
     warmup_frac: float = 0.2,
     record_history: bool = False,
+    tracer: Any = None,
 ) -> OpenLoopResult:
     """Drive an open-loop timed workload against a (possibly sharded,
     possibly armored) cluster and measure SLO survival.
@@ -1689,11 +1776,15 @@ def run_openloop_scenario(
     ``heartbeat=True`` a SimCoordinator detects the silence and drives
     failover — the harness never schedules recovery itself.
     ``migrate_slots`` is a list of (t_us, slot, dst_shard) live handovers
-    (sharded runs only; implies ownership enforcement)."""
+    (sharded runs only; implies ownership enforcement).
+    ``tracer`` (repro.core.telemetry.Tracer) attaches the flight recorder:
+    every sim actor emits causal spans keyed by RIFL id, closed out at
+    scenario teardown so in-flight ops never leak open spans."""
     from .workload import OpenLoopWorkload
 
     p = params or DEFAULT
     sim = Sim(seed=seed)
+    sim.tracer = tracer
     net = Network(sim, p)
     if isinstance(armor, ArmorConfig):
         armor_cfg = armor
@@ -1739,6 +1830,8 @@ def run_openloop_scenario(
     drain_us = max(20 * p.rpc_timeout_us,
                    p.ol_max_attempts * p.ol_backoff_cap_us / 4)
     sim.run(until=duration_us + drain_us)
+    if tracer is not None:
+        tracer.close_open(sim.now)
 
     # -- measure window: [warmup, end of arrivals] ---------------------------
     w_lo, w_hi = duration_us * warmup_frac, duration_us

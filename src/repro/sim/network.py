@@ -24,6 +24,9 @@ class Sim:
         self._heap: List[Tuple[float, int, Callable[[], None]]] = []
         self._seq = itertools.count()
         self.events_processed = 0
+        # Optional flight recorder (repro.core.telemetry.Tracer).  Actors
+        # null-check it, so a tracer can be attached/detached at any time.
+        self.tracer = None
 
     def at(self, t: float, fn: Callable[[], None]) -> None:
         heapq.heappush(self._heap, (t, next(self._seq), fn))
@@ -44,10 +47,14 @@ class Sim:
 
 class Network:
     def __init__(self, sim: Sim, params) -> None:
+        from repro.core.telemetry import get_registry
+
         self.sim = sim
         self.p = params
         self.bytes_sent = 0
         self.msgs_sent = 0
+        self._m_msgs = get_registry().counter("net.msgs")
+        self._m_drops = get_registry().counter("net.drops")
 
     def one_way_delay(self) -> float:
         p = self.p
@@ -61,7 +68,9 @@ class Network:
     def send(self, dst: "Node", msg: Any, size_bytes: int = 128) -> None:
         self.msgs_sent += 1
         self.bytes_sent += size_bytes
+        self._m_msgs.inc()
         if self.p.drop_prob > 0 and self.sim.rng.random() < self.p.drop_prob:
+            self._m_drops.inc()
             return
         self.sim.at(self.sim.now + self.one_way_delay(),
                     lambda: dst.deliver(msg))
