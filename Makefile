@@ -1,4 +1,4 @@
-.PHONY: check test bench-scaling bench-fastpath bench-txn bench-migration bench-crdt bench-slo
+.PHONY: check test bench-scaling bench-fastpath bench-txn bench-migration bench-crdt bench-slo bench-watchdog bench-gate
 
 check:
 	bash scripts/check.sh
@@ -23,3 +23,9 @@ bench-crdt:
 
 bench-slo:
 	PYTHONPATH=src python -m benchmarks.fig_slo
+
+bench-watchdog:
+	PYTHONPATH=src python -m benchmarks.fig_watchdog
+
+bench-gate:
+	python scripts/bench_gate.py

@@ -1,0 +1,299 @@
+"""Watchdog figure: the monitors are non-vacuous, silent on clean storms,
+and effectively free.
+
+Four halves, all asserted:
+
+1. **Chaos matrix** — run every ``ChaosConfig`` switch through its
+   scenario and assert the matching monitor (``CHAOS_MONITOR``) fires,
+   that NO other monitor fires, and that detection lands within a bounded
+   number of journal events of the injection (the watchdog is an online
+   auditor, not a teardown check).  One run is replayed from its black box
+   and must reproduce the identical breach sequence (``Breach.key()``).
+
+2. **Clean storms** — the fig_slo-shaped storms (overload ramp with a
+   flash crowd, silent-crash failover, hot-slot migration burst) with the
+   watchdog attached and no chaos: zero breaches, zero monitors fired.
+   The crash storm also runs with a full-sampling tracer and must leak no
+   open spans (teardown drains them; the black-box path reuses the same
+   ``Tracer.drain``).
+
+3. **Overhead** — the watched overload ramp must keep >= 95% of the
+   unwatched SIMULATED goodput (the watchdog is an observer: journal emits
+   and monitor updates never touch sim time or the RNG, so this ratio
+   should be exactly 1.0 — the assertion catches any future hook that
+   perturbs the protocol).  Wall-clock cost of watching rides along as a
+   reported metric.
+
+4. **Strict agreement** — the windowed incremental checker's verdict must
+   match ``check_linearizable_strict`` on closed-loop companion histories,
+   both on clean histories (ok) and with an injected read corruption
+   (violation).
+
+Simulated quantities are µs; ``wall_*`` metrics are real wall clock.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core.overload import ArmorConfig
+from repro.core.shard import KeyRouter
+from repro.core.telemetry import Tracer
+from repro.core.types import splitmix64
+from repro.sim import (
+    CHAOS_MONITOR,
+    ChaosConfig,
+    OpenLoopWorkload,
+    YcsbWorkload,
+    check_linearizable_strict,
+    check_linearizable_windowed,
+    replay,
+    run_intent_leak_scenario,
+    run_openloop_scenario,
+    run_scenario,
+    run_watched_scenario,
+)
+
+from .common import emit
+
+ARMOR = ArmorConfig(queue_capacity=16)
+SLO_US = 200.0
+# Detection bound: a breach must land within this many journal events of
+# the injection (chaos._fire_seq stamps the injection; ``leak_intent`` is
+# bounded by the intent monitor's own event bound instead).
+DETECT_EVENTS = 5_000
+INTENT_BOUND = 300
+
+
+def _hot_slot_migration(n_items: int = 64):
+    """(slot, dst) of the zipf rank-0 key's slot, so migration traffic is
+    guaranteed: chaos skip_fence keeps the donor executing on a slot that
+    actually sees client writes mid-handover."""
+    r = KeyRouter(2)
+    hot_key = f"user{splitmix64(0) % (n_items * 8)}"
+    slot = r.slot_of(hot_key)
+    return slot, 1 - r.slot_map[slot]
+
+
+def _chaos_runs(smoke: bool):
+    """switch -> (kind, kwargs): the scenario that provokes it."""
+    dur = 3_000.0 if smoke else 5_000.0
+    dur_mig = 6_000.0 if smoke else 8_000.0
+    slot, dst = _hot_slot_migration()
+    return {
+        "early_ack": ("openloop", dict(duration_us=dur, seed=3)),
+        "force_commute": ("openloop", dict(duration_us=dur, seed=3)),
+        "rifl_rollback": ("openloop", dict(duration_us=dur, seed=3)),
+        "corrupt_value": ("openloop", dict(
+            duration_us=dur, seed=3,
+            workload=OpenLoopWorkload(rate_ops_per_us=0.5, seed=3,
+                                      read_fraction=0.3, n_items=64),
+        )),
+        "skip_fence": ("openloop", dict(
+            duration_us=dur_mig, seed=3, n_shards=2,
+            workload=OpenLoopWorkload(rate_ops_per_us=0.5, seed=3,
+                                      n_items=64),
+            migrate_slots=[(0.25 * dur_mig, slot, dst)],
+        )),
+        "skip_epoch_bump": ("openloop", dict(
+            duration_us=dur_mig, seed=3, fail_master_at={0: 2_000.0},
+            heartbeat=True,
+        )),
+        "leak_intent": ("intent", dict(intent_bound=INTENT_BOUND)),
+    }
+
+
+def chaos_matrix(smoke: bool = False) -> dict:
+    rows, derived = [], {}
+    for switch, (kind, kwargs) in _chaos_runs(smoke).items():
+        expect = CHAOS_MONITOR[switch]
+        chaos = ChaosConfig(**{switch: True})
+        if kind == "intent":
+            wd = run_intent_leak_scenario(chaos=chaos, **kwargs)
+        else:
+            _r, wd = run_watched_scenario(scenario=kind, chaos=chaos,
+                                          **kwargs)
+        fired = wd.fired_monitors()
+        assert fired == (expect,), (
+            f"{switch}: expected exactly ['{expect}'], got {list(fired)} "
+            f"({len(wd.breaches)} breaches)")
+        assert wd.blackbox is not None, f"{switch}: no black box sealed"
+        b0 = wd.breaches[0]
+        inj = wd.chaos._fire_seq.get(switch)
+        if switch == "leak_intent":
+            bound, base = INTENT_BOUND + 64, inj or 0
+        elif inj is not None:
+            bound, base = DETECT_EVENTS, inj
+        else:   # force_commute never latches: it lies on EVERY op
+            bound, base = DETECT_EVENTS, 0
+        detect = b0.seq - base
+        assert 0 <= detect <= bound, (
+            f"{switch}: breach at event #{b0.seq}, injected at #{base} — "
+            f"detection took {detect} events (bound {bound})")
+        rows.append({"switch": switch, "monitor": expect,
+                     "breaches": len(wd.breaches), "detect_events": detect,
+                     "journal_events": wd.events_seen})
+        derived[f"{switch}_detect_events"] = detect
+        if switch == "early_ack":
+            _wd2, identical = replay(wd)
+            assert identical, \
+                "early_ack replay did not reproduce the breach sequence"
+            derived["replay_identical"] = 1
+    emit(rows, "fig_watchdog: chaos switch -> monitor (detection latency "
+               "in journal events)")
+    return derived
+
+
+# ---------------------------------------------------------------------------
+# clean storms: zero breaches
+# ---------------------------------------------------------------------------
+def _overload_cfg(smoke: bool):
+    dur = 4_000.0 if smoke else 10_000.0
+    return dict(
+        workload=OpenLoopWorkload(
+            rate_ops_per_us=1.5, n_clients=200_000,
+            diurnal_amplitude=0.25, diurnal_period_us=dur,
+            flash_crowds=((0.45 * dur, 0.55 * dur, 3.0),), seed=11,
+        ),
+        duration_us=dur, f=1, armor=ARMOR, seed=11, slo_us=SLO_US,
+    )
+
+
+def _storm_configs(smoke: bool):
+    dur_c = 6_000.0 if smoke else 12_000.0
+    dur_m = 6_000.0 if smoke else 12_000.0
+    slot, dst = _hot_slot_migration()
+    return {
+        "overload": _overload_cfg(smoke),
+        "crash": dict(
+            workload=OpenLoopWorkload(rate_ops_per_us=0.2, n_clients=50_000,
+                                      seed=13),
+            duration_us=dur_c, f=1, armor=ARMOR, seed=13, slo_us=SLO_US,
+            heartbeat=True, fail_master_at={0: 0.4 * dur_c},
+        ),
+        "migration": dict(
+            workload=OpenLoopWorkload(rate_ops_per_us=0.4, n_clients=50_000,
+                                      seed=17),
+            duration_us=dur_m, f=1, n_shards=2, armor=ARMOR, seed=17,
+            migrate_slots=[(0.3 * dur_m, slot, dst),
+                           (0.3 * dur_m + 400.0, 0, 1),
+                           (0.3 * dur_m + 800.0, 2, 1)],
+            slo_us=SLO_US,
+        ),
+    }
+
+
+def clean_storms(smoke: bool = False) -> dict:
+    rows, derived = [], {}
+    for storm, cfg in _storm_configs(smoke).items():
+        tracer = Tracer(sample=1.0) if storm == "crash" else None
+        r, wd = run_watched_scenario(scenario="openloop", tracer=tracer,
+                                     **cfg)
+        assert wd.ok, (
+            f"clean {storm} storm raised {wd.fired_monitors()}: "
+            f"{wd.breaches[0].reason}")
+        if tracer is not None:
+            leaked = tracer.open_spans()
+            assert not leaked, (
+                f"clean {storm} storm leaked {len(leaked)} open spans "
+                f"(first: {leaked[0].name})")
+        st = wd.checker.stats()
+        rows.append({"storm": storm, "breaches": len(wd.breaches),
+                     "events": wd.events_seen,
+                     "ops_checked": st["ops_checked"],
+                     "saturated": int(st["saturated"]),
+                     "goodput_kops": r.goodput_ops_per_sec / 1e3})
+        derived[f"{storm}_events"] = wd.events_seen
+        derived[f"{storm}_ops_checked"] = st["ops_checked"]
+    emit(rows, "fig_watchdog: clean storms (zero breaches required)")
+    return derived
+
+
+# ---------------------------------------------------------------------------
+# overhead: watched vs unwatched overload ramp
+# ---------------------------------------------------------------------------
+def overhead(smoke: bool = False) -> dict:
+    # Fresh config per run: the workload object carries RNG state, so
+    # sharing one across runs would compare different arrival sequences.
+    t0 = time.time()
+    bare = run_openloop_scenario(**_overload_cfg(smoke))
+    wall_off = time.time() - t0
+    t0 = time.time()
+    watched, wd = run_watched_scenario(scenario="openloop",
+                                       **_overload_cfg(smoke))
+    wall_on = time.time() - t0
+    assert wd.ok, f"watched overload ramp breached: {wd.breaches[0].reason}"
+    ratio = watched.goodput_ops_per_sec / max(bare.goodput_ops_per_sec, 1e-9)
+    emit([{"mode": "off", "goodput_kops": bare.goodput_ops_per_sec / 1e3,
+           "wall_s": wall_off},
+          {"mode": "watched", "goodput_kops":
+           watched.goodput_ops_per_sec / 1e3, "wall_s": wall_on}],
+         "fig_watchdog: watchdog overhead on the fig_slo overload ramp")
+    assert ratio >= 0.95, (
+        f"watchdog cost goodput: {watched.goodput_ops_per_sec:.0f} vs "
+        f"{bare.goodput_ops_per_sec:.0f} ops/s (ratio {ratio:.3f})")
+    return {
+        "goodput_off_kops": bare.goodput_ops_per_sec / 1e3,
+        "goodput_watched_kops": watched.goodput_ops_per_sec / 1e3,
+        "goodput_ratio": ratio,
+        "wall_overhead_x": wall_on / max(wall_off, 1e-9),
+        "events_per_op": wd.events_seen / max(watched.completed, 1),
+    }
+
+
+# ---------------------------------------------------------------------------
+# windowed checker vs strict checker on companion histories
+# ---------------------------------------------------------------------------
+def agreement(smoke: bool = False) -> dict:
+    seeds = (0, 1) if smoke else (0, 1, 2, 3)
+    n_ops = 120 if smoke else 300
+    checked = 0
+    for seed in seeds:
+        r = run_scenario(mode="curp", f=1, n_clients=4, n_ops=n_ops,
+                         seed=seed,
+                         op_factory=YcsbWorkload(read_fraction=0.5,
+                                                 n_items=64, seed=seed))
+        hist = r.history
+        ok_s, _k = check_linearizable_strict(hist)
+        ok_w, _k = check_linearizable_windowed(hist)
+        assert ok_s == ok_w, f"seed {seed}: strict {ok_s} != windowed {ok_w}"
+        assert ok_s, f"seed {seed}: clean closed-loop history not linearizable"
+        checked += len(hist)
+        # Inject a read corruption: both checkers must reject it.
+        bad = [dict(h) for h in hist]
+        for h in bad:
+            if h["op"].op_type.name == "GET" and not h.get("failed") \
+                    and h.get("complete") is not None:
+                h["value"] = "~nobody-ever-wrote-this~"
+                break
+        else:
+            continue
+        ok_s, _ = check_linearizable_strict(bad)
+        ok_w, _ = check_linearizable_windowed(bad)
+        assert not ok_s and not ok_w, (
+            f"seed {seed}: corrupted history accepted "
+            f"(strict={ok_s}, windowed={ok_w})")
+    emit([{"seeds": len(seeds), "ops_checked": checked,
+           "verdicts_agree": 1}],
+         "fig_watchdog: windowed vs strict checker agreement")
+    return {"agreement_ops": checked}
+
+
+def main(smoke: bool = False) -> dict:
+    derived = {}
+    derived.update(chaos_matrix(smoke=smoke))
+    derived.update(clean_storms(smoke=smoke))
+    derived.update(overhead(smoke=smoke))
+    derived.update(agreement(smoke=smoke))
+    derived["monitors"] = len(CHAOS_MONITOR)
+    print("derived:", derived)
+    return derived
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short storms (assertions still run; not a "
+                         "measurement)")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

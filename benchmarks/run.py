@@ -12,6 +12,7 @@ import time
 
 BENCH_DIR = pathlib.Path(__file__).resolve().parent
 BENCH_JSON = BENCH_DIR.parent / "BENCH_curp.json"
+BENCH_HISTORY = BENCH_DIR.parent / "BENCH_history.jsonl"
 
 
 def _jsonable(v):
@@ -100,6 +101,24 @@ def write_bench_json(results, path: pathlib.Path = BENCH_JSON) -> None:
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     print(f"wrote {path} ({len(results)} updated, "
           f"{len(figures) - len(results)} preserved)")
+    # Append-only trajectory: one line per merge, so the perf history
+    # survives BENCH_curp.json's in-place updates (scripts/bench_gate.py
+    # gates on the latest deltas; the jsonl is the long view).
+    hist_line = {
+        "unix_time": payload["unix_time"],
+        "updated": sorted(ran),
+        "deltas": deltas,
+        "figures": {
+            name: {"us_per_call": dt,
+                   "derived": {k: _jsonable(v) for k, v in derived.items()
+                               if isinstance(_jsonable(v), (int, float))}}
+            for name, dt, derived in results
+        },
+    }
+    hist_path = path.parent / BENCH_HISTORY.name
+    with hist_path.open("a") as fh:
+        fh.write(json.dumps(hist_line, sort_keys=True) + "\n")
+    print(f"appended {hist_path.name} ({len(results)} figures)")
     fp = deltas.get("fig_fastpath", {}).get("proto_device_kops")
     if fp:
         print(f"proto_device_kops: {fp['prev']:.2f} -> {fp['now']:.2f}")
@@ -121,6 +140,7 @@ def main() -> None:
         fig_scaling,
         fig_slo,
         fig_txn,
+        fig_watchdog,
         roofline_table,
     )
 
@@ -139,6 +159,7 @@ def main() -> None:
         ("fig_crdt", fig_crdt.main),
         ("fig_slo", fig_slo.main),
         ("fig_obs", fig_obs.main),
+        ("fig_watchdog", fig_watchdog.main),
         ("roofline_table", roofline_table.main),
     ]
     results = []

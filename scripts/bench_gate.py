@@ -1,0 +1,143 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over BENCH_curp.json.
+
+``benchmarks/run.py`` records, for every metric that moved since the last
+run, a ``deltas`` entry ``{figure: {metric: {"prev": x, "now": y}}}``.
+This script turns those recorded moves into an exit code:
+
+  * each metric's DIRECTION is inferred from its name (``*_us``/``*_s``/
+    ``detect_events``/``aborts`` are lower-is-better; ``*kops``/``*ratio``/
+    ``*fraction``/``goodput*`` are higher-is-better; anything unrecognized
+    is report-only — a rename can't silently become a gate);
+  * a move in the bad direction beyond ``--tolerance`` (default 10%) is a
+    REGRESSION -> exit 1;
+  * beyond ``--hard`` (default 20%) it is a HARD regression -> exit 2.
+
+CI runs ``--ci``: soft regressions are printed but do not fail the job
+(benchmark boxes are noisy); hard regressions (>20%) still exit non-zero.
+
+Exit codes: 0 clean / improvements only, 1 soft regressions, 2 hard.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_JSON = ROOT / "BENCH_curp.json"
+
+# name-fragment -> direction ("up" = higher is better, "down" = lower).
+# Checked in order; first hit wins.  Per-metric overrides go first.
+_DIRECTION_RULES = [
+    ("wall_overhead", "down"),
+    ("detect_events", "down"),
+    ("us_per_call", "down"),
+    ("abort", "down"),
+    ("_us", "down"),
+    ("_ms", "down"),
+    ("wall_s", "down"),
+    ("dropped", "down"),
+    ("sheds", "down"),
+    ("kops", "up"),
+    ("ops_per_sec", "up"),
+    ("goodput", "up"),
+    ("throughput", "up"),
+    ("ratio", "up"),
+    ("fraction", "up"),
+    ("frac", "up"),
+    ("speedup", "up"),
+    ("ops_checked", "up"),
+]
+
+
+def direction(metric: str) -> str | None:
+    m = metric.lower()
+    for frag, d in _DIRECTION_RULES:
+        if frag in m:
+            return d
+    return None
+
+
+def classify(prev: float, now: float, metric: str,
+             tolerance: float, hard: float):
+    """-> (kind, rel) where kind is 'hard' | 'soft' | 'improved' | 'info'
+    and rel is the relative move in the bad direction (>= 0)."""
+    d = direction(metric)
+    if d is None or not isinstance(prev, (int, float)) \
+            or not isinstance(now, (int, float)) or prev == 0:
+        return "info", 0.0
+    rel = (now - prev) / abs(prev)
+    bad = -rel if d == "up" else rel
+    if bad <= 0:
+        return "improved", bad
+    if bad > hard:
+        return "hard", bad
+    if bad > tolerance:
+        return "soft", bad
+    return "ok", bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", type=pathlib.Path, default=BENCH_JSON,
+                    help="BENCH_curp.json path")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="soft regression threshold (relative; default 0.10)")
+    ap.add_argument("--hard", type=float, default=0.20,
+                    help="hard (always-blocking) threshold (default 0.20)")
+    ap.add_argument("--ci", action="store_true",
+                    help="CI mode: soft regressions report but do not fail; "
+                         "hard regressions still exit non-zero")
+    args = ap.parse_args(argv)
+
+    if not args.json.exists():
+        print(f"bench_gate: {args.json} missing — run benchmarks first")
+        return 0
+    try:
+        doc = json.loads(args.json.read_text())
+    except json.JSONDecodeError as e:
+        print(f"bench_gate: {args.json} unreadable: {e}")
+        return 2
+    deltas = doc.get("deltas", {})
+    if not deltas:
+        print("bench_gate: no recorded metric moves — nothing to gate")
+        return 0
+
+    rows = []
+    worst = {"hard": 0, "soft": 0, "improved": 0, "info": 0, "ok": 0}
+    for fig in sorted(deltas):
+        for metric in sorted(deltas[fig]):
+            mv = deltas[fig][metric]
+            kind, bad = classify(mv.get("prev"), mv.get("now"), metric,
+                                 args.tolerance, args.hard)
+            worst[kind] += 1
+            if kind != "ok":
+                rows.append((kind, fig, metric, mv.get("prev"),
+                             mv.get("now"), bad))
+
+    if rows:
+        print(f"{'verdict':9s} {'figure':24s} {'metric':32s} "
+              f"{'prev':>12s} {'now':>12s} {'move':>8s}")
+        for kind, fig, metric, prev, now, bad in sorted(
+                rows, key=lambda r: -r[5]):
+            tag = {"hard": "HARD-REG", "soft": "regress",
+                   "improved": "improved", "info": "info"}[kind]
+            mv = f"{bad * 100:+.1f}%" if kind != "info" else "?"
+            print(f"{tag:9s} {fig:24s} {metric:32s} "
+                  f"{prev!s:>12s} {now!s:>12s} {mv:>8s}")
+    print(f"bench_gate: {worst['hard']} hard, {worst['soft']} soft, "
+          f"{worst['improved']} improved, {worst['ok']} within tolerance, "
+          f"{worst['info']} report-only "
+          f"(tolerance {args.tolerance:.0%}, hard {args.hard:.0%})")
+
+    if worst["hard"]:
+        return 2
+    if worst["soft"] and not args.ci:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,8 +25,15 @@
 # strict-checked migration/crash storm companions; fig_obs keeps the flight
 # recorder honest — every storm exports a Perfetto-loadable trace with zero
 # leaked spans and resolvable parents, and registry/sampled-tracing
-# overhead on the device fast path stays bounded), not the measured
-# numbers.
+# overhead on the device fast path stays bounded; fig_watchdog proves the
+# protocol watchdog non-vacuous — every ChaosConfig switch trips exactly
+# its monitor within a bounded event count, clean overload/crash/migration
+# storms trip nothing, breach replay is bit-identical, the windowed
+# linearizability checker agrees with the strict one, and watched goodput
+# stays >=95% of unwatched on the overload ramp), not the measured
+# numbers.  bench_gate then reads the recorded BENCH_curp.json deltas:
+# soft perf regressions (>10%) report without failing, hard ones (>20%)
+# fail the run.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -39,6 +46,11 @@ python -m benchmarks.fig_migration --smoke
 python -m benchmarks.fig_crdt --smoke
 python -m benchmarks.fig_slo --smoke
 python -m benchmarks.fig_obs --smoke
+python -m benchmarks.fig_watchdog --smoke
+
+# Perf-regression gate over recorded BENCH_curp.json deltas: report-only
+# for soft moves, blocking for >20% regressions (--ci).
+python scripts/bench_gate.py --ci
 
 # Observability discipline: production layers report through the metrics
 # registry / tracer, never bare print() (benchmarks and scripts may print).

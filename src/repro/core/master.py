@@ -89,6 +89,11 @@ class Master:
             "txn_vote_no": 0, "migrated_in_keys": 0, "migrated_out_keys": 0,
             "migrated_rifl_gcd": 0,
         }
+        # Optional black-box journal (repro.core.journal.EventJournal): the
+        # watchdog attaches one; hooks below are attribute-load + None-check
+        # when absent, so they stay in the hot path permanently.
+        self.journal = None
+        self.journal_actor = f"m{master_id}"
         reg = get_registry()
         self._m_fast = reg.counter("master.fast")
         self._m_conflict_syncs = reg.counter("master.conflict_syncs")
@@ -130,6 +135,26 @@ class Master:
                     self._unsynced_keyhash.pop(kh, None)
             else:
                 per_cls[cls] = cnt
+
+    def _jexec(self, op: Op, verdict: str, checked: bool,
+               txn: Optional[Tuple[int, int]] = None) -> None:
+        """Journal one executed-and-logged op (watchdog sensor; see
+        repro.core.journal).  ``checked`` marks verdicts subject to the
+        fast⇒commutes invariant (MIGRATE_IN and txn decide legs reply FAST
+        by design without a window check, so the monitor must not judge
+        them); ``index`` is the op's 1-based log position, the unit the
+        sync events' ``through`` frontier is expressed in."""
+        jr = self.journal
+        if jr is None:
+            return
+        jr.emit(
+            "execute", actor=self.journal_actor, rpc=op.rpc_id,
+            mid=self.master_id, op=op.op_type.name, verdict=verdict,
+            checked=checked, index=len(self.log),
+            pairs=op.hash_classes(),
+            frontier=self.rifl.acked_frontier(op.rpc_id[0]),
+            epoch=self.epoch, txn=txn,
+        )
 
     def owns(self, op: Op) -> bool:
         if op.op_type is OpType.MIGRATE_IN:
@@ -202,6 +227,7 @@ class Master:
             self._log_txn(op, result)
             self.stats["migrated_in_keys"] += len(op.keys)
             self.want_sync = True
+            self._jexec(op, FAST, checked=False)
             return FAST, ExecResult(result, synced=False)
         # Keys under an undecided transaction intent cannot be executed:
         # syncing doesn't resolve the intent, so this is not the §3.2.3
@@ -239,10 +265,12 @@ class Master:
             self.stats["conflict_syncs"] += 1
             self._m_conflict_syncs.inc()
             self.want_sync = True
+            self._jexec(op, SYNCED, checked=True)
             return SYNCED, ExecResult(result, synced=True)
 
         self.stats["fast"] += 1
         self._m_fast.inc()
+        self._jexec(op, FAST, checked=True)
         if self.unsynced_count >= self.sync_batch:
             self.want_sync = True
         if hot:
@@ -323,8 +351,10 @@ class Master:
             if not commutes:
                 self.stats["conflict_syncs"] += 1
                 self.want_sync = True
+                self._jexec(op, SYNCED, checked=True, txn=spec.txn_id)
                 return SYNCED, ExecResult(result, synced=True)
             self.stats["fast"] += 1
+            self._jexec(op, FAST, checked=True, txn=spec.txn_id)
             if self.unsynced_count >= self.sync_batch:
                 self.want_sync = True
             return FAST, ExecResult(result, synced=False)
@@ -338,6 +368,7 @@ class Master:
         # Keep decision windows short: the intent's witness records stay
         # live until the prepare syncs, so nudge the batched sync along.
         self.want_sync = True
+        self._jexec(op, FAST, checked=False, txn=op.args[0].txn_id)
         return FAST, ExecResult(result, synced=False)
 
     # ----------------------------------------------------------------- reads
@@ -402,10 +433,15 @@ class Master:
         self.rifl.mark_synced_through(
             entry.op.rpc_id for entry in self.log[self.synced_index:through]
         )
+        count = through - self.synced_index
         self.synced_index = through
         self.sync_in_progress = None
         self.stats["batch_syncs"] += 1
         self._m_batch_syncs.inc()
+        jr = self.journal
+        if jr is not None:
+            jr.emit("sync", actor=self.journal_actor, mid=self.master_id,
+                    through=through, count=count)
         return tuple(gc_entries)
 
     def force_synced_through(self, through: int) -> None:
@@ -421,8 +457,13 @@ class Master:
         self.rifl.mark_synced_through(
             e.op.rpc_id for e in self.log[self.synced_index:through]
         )
+        count = through - self.synced_index
         self.synced_index = through
         self.want_sync = False
+        jr = self.journal
+        if jr is not None:
+            jr.emit("sync", actor=self.journal_actor, mid=self.master_id,
+                    through=through, count=count)
 
     def abort_sync(self) -> None:
         """A backup rejected (e.g. zombie epoch fence): drop the attempt."""

@@ -286,16 +286,24 @@ class SlotMigration:
         #    into the live masters and their backups.  In-flight records
         #    against the pre-handover witness lists are refused at the
         #    masters and the clients refetch.
+        jr = cluster.migration.journal
         for sid, group in ((self.src, donor), (self.dst, recv)):
             cfg = cluster.config.migration_fence(sid)
             group.master.epoch = cfg.epoch
             group.master.witness_list_version = cfg.witness_list_version
             for b in group.backups:
                 b.set_epoch(cfg.epoch)
+            if jr is not None:
+                jr.emit("fence", actor="migration", shard=sid,
+                        epoch=cfg.epoch, wlv=cfg.witness_list_version,
+                        reason="migration")
 
         # 3. Commit: flip the slot map; new ops route to (and record at) the
         #    receiver and its witnesses.
         router.assign(self.slots, self.dst)
+        if jr is not None:
+            jr.emit("handover", actor="migration", slots=self.slots,
+                    src=self.src, dst=self.dst)
         cluster.migration.finish(self)
 
 
@@ -313,6 +321,9 @@ class MigrationManager:
         self.session = ClientSession(client_id=cluster._node_id())
         self.active: Dict[int, SlotMigration] = {}   # moving slot -> handover
         self.history: List[MigrationReport] = []
+        # Optional black-box journal: freeze/fence/handover events feed the
+        # watchdog's single-owner-per-slot monitor.
+        self.journal = None
 
     # ------------------------------------------------------------ redirects
     def check_slots(self, slots) -> None:
@@ -352,6 +363,9 @@ class MigrationManager:
         for m in migs:
             for s in m.slots:
                 self.active[s] = m
+            if self.journal is not None:
+                self.journal.emit("freeze", actor="migration", slots=m.slots,
+                                  src=m.src, dst=m.dst)
         return migs
 
     def migrate(self, slots: Sequence[int], dst: int) -> List[MigrationReport]:

@@ -91,6 +91,13 @@ class RiflTable:
         self._expired_clients.add(client_id)
         return True
 
+    def acked_frontier(self, client_id: int) -> int:
+        """The applied ack frontier for one client: every seq below it has a
+        client-acknowledged completion (records there are deletable).  The
+        watchdog journals this per execution — the frontier regressing, or
+        an op executing below it, is an exactly-once violation."""
+        return self._acked_below.get(client_id, 0)
+
     # -- durability plumbing ---------------------------------------------------
     def unsynced_rpc_ids(self) -> Tuple[RpcId, ...]:
         out = []

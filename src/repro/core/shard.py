@@ -597,6 +597,21 @@ class ShardGroup:
             new_witness_ids=new_ids,
             config=self.config,
         )
+        # The black box survives the crash: the replacement master and
+        # witnesses inherit the journal AFTER replay (recovery internals are
+        # not client-visible protocol steps), and the epoch fence is
+        # journaled so the monotonicity monitor sees every bump.
+        jr = self.master.journal
+        new_master.journal = jr
+        new_master.journal_actor = f"m{new_master.master_id}"
+        for w_old, w_new in zip(self.witnesses, new_witnesses):
+            w_new.journal = getattr(w_old, "journal", None)
+            w_new.journal_actor = getattr(w_old, "journal_actor", "w?")
+        if jr is not None:
+            cfg = self.config.fetch(self.shard_id)
+            jr.emit("fence", actor=f"m{new_master.master_id}",
+                    shard=self.shard_id, epoch=cfg.epoch,
+                    wlv=cfg.witness_list_version, reason="recovery")
         self.master = new_master
         self.witnesses = new_witnesses
         self._witness_ids = new_ids
@@ -1138,6 +1153,7 @@ class ShardedCluster:
                     session.abandon(part.decide_rpc)
             raise
         coord = TxnCoordinator(self, session, wound_wait=wound_wait)
+        coord.journal = self.migration.journal
         window = self._record.next_window()
         try:
             out = self._with_txn_resolution(

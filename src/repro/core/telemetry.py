@@ -423,13 +423,23 @@ class Tracer:
     def open_spans(self) -> List[Span]:
         return list(self._open.values())
 
-    def close_open(self, ts: float, status: str = "unfinished") -> int:
-        """Close every still-open span (scenario teardown: ops in flight at
-        the horizon never complete — they must not leak unclosed spans)."""
+    def drain(self, ts: float, status: str = "unfinished") -> int:
+        """Close every still-open span and return how many there were.
+
+        Two callers, one discipline: scenario teardown (ops in flight at
+        the horizon never complete — they must not leak unclosed spans) and
+        the watchdog's black-box dump (a breach snapshots the trace MID-run,
+        so in-flight spans must be sealed at breach time for the slice to
+        be well-formed).  Idempotent: a teardown after a breach dump finds
+        nothing left open."""
         n = len(self._open)
         for sid in list(self._open):
             self.end(sid, ts, status)
         return n
+
+    def close_open(self, ts: float, status: str = "unfinished") -> int:
+        """Teardown-time alias of ``drain`` (kept for existing callers)."""
+        return self.drain(ts, status)
 
     # -- derived views -----------------------------------------------------
     def by_trace(self) -> Dict[Any, List[Span]]:

@@ -265,6 +265,9 @@ class TxnCoordinator:
         self.wait_retries = wait_retries
         self.wounds = 0          # holders resolved out of the way
         self.waits = 0           # bounded prepare retries spent waiting
+        # Optional black-box journal: intent begin/decide events bracket the
+        # 2PC window the watchdog's intent-leak monitor bounds.
+        self.journal = None
         reg = get_registry()
         self._m_leg = {
             "prepare_granted": reg.counter("txn.legs.prepare_granted"),
@@ -336,6 +339,10 @@ class TxnCoordinator:
 
     # -- the 2PC proper ------------------------------------------------------
     def _run_2pc(self, spec: TxnSpec, now: float, hook) -> TxnOutcome:
+        jr = self.journal
+        if jr is not None:
+            jr.emit("intent", actor="txn", phase="begin", txn=spec.txn_id,
+                    parts=len(spec.parts))
         votes: Dict[int, Any] = {}
         all_fast = True
         max_rtts = 1
@@ -353,6 +360,9 @@ class TxnCoordinator:
         from .client import decide_commit
 
         commit = decide_commit(votes.values(), len(spec.parts))
+        if jr is not None:
+            jr.emit("intent", actor="txn", phase="decide", txn=spec.txn_id,
+                    commit=commit)
         for idx, part in enumerate(spec.parts):
             hook(STAGE_DECIDE, part.shard_id, idx)
             op = commit_op(spec, part) if commit else abort_op(spec, part)

@@ -60,6 +60,10 @@ class Witness:
         self.mode = WitnessMode.ENDED
         self.master_id: Optional[int] = None
         self._slots: List[List[_Slot]] = []
+        # Optional black-box journal (repro.core.journal); the watchdog's
+        # durability monitor counts per-rpc witness accepts through this.
+        self.journal = None
+        self.journal_actor = "w?"
         self.stats = {"accepts": 0, "accepts_dup": 0, "rejects_conflict": 0,
                       "rejects_full": 0, "rejects_mode": 0,
                       "rejects_budget": 0, "gc_drops": 0}
@@ -111,7 +115,8 @@ class Witness:
         if self.mode is not WitnessMode.NORMAL or master_id != self.master_id:
             self.stats["rejects_mode"] += 1
             self._m_rej_mode.inc()
-            return RecordStatus.REJECTED
+            return self._jrecord(rpc_id, master_id, RecordStatus.REJECTED,
+                                 "mode")
 
         pairs = self._pairs(key_hashes, request)
         placements: List[Tuple[int, int, int, int]] = []  # (set, way, kh, cls)
@@ -145,7 +150,9 @@ class Witness:
                             self.stats["rejects_conflict"] += 1
                             self._m_rej_conflict.inc()
                             self._note_suspect(slot)
-                            return RecordStatus.REJECTED
+                            return self._jrecord(rpc_id, master_id,
+                                                 RecordStatus.REJECTED,
+                                                 "conflict")
                         if slot.op_class == cls:
                             stack += 1
                 elif free_way is None and (set_idx, w) not in claimed:
@@ -156,11 +163,13 @@ class Witness:
                 # budget: reject so the op takes the sync path instead of
                 # starving other classes out of this set.
                 self.stats["rejects_budget"] += 1
-                return RecordStatus.REJECTED
+                return self._jrecord(rpc_id, master_id, RecordStatus.REJECTED,
+                                     "budget")
             if free_way is None:
                 self.stats["rejects_full"] += 1
                 self._m_rej_full.inc()
-                return RecordStatus.REJECTED
+                return self._jrecord(rpc_id, master_id, RecordStatus.REJECTED,
+                                     "full")
             claimed.add((set_idx, free_way))
             placements.append((set_idx, free_way, kh, cls))
 
@@ -177,7 +186,17 @@ class Witness:
         if any_dup:
             self.stats["accepts_dup"] += 1
             self._m_dups.inc()
-        return RecordStatus.ACCEPTED
+        return self._jrecord(rpc_id, master_id, RecordStatus.ACCEPTED, "ok")
+
+    def _jrecord(self, rpc_id: RpcId, master_id: int,
+                 status: "RecordStatus", why: str) -> "RecordStatus":
+        jr = self.journal
+        if jr is not None:
+            jr.emit("record", actor=self.journal_actor, rpc=rpc_id,
+                    mid=master_id,
+                    status="accepted" if status is RecordStatus.ACCEPTED
+                    else "rejected", why=why)
+        return status
 
     @staticmethod
     def _pairs(key_hashes: Tuple[int, ...], request: Optional[Op]):
@@ -224,6 +243,10 @@ class Witness:
                     if slot.gc_age >= self.SUSPECT_AGE and slot.rpc_id not in seen:
                         seen.add(slot.rpc_id)
                         stale.append(slot.request)
+        jr = self.journal
+        if jr is not None:
+            jr.emit("gc", actor=self.journal_actor, mid=self.master_id,
+                    entries=len(entries), stale=len(stale))
         return GcResp(stale_requests=tuple(stale))
 
     def get_recovery_data(self, master_id: int) -> Tuple[Op, ...]:

@@ -26,9 +26,23 @@ from .curp_sim import (
     run_timed_txn_scenario,
     run_txn_crash_scenario,
 )
-from .linearizability import check_linearizable, check_linearizable_strict
+from .linearizability import (
+    WindowedChecker,
+    check_linearizable,
+    check_linearizable_strict,
+    check_linearizable_windowed,
+)
 from .network import Network, Node, Sim
 from .params import DEFAULT, SimParams
+from .watchdog import (
+    CHAOS_MONITOR,
+    Breach,
+    ChaosConfig,
+    Watchdog,
+    replay,
+    run_intent_leak_scenario,
+    run_watched_scenario,
+)
 from .workload import (
     BatchedWorkload,
     HotKeyWorkload,
@@ -50,6 +64,9 @@ __all__ = [
     "OpenLoopDriver", "OpenLoopResult", "SimCoordinator",
     "run_openloop_scenario",
     "check_linearizable", "check_linearizable_strict",
+    "check_linearizable_windowed", "WindowedChecker",
+    "CHAOS_MONITOR", "Breach", "ChaosConfig", "Watchdog",
+    "replay", "run_intent_leak_scenario", "run_watched_scenario",
     "Network", "Node", "Sim", "DEFAULT", "SimParams",
     "BatchedWorkload", "HotKeyWorkload", "OpenLoopWorkload",
     "ShardSkewedWorkload", "TxnWorkload",

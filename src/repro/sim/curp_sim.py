@@ -357,8 +357,32 @@ class SimMaster(Node):
         tr = self.sim.tracer
         if isinstance(msg, MUpdate):
             self.stats["updates"] += 1
+            wd = self.sim.watchdog
+            commutes = None
+            acks = msg.acks
+            if wd is not None and wd.chaos.any():
+                ch = wd.chaos
+                if ch.force_commute:
+                    # Chaos: lie to the master — every op "commutes", so a
+                    # genuinely conflicting op rides the 1-RTT fast path
+                    # inside an unsynced window that cannot replay (§3.2.2
+                    # violated; the commutativity monitor must notice).
+                    commutes = True
+                if ch.rifl_rollback and not ch.fired("rifl_rollback"):
+                    cid = msg.op.rpc_id[0]
+                    if self.core.rifl.acked_frontier(cid) > 0 \
+                            and self.core.rifl.check_duplicate(
+                                msg.op.rpc_id) is None:
+                        # Chaos: regress one client's applied ack frontier
+                        # (exactly-once bookkeeping corrupted).  This
+                        # message's piggybacked acks are dropped too —
+                        # apply_client_acks would otherwise restore the
+                        # frontier before the execute event journals it.
+                        ch.fire("rifl_rollback")
+                        self.core.rifl._acked_below[cid] = 0
+                        acks = ()
             verdict, result = self.core.handle_update(
-                msg.op, msg.wlv, msg.acks, now=self.sim.now
+                msg.op, msg.wlv, acks, now=self.sim.now, commutes=commutes
             )
             if tr is not None:
                 svc = self.service_time(msg)
@@ -387,6 +411,14 @@ class SimMaster(Node):
         elif isinstance(msg, MRead):
             self.stats["reads"] += 1
             verdict, result = self.core.handle_read(msg.op, now=self.sim.now)
+            wd = self.sim.watchdog
+            if wd is not None and wd.chaos.corrupt_value and result.ok \
+                    and result.value is not None \
+                    and not wd.chaos.fired("corrupt_value"):
+                # Chaos: return a value nobody ever wrote — only the
+                # windowed linearizability checker can catch this.
+                wd.chaos.fire("corrupt_value")
+                result = dataclasses.replace(result, value="~corrupted~")
             if tr is not None:
                 svc = self.service_time(msg)
                 tr.span(msg.op.rpc_id, "master_read", self.sim.now - svc,
@@ -602,6 +634,8 @@ class SimClient(Node):
             op=op, is_update=op.is_update,
             t_invoke=self.sim.now, t_attempt=self.sim.now,
         )
+        if self.sim.watchdog is not None:
+            self.sim.watchdog.op_invoked(op.rpc_id, self.sim.now)
         self._send_attempt()
 
     def _send_attempt(self) -> None:
@@ -734,6 +768,10 @@ class SimClient(Node):
 
     def _complete(self, pend: PendingOp, result, rtts: int) -> None:
         pend.done = True
+        if self.sim.watchdog is not None:
+            self.sim.watchdog.journal.emit(
+                "ack", actor=self.name, rpc=pend.op.rpc_id, rtts=rtts,
+            )
         lat = self.sim.now - pend.t_invoke
         self.latencies.append((lat, self.sim.now, pend.is_update))
         if rtts == 1:
@@ -748,14 +786,18 @@ class SimClient(Node):
         self._issue_next()
 
     def _record_history(self, pend: PendingOp, value, failed: bool = False) -> None:
-        self.history.append({
+        entry = {
             "client": self.session.client_id,
             "op": pend.op,
             "invoke": pend.t_invoke,
             "complete": None if failed else self.sim.now,
             "value": value,
             "failed": failed,
-        })
+        }
+        wd = self.sim.watchdog
+        if wd is not None:
+            (wd.op_failed if failed else wd.op_completed)(entry)
+        self.history.append(entry)
 
 
 # --------------------------------------------------------------------------
@@ -818,6 +860,9 @@ class SimCluster:
         self._recovering = False
         self._detect_source = "harness"
         self.master_nodes_retired: List[SimMaster] = []  # armor stats survive failover
+        # Shard index under an attached watchdog (ShardedSimCluster attach
+        # renumbers; single clusters are shard 0).
+        self.wd_shard = 0
 
     def _next_id(self) -> int:
         self._id += 1
@@ -912,7 +957,15 @@ class SimCluster:
 
             def after_replay():
                 # 3. bump epoch; sync to backups — 1 RTT.
-                self.epoch += 1
+                wd = self.sim.watchdog
+                if wd is not None and wd.chaos.skip_epoch_bump \
+                        and not wd.chaos.fired("skip_epoch_bump"):
+                    # Chaos: recover WITHOUT the §3.6 epoch fence — a zombie
+                    # pre-crash master would no longer be fenced at the
+                    # backups.  The fence below journals the stale epoch.
+                    wd.chaos.fire("skip_epoch_bump")
+                else:
+                    self.epoch += 1
                 new_master_core.epoch = self.epoch
                 for b in self.backup_cores:
                     b.set_epoch(self.epoch)
@@ -942,6 +995,24 @@ class SimCluster:
                     ]
                     for w in self.witness_cores:
                         w.start(self.master_id)
+                    # Black box survives failover: the new master/witness
+                    # cores inherit the journal AFTER replay (recovery
+                    # internals are not client-visible protocol steps), and
+                    # the epoch/WLV fence is journaled for the monotonicity
+                    # monitor (``mid`` lets the watchdog re-map shard
+                    # ownership to the new master id).
+                    jr = self.master_node.core.journal
+                    new_master_core.journal = jr
+                    new_master_core.journal_actor = \
+                        f"s{self.wd_shard}m{new_master_core.master_id}"
+                    for k, w in enumerate(self.witness_cores):
+                        w.journal = jr
+                        w.journal_actor = f"s{self.wd_shard}e{self.epoch}w{k}"
+                    if jr is not None:
+                        jr.emit("fence", actor=new_master_core.journal_actor,
+                                shard=self.wd_shard, epoch=self.epoch,
+                                wlv=self.wlv, mid=new_master_core.master_id,
+                                reason="recovery")
                     self.master_nodes_retired.append(self.master_node)
                     self.master_node = SimMaster(
                         self.sim, self.net, p, new_master_core, "master'",
@@ -1079,7 +1150,19 @@ class ShardedSimCluster:
             return
         donor = self.shards[src]
         recv = self.shards[dst]
-        self._frozen.add(slot)
+        wd = self.sim.watchdog
+        if wd is not None and wd.chaos.skip_fence \
+                and not wd.chaos.fired("skip_fence"):
+            # Chaos: start the handover WITHOUT freezing the slot — the
+            # donor keeps executing client writes mid-migration (two owners;
+            # the single-owner monitor must notice).  The freeze event below
+            # is still journaled: it marks where the fence SHOULD hold.
+            wd.chaos.fire("skip_fence")
+        else:
+            self._frozen.add(slot)
+        if wd is not None:
+            wd.journal.emit("freeze", actor="migration", slot=slot,
+                            src=src, dst=dst)
         t_freeze = self.sim.now
         n_resident = sum(
             1 for k in donor.master_node.core.store.keys()
@@ -1120,6 +1203,11 @@ class ShardedSimCluster:
             # would reject the still-frozen slot.
             self.router.assign([slot], dst)
             self._frozen.discard(slot)
+            if self.sim.watchdog is not None:
+                self.sim.watchdog.journal.emit(
+                    "handover", actor="migration", slot=slot,
+                    src=src, dst=dst,
+                )
             if kvs or records:
                 op = Op(
                     OpType.MIGRATE_IN,
@@ -1247,12 +1335,15 @@ def run_scenario(
     crash_at_us: Optional[float] = None,
     backup_service_us: Optional[float] = None,
     warmup_frac: float = 0.1,
+    watchdog: Any = None,
 ) -> ScenarioResult:
     p = params or DEFAULT
     sim = Sim(seed=seed)
     net = Network(sim, p)
     cluster = SimCluster(sim, net, p, mode, f,
                          backup_service_us=backup_service_us)
+    if watchdog is not None:
+        watchdog.attach(sim, cluster, f=f, mode=mode)
     _spawn_clients(sim, net, p, cluster, n_clients, n_ops, op_factory)
 
     if crash_at_us is not None:
@@ -1263,6 +1354,8 @@ def run_scenario(
     upd, rd, fast, slow, history, completed, thr = _collect_run(
         cluster, warmup_frac
     )
+    if watchdog is not None:
+        watchdog.finalize(sim.now)
     return ScenarioResult(
         mode=mode, f=f, n_clients=n_clients,
         update_latencies=upd, read_latencies=rd,
@@ -1483,6 +1576,8 @@ class OpenLoopDriver(Node):
         self.inflight[op.rpc_id] = st
         self.stats["issued"] += 1
         self.issue_times.append(self.sim.now)
+        if self.sim.watchdog is not None:
+            self.sim.watchdog.op_invoked(op.rpc_id, self.sim.now)
         if self.sim.tracer is not None:
             # Root span for the whole op lifetime; every server-side span
             # for this RIFL id parents to it.
@@ -1530,7 +1625,17 @@ class OpenLoopDriver(Node):
         master = target.master_node
         op = st.op
         t0 = self.sim.now
-        if st.is_update and self.cluster.mode == "curp":
+        wd = self.sim.watchdog
+        record_wits = st.is_update and self.cluster.mode == "curp"
+        if record_wits and wd is not None and wd.chaos.early_ack \
+                and not wd.chaos.fired("early_ack"):
+            # Chaos: skip the witness records entirely for one op — the
+            # client then acks on the master result alone (0 accepts), i.e.
+            # an ack without f-durability.  Only the durability monitor can
+            # tell this apart from a legitimate 1-RTT completion.
+            wd.chaos.fire("early_ack")
+            record_wits = False
+        if record_wits:
             wits = target.witness_nodes
             st.want_witnesses = len(wits)
             st.witness_statuses = []
@@ -1599,6 +1704,12 @@ class OpenLoopDriver(Node):
         st.done = True
         self.inflight.pop(st.op.rpc_id, None)
         self.stats["failed"] += 1
+        if self.sim.watchdog is not None:
+            self.sim.watchdog.op_failed({
+                "client": st.session.client_id, "op": st.op,
+                "invoke": st.t_invoke, "complete": None,
+                "value": None, "failed": True,
+            })
         if self.sim.tracer is not None:
             self.sim.tracer.end(st.span_id, self.sim.now, status="failed")
         # The client walks away: RIFL may reclaim the completion record (the
@@ -1686,6 +1797,15 @@ class OpenLoopDriver(Node):
     def _complete(self, st: _OlOp, result, rtts: int) -> None:
         st.done = True
         self.inflight.pop(st.op.rpc_id, None)
+        wd = self.sim.watchdog
+        if wd is not None:
+            wd.journal.emit("ack", actor=self.name, rpc=st.op.rpc_id,
+                            rtts=rtts)
+            wd.op_completed({
+                "client": st.session.client_id, "op": st.op,
+                "invoke": st.t_invoke, "complete": self.sim.now,
+                "value": result.value if result else None, "failed": False,
+            })
         if self.sim.tracer is not None:
             self.sim.tracer.end(st.span_id, self.sim.now,
                                 status=f"{rtts}rtt")
@@ -1765,6 +1885,7 @@ def run_openloop_scenario(
     warmup_frac: float = 0.2,
     record_history: bool = False,
     tracer: Any = None,
+    watchdog: Any = None,
 ) -> OpenLoopResult:
     """Drive an open-loop timed workload against a (possibly sharded,
     possibly armored) cluster and measure SLO survival.
@@ -1779,7 +1900,11 @@ def run_openloop_scenario(
     (sharded runs only; implies ownership enforcement).
     ``tracer`` (repro.core.telemetry.Tracer) attaches the flight recorder:
     every sim actor emits causal spans keyed by RIFL id, closed out at
-    scenario teardown so in-flight ops never leak open spans."""
+    scenario teardown so in-flight ops never leak open spans.
+    ``watchdog`` (repro.sim.watchdog.Watchdog) attaches the always-on
+    protocol watchdog: journal emit hooks light up on every actor and the
+    invariant monitors (incl. the windowed linearizability checker) run
+    inside the event loop; ``watchdog.finalize`` is called at teardown."""
     from .workload import OpenLoopWorkload
 
     p = params or DEFAULT
@@ -1810,6 +1935,9 @@ def run_openloop_scenario(
         cluster = SimCluster(sim, net, p, mode, f, armor=armor_cfg)
         shard_clusters = [cluster]
 
+    if watchdog is not None:
+        watchdog.attach(sim, cluster, f=f, mode=mode)
+
     coord = None
     if heartbeat:
         coord = SimCoordinator(sim, net, p)
@@ -1832,6 +1960,8 @@ def run_openloop_scenario(
     sim.run(until=duration_us + drain_us)
     if tracer is not None:
         tracer.close_open(sim.now)
+    if watchdog is not None:
+        watchdog.finalize(sim.now)
 
     # -- measure window: [warmup, end of arrivals] ---------------------------
     w_lo, w_hi = duration_us * warmup_frac, duration_us
@@ -2058,6 +2188,7 @@ def run_sharded_scenario(
     backup_service_us: Optional[float] = None,
     warmup_frac: float = 0.1,
     router: Optional[SlotRouter] = None,
+    watchdog: Any = None,
 ) -> ShardedScenarioResult:
     """Timed sharded run: clients route each op to its owning shard's master
     and witness group.  ``crash_shard_at=(t_us, shard)`` kills exactly that
@@ -2069,6 +2200,8 @@ def run_sharded_scenario(
     cluster = ShardedSimCluster(sim, net, p, mode, f, n_shards,
                                 backup_service_us=backup_service_us,
                                 router=router)
+    if watchdog is not None:
+        watchdog.attach(sim, cluster, f=f, mode=mode)
     _spawn_clients(sim, net, p, cluster, n_clients, n_ops, op_factory)
 
     if crash_shard_at is not None:
@@ -2080,6 +2213,8 @@ def run_sharded_scenario(
     upd, rd, fast, slow, history, completed, thr = _collect_run(
         cluster, warmup_frac
     )
+    if watchdog is not None:
+        watchdog.finalize(sim.now)
     return ShardedScenarioResult(
         mode=mode, f=f, n_shards=n_shards, n_clients=n_clients,
         update_latencies=upd, read_latencies=rd,

@@ -27,6 +27,10 @@ class Sim:
         # Optional flight recorder (repro.core.telemetry.Tracer).  Actors
         # null-check it, so a tracer can be attached/detached at any time.
         self.tracer = None
+        # Optional protocol watchdog (repro.sim.watchdog.Watchdog): same
+        # null-check idiom; actors emit journal events / checker feed points
+        # through it when attached.
+        self.watchdog = None
 
     def at(self, t: float, fn: Callable[[], None]) -> None:
         heapq.heappush(self._heap, (t, next(self._seq), fn))

@@ -1,0 +1,246 @@
+"""Protocol-watchdog tests: chaos exactness, clean-run silence, windowed/
+strict checker agreement, journal-ring dump well-formedness, and
+deterministic breach replay.
+
+The chaos matrix is the watchdog's own non-vacuousness proof: every
+``ChaosConfig`` switch must trip EXACTLY the monitor ``CHAOS_MONITOR``
+maps it to (a monitor nothing can trip is dead code wearing a pager), and
+clean storms — overload, crash failover, hot-slot migration, cross-shard
+2PC — must trip nothing at all.
+"""
+import json
+
+import pytest
+
+from repro.core.shard import KeyRouter
+from repro.core.telemetry import Tracer
+from repro.core.types import splitmix64
+from repro.sim import (
+    CHAOS_MONITOR,
+    ChaosConfig,
+    WindowedChecker,
+    YcsbWorkload,
+    OpenLoopWorkload,
+    check_linearizable_strict,
+    check_linearizable_windowed,
+    replay,
+    run_intent_leak_scenario,
+    run_scenario,
+    run_watched_scenario,
+)
+
+DUR = 3_000.0
+DUR_MIG = 6_000.0
+
+
+def _hot_slot(n_items=64):
+    r = KeyRouter(2)
+    slot = r.slot_of(f"user{splitmix64(0) % (n_items * 8)}")
+    return slot, 1 - r.slot_map[slot]
+
+
+def _run(switch=None, **over):
+    chaos = ChaosConfig(**{switch: True}) if switch else None
+    kw = dict(scenario="openloop", duration_us=DUR, seed=3)
+    kw.update(over)
+    return run_watched_scenario(chaos=chaos, **kw)
+
+
+def _mig_kwargs():
+    slot, dst = _hot_slot()
+    return dict(duration_us=DUR_MIG, n_shards=2,
+                workload=OpenLoopWorkload(rate_ops_per_us=0.5, seed=3,
+                                          n_items=64),
+                migrate_slots=[(0.25 * DUR_MIG, slot, dst)])
+
+
+# ---------------------------------------------------------------------------
+# chaos exactness: each switch trips exactly its monitor
+# ---------------------------------------------------------------------------
+class TestChaosExactness:
+    def _assert_exact(self, wd, switch):
+        expect = CHAOS_MONITOR[switch]
+        assert wd.fired_monitors() == (expect,), (
+            f"{switch}: fired {wd.fired_monitors()}, "
+            f"want exactly ({expect},)")
+        assert wd.blackbox is not None
+
+    def test_early_ack_trips_durability(self):
+        _r, wd = _run("early_ack")
+        self._assert_exact(wd, "early_ack")
+
+    def test_force_commute_trips_commutativity(self):
+        _r, wd = _run("force_commute")
+        self._assert_exact(wd, "force_commute")
+
+    def test_rifl_rollback_trips_rifl(self):
+        _r, wd = _run("rifl_rollback")
+        self._assert_exact(wd, "rifl_rollback")
+
+    def test_corrupt_value_trips_linearizability(self):
+        _r, wd = _run("corrupt_value", workload=OpenLoopWorkload(
+            rate_ops_per_us=0.5, seed=3, read_fraction=0.3, n_items=64))
+        self._assert_exact(wd, "corrupt_value")
+
+    def test_skip_fence_trips_single_owner(self):
+        _r, wd = _run("skip_fence", **_mig_kwargs())
+        self._assert_exact(wd, "skip_fence")
+
+    def test_skip_epoch_bump_trips_epoch(self):
+        _r, wd = _run("skip_epoch_bump", duration_us=DUR_MIG,
+                      fail_master_at={0: 2_000.0}, heartbeat=True)
+        self._assert_exact(wd, "skip_epoch_bump")
+
+    def test_leak_intent_trips_intent(self):
+        wd = run_intent_leak_scenario(
+            chaos=ChaosConfig(leak_intent=True), intent_bound=200)
+        assert wd.fired_monitors() == ("intent",)
+        assert "undecided" in wd.breaches[0].reason
+
+
+# ---------------------------------------------------------------------------
+# clean runs: zero breaches, even through storms
+# ---------------------------------------------------------------------------
+class TestCleanSilence:
+    def test_plain_openloop(self):
+        _r, wd = _run()
+        assert wd.ok, wd.breaches[0].reason
+
+    def test_read_mixed(self):
+        _r, wd = _run(workload=OpenLoopWorkload(
+            rate_ops_per_us=0.5, seed=3, read_fraction=0.3, n_items=64))
+        assert wd.ok, wd.breaches[0].reason
+
+    def test_migration_storm(self):
+        r, wd = _run(**_mig_kwargs())
+        assert wd.ok, wd.breaches[0].reason
+        # the migration actually happened and every handover window closed
+        assert r.migrations
+        assert not wd._moving
+
+    def test_crash_failover_storm(self):
+        _r, wd = _run(duration_us=DUR_MIG, fail_master_at={0: 2_000.0},
+                      heartbeat=True)
+        assert wd.ok, wd.breaches[0].reason
+        kinds = {e.kind for e in wd.journal.events()}
+        assert "fence" in kinds
+
+    def test_clean_2pc(self):
+        wd = run_intent_leak_scenario(chaos=None, intent_bound=200)
+        assert wd.ok, wd.breaches[0].reason
+
+    def test_tracer_drains_on_chaos_dump(self):
+        """The black box drains the flight recorder through the same
+        Tracer.drain teardown uses — no span leaks under chaos."""
+        tracer = Tracer(sample=1.0)
+        _r, wd = _run("early_ack", tracer=tracer)
+        assert wd.blackbox is not None
+        assert "trace_spans_sealed" in wd.blackbox
+        assert not tracer.open_spans()
+
+
+# ---------------------------------------------------------------------------
+# windowed checker agrees with the strict checker
+# ---------------------------------------------------------------------------
+class TestWindowedAgreement:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_clean_histories_agree(self, seed):
+        r = run_scenario(mode="curp", f=1, n_clients=4, n_ops=150,
+                         seed=seed,
+                         op_factory=YcsbWorkload(read_fraction=0.5,
+                                                 n_items=64, seed=seed))
+        ok_s, _ = check_linearizable_strict(r.history)
+        ok_w, _ = check_linearizable_windowed(r.history)
+        assert ok_s and ok_w
+
+    def test_corrupted_history_rejected_by_both(self):
+        r = run_scenario(mode="curp", f=1, n_clients=4, n_ops=150, seed=0,
+                         op_factory=YcsbWorkload(read_fraction=0.5,
+                                                 n_items=64, seed=0))
+        bad = [dict(h) for h in r.history]
+        for h in bad:
+            if h["op"].op_type.name == "GET" and not h.get("failed") \
+                    and h.get("complete") is not None:
+                h["value"] = "~nobody-ever-wrote-this~"
+                break
+        else:
+            pytest.skip("history had no completed reads")
+        ok_s, _ = check_linearizable_strict(bad)
+        ok_w, _ = check_linearizable_windowed(bad)
+        assert not ok_s and not ok_w
+
+    def test_saturation_is_explicit_not_wrong(self):
+        """An entangled pile-up saturates (honest coverage limit) instead
+        of false-alarming: 40 mutually-concurrent writes on one key."""
+        chk = WindowedChecker(flush_every=8, maybe_horizon=None)
+        from repro.core.types import Op, OpType
+        hist = []
+        for i in range(40):
+            op = Op(rpc_id=(1, i + 1), op_type=OpType.SET,
+                    keys=("k",), args=(f"v{i}",))
+            hist.append({"op": op, "invoke": 0.0, "complete": 100.0 + i,
+                         "value": "OK"})
+        for h in hist:
+            chk.invoke(h["op"].rpc_id, h["invoke"])
+        for h in hist:
+            chk.complete(h)
+        chk.finish()
+        assert chk.saturated
+        assert chk.violation is None
+
+
+# ---------------------------------------------------------------------------
+# journal ring overwrite keeps dumps well-formed
+# ---------------------------------------------------------------------------
+class TestBlackBox:
+    def test_ring_overwrite_dump_well_formed(self):
+        """Tiny journal capacity: the ring overwrites long before the
+        breach, and the dump must still be JSON-serializable, carry the
+        breach, and report the drop count."""
+        _r, wd = _run("skip_fence", watchdog_kwargs={"capacity": 64},
+                      **_mig_kwargs())
+        assert wd.fired_monitors() == ("single_owner",)
+        box = wd.blackbox
+        assert box["journal_dropped"] > 0
+        assert len(box["journal"]) <= 64
+        assert box["breach"]["monitor"] == "single_owner"
+        json.dumps(box)   # the whole box must be plain data
+        # ring events are the LAST n: seq strictly increasing, ending at
+        # the journal's head at dump time
+        seqs = [e["seq"] for e in box["journal"]]
+        assert seqs == sorted(seqs)
+
+    def test_report_shape(self):
+        _r, wd = _run()
+        rep = wd.report()
+        assert rep["ok"] is True
+        assert rep["monitors_fired"] == []
+        assert rep["checker"]["ops_checked"] > 0
+        json.dumps(rep)
+
+
+# ---------------------------------------------------------------------------
+# deterministic replay
+# ---------------------------------------------------------------------------
+class TestReplay:
+    def test_replay_reproduces_breach_bit_identically(self):
+        _r, wd = _run("early_ack")
+        wd2, identical = replay(wd)
+        assert identical
+        assert [b.key() for b in wd2.breaches] == \
+            [b.key() for b in wd.breaches]
+
+    def test_replay_with_stateful_workload(self):
+        """Workload objects carry RNG state; replay must re-run from the
+        pristine snapshot, not the mutated live object."""
+        _r, wd = _run("corrupt_value", workload=OpenLoopWorkload(
+            rate_ops_per_us=0.5, seed=3, read_fraction=0.3, n_items=64))
+        assert wd.breaches
+        _wd2, identical = replay(wd)
+        assert identical
+
+    def test_clean_replay_stays_clean(self):
+        _r, wd = _run()
+        assert wd.ok
+        wd2, identical = replay(wd)
+        assert identical and wd2.ok
